@@ -1,0 +1,107 @@
+"""LLM-specific autoscaling (paper §3.2.4): HPA vs KPA vs APA.
+
+Paper claims (vs native HPA): −11.5% latency, +11.4% token throughput,
+−33% scaling oscillations.  The HPA baseline additionally suffers the
+legacy custom-metrics propagation delay the AIBrix path removes (the
+paper's sliding-window-in-autoscaler optimization); KPA/APA read
+zero-delay sliding windows.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.autoscaler.policies import make_autoscaler
+from repro.core.sim import ClusterConfig, ServingCluster, SimEngineConfig
+from repro.core.sim.workloads import burst
+
+
+def _oscillations(history) -> int:
+    """Direction changes of the ACTUAL replica-count series (the
+    pod-churn the paper's oscillation metric captures)."""
+    actual = [a for _, a, _ in history]
+    changes, last_dir = 0, 0
+    for a, b in zip(actual, actual[1:]):
+        d = (b > a) - (b < a)
+        if d and last_dir and d != last_dir:
+            changes += 1
+        if d:
+            last_dir = d
+    return changes
+
+
+def _multi_burst(duration: float, seed: int):
+    """Three successive bursts — the oscillation-inducing load."""
+    third = duration / 3
+    out = []
+    for i in range(3):
+        w = burst(base_rps=2.0, burst_rps=26.0, duration_s=third,
+                  burst_at=third * 0.25, burst_len=third * 0.5,
+                  seed=seed + i)
+        for tr in w:
+            tr.arrival += i * third
+            tr.request.arrival_time = tr.arrival
+        out.extend(w)
+    return out
+
+
+def _run(name: str, quick: bool = False) -> dict:
+    cfg = get_config("deepseek-coder-7b")
+    delay = 30.0 if name == "hpa" else 0.0      # legacy metrics path
+    kw = {}
+    if name == "hpa":
+        # down-stabilization tuned to the workload period (as in
+        # production HPA configs for bursty services) — with the stale
+        # metrics path this is what makes native HPA chase the load
+        kw = dict(scale_down_stabilization_s=60.0)
+    elif name == "apa":
+        kw = dict(up_fluctuation=0.2, down_fluctuation=0.5)
+    asc = make_autoscaler(name, metric="concurrency", target=8.0,
+                          min_replicas=2, max_replicas=12, **kw)
+    ccfg = ClusterConfig(
+        routing_policy="least-request", device_type="a10", num_engines=2,
+        engine=SimEngineConfig(device_type="a10", max_batch=16),
+        autoscaler=asc, metric_delay_s=delay, autoscale_period_s=2.0)
+    cluster = ServingCluster(cfg, ccfg)
+    dur = 240.0 if quick else 540.0
+    wl = _multi_burst(dur, seed=2)
+    s = cluster.run(wl)
+    s["oscillations"] = _oscillations(cluster.scale_history)
+    s["peak_replicas"] = max((d for _, _, d in cluster.scale_history),
+                             default=0)
+    # token throughput measured over the offered-load window (reaction
+    # speed shows up as work completed in-window, not after drain)
+    window_end = wl[-1].arrival
+    done_in_window = [r for r in cluster.all_requests
+                      if 0 < r.finish_time <= window_end]
+    s["tokens_in_window"] = sum(r.total_tokens for r in done_in_window)
+    return s
+
+
+def main(quick: bool = False) -> list:
+    rows = []
+    cols = ("latency_avg_s", "latency_p99_s", "tokens_in_window",
+            "total_tput_tok_s", "oscillations", "peak_replicas",
+            "preemptions")
+    print("autoscaler," + ",".join(cols))
+    for name in ("hpa", "kpa", "apa"):
+        s = _run(name, quick)
+        rows.append((name, s))
+        print(name + "," + ",".join(f"{s.get(c, 0):.1f}" for c in cols))
+    base = dict(rows[0][1])
+    for name, s in rows[1:]:
+        # pod-seconds proxy: peak_replicas x run (overprovisioning);
+        # in our replication native HPA's stale-metric pathology shows
+        # up as monotone overshoot-and-hold rather than flapping — see
+        # EXPERIMENTS.md for the discussion vs the paper's -33% claim.
+        print(f"derived,{name}_vs_hpa"
+              f",latency_reduction_pct="
+              f"{100*(1-s['latency_avg_s']/max(base['latency_avg_s'],1e-9)):.1f}"
+              f",p99_latency_reduction_pct="
+              f"{100*(1-s['latency_p99_s']/max(base['latency_p99_s'],1e-9)):.1f}"
+              f",peak_replica_reduction_pct="
+              f"{100*(1-s['peak_replicas']/max(base['peak_replicas'],1)):.1f}"
+              f",oscillations={s['oscillations']}_vs_{base['oscillations']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

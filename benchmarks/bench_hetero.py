@@ -1,0 +1,91 @@
+"""SLO-driven heterogeneous serving (paper §3.2.7, Figures 7-8).
+
+(a) Fig 7 reproduction: cost-per-request by device x workload bucket —
+    small requests favor A10, large favor L20.
+(b) Fig 8 / experiment: ShareGPT + Text2SQL mixed demand; ILP-optimized
+    heterogeneous allocation vs homogeneous L20: paper reports ~10% cost
+    reduction at <= +20% latency within SLO.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.optimizer import (DEVICES, GPUOptimizer, LoadMonitor,
+                                  ProfileTable, WorkloadBucket,
+                                  homogeneous_cost)
+from repro.core.optimizer.gpu_optimizer import DemandBucket
+from repro.core.optimizer.profiles import PerfModel
+
+
+def fig7_cost_matrix():
+    cfg = get_config("deepseek-coder-7b")
+    table = ProfileTable(cfg, slo_ttft_s=5.0, slo_itl_s=0.25)
+    buckets = [WorkloadBucket(150, 50), WorkloadBucket(600, 100),
+               WorkloadBucket(2000, 300), WorkloadBucket(6000, 400)]
+    print("bucket(in,out)," + ",".join(d for d in ("a10", "l20", "v100")))
+    rows = []
+    for b in buckets:
+        costs = {d: table.cost_per_request(d, b) * 1e6
+                 for d in ("a10", "l20", "v100")}
+        rows.append((b.key, costs))
+        print(f"({b.in_len};{b.out_len})," +
+              ",".join(f"{costs[d]:.2f}" for d in ("a10", "l20", "v100")))
+    small_pref = min(rows[0][1], key=rows[0][1].get)
+    large_pref = min(rows[2][1], key=rows[2][1].get)
+    print(f"derived,small_bucket_prefers={small_pref}"
+          f",large_bucket_prefers={large_pref}")
+    return rows
+
+
+def slo_allocation(quick: bool = False):
+    cfg = get_config("deepseek-coder-7b")
+    table = ProfileTable(cfg, slo_ttft_s=5.0, slo_itl_s=0.25)
+    # ShareGPT-like (small) + Text2SQL-like (large prompt) mixed demand
+    demand = [
+        DemandBucket(WorkloadBucket(150, 60), 14.0),    # chat small
+        DemandBucket(WorkloadBucket(450, 150), 6.0),    # chat medium
+        DemandBucket(WorkloadBucket(1800, 40), 4.0),    # text2sql
+        DemandBucket(WorkloadBucket(4000, 80), 1.0),    # long analysis
+    ]
+    opt = GPUOptimizer(table, ("a10", "l20", "v100"),
+                       availability={"v100": 4})
+    alloc = opt.optimize(demand)
+    n_l20, cost_l20 = homogeneous_cost(table, demand, "l20")
+    n_a10, cost_a10 = homogeneous_cost(table, demand, "a10")
+    # latency proxy under each allocation: weighted request time at the
+    # batch level each device uses for the bucket
+    def latency(dev_mix):
+        tot_rps = sum(d.rps for d in demand)
+        t = 0.0
+        for d in demand:
+            if isinstance(dev_mix, str):
+                dev = dev_mix
+            else:
+                cands = [g for (bk, g), v in alloc.assignment.items()
+                         if bk == d.bucket.key]
+                dev = cands[0] if cands else "l20"
+            pm = PerfModel(cfg, DEVICES[dev])
+            t += d.rps / tot_rps * pm.request_time(d.bucket, batch=8)
+        return t
+
+    lat_het = latency(alloc.assignment)
+    lat_hom = latency("l20")
+    print("allocation,counts,cost_per_hour,latency_proxy_s")
+    print(f"heterogeneous,{alloc.counts},{alloc.cost_per_hour:.2f}"
+          f",{lat_het:.2f}")
+    print(f"homogeneous-l20,{{'l20': {n_l20}}},{cost_l20:.2f},{lat_hom:.2f}")
+    print(f"homogeneous-a10,{{'a10': {n_a10}}},{cost_a10:.2f},-")
+    saving = 100 * (1 - alloc.cost_per_hour / cost_l20)
+    lat_delta = 100 * (lat_het / lat_hom - 1)
+    print(f"derived,cost_reduction_vs_l20_pct={saving:.1f}"
+          f",latency_delta_pct={lat_delta:.1f}")
+    return alloc, (cost_l20, cost_a10)
+
+
+def main(quick: bool = False):
+    rows = fig7_cost_matrix()
+    alloc = slo_allocation(quick)
+    return rows, alloc
+
+
+if __name__ == "__main__":
+    main()

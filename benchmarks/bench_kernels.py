@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle, us/call.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+absolute numbers are NOT TPU times — the benchmark validates shape
+scaling and records the oracle-relative cost of the kernel path.  On a
+real TPU the same harness times the compiled kernels.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(quick: bool = False):
+    rng = np.random.default_rng(0)
+    print("name,us_per_call,derived")
+    rows = []
+    cases = [(4, 8, 4, 64, 16, 8)] if quick else \
+        [(4, 8, 4, 64, 16, 8), (8, 16, 8, 128, 16, 16)]
+    for (b, h, hkv, d, page, nb) in cases:
+        p = b * nb + 1
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(p, page, hkv, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(p, page, hkv, d)), jnp.float32)
+        bt = jnp.asarray(rng.integers(0, p, (b, nb)), jnp.int32)
+        ln = jnp.full((b,), nb * page, jnp.int32)
+        t_k = _time(lambda: ops.paged_attention(q, kp, vp, bt, ln))
+        t_r = _time(lambda: ops.paged_attention(q, kp, vp, bt, ln,
+                                                impl="ref"))
+        err = float(jnp.max(jnp.abs(
+            ops.paged_attention(q, kp, vp, bt, ln)
+            - ops.paged_attention(q, kp, vp, bt, ln, impl="ref"))))
+        name = f"paged_attn_b{b}h{h}d{d}"
+        rows.append((name, t_k))
+        print(f"{name},{t_k:.0f},ref_us={t_r:.0f};max_err={err:.1e}")
+    for (b, s, h, hkv, d) in ([(2, 256, 8, 4, 64)] if quick else
+                              [(2, 256, 8, 4, 64), (1, 1024, 8, 2, 128)]):
+        q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        ln = jnp.full((b,), s, jnp.int32)
+        t_k = _time(lambda: ops.flash_attention(q, k, v, ln))
+        t_r = _time(lambda: ops.flash_attention(q, k, v, ln, impl="ref"))
+        err = float(jnp.max(jnp.abs(
+            ops.flash_attention(q, k, v, ln)
+            - ops.flash_attention(q, k, v, ln, impl="ref"))))
+        name = f"flash_prefill_b{b}s{s}h{h}"
+        rows.append((name, t_k))
+        print(f"{name},{t_k:.0f},ref_us={t_r:.0f};max_err={err:.1e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

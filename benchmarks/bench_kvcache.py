@@ -1,0 +1,82 @@
+"""Table 1 reproduction: distributed KV cache vs vLLM configurations.
+
+Paper setup: Bird-SQL (Text2SQL) on 4x NVIDIA A10, deepseek-coder-7b.
+Six rows: {default, chunked-prefill, prefix-caching} x {engine-only,
++ AIBrix distributed KV cache}.  The paper's headline: pool + prefix
+caching beats engine prefix caching alone by ~50% peak throughput,
+~-60/-70% avg/P99 TTFT, ~-30/-70% avg/P99 ITL.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.sim import ClusterConfig, ServingCluster, SimEngineConfig
+from repro.core.sim.workloads import birdsql_like
+
+
+def _run(prefix: bool, chunked: bool, pool: bool, *,
+         n_requests: int = 500, rate: float = 30.0, seed: int = 0) -> dict:
+    cfg = get_config("deepseek-coder-7b")
+    ecfg = SimEngineConfig(device_type="a10", page_size=64, max_batch=24,
+                           chunk_size=512, prefix_caching=prefix,
+                           chunked_prefill=chunked)
+    ccfg = ClusterConfig(routing_policy="least-request", device_type="a10",
+                         num_engines=4, engine=ecfg, use_kv_pool=pool,
+                         kv_pool_gb=64.0, kv_pool_policy="s3fifo")
+    cluster = ServingCluster(cfg, ccfg)
+    wl = birdsql_like(n_requests, rate_rps=rate, seed=seed)
+    return cluster.run(wl)
+
+
+ROWS = [
+    ("vllm-default", dict(prefix=False, chunked=False, pool=False)),
+    ("aibrix-kvpool+default", dict(prefix=False, chunked=False, pool=True)),
+    ("vllm-chunked-prefill", dict(prefix=False, chunked=True, pool=False)),
+    ("aibrix-kvpool+chunked", dict(prefix=False, chunked=True, pool=True)),
+    ("vllm-prefix-caching", dict(prefix=True, chunked=True, pool=False)),
+    ("aibrix-kvpool+prefix", dict(prefix=True, chunked=True, pool=True)),
+]
+
+COLS = ("prompt_tokens", "decode_tokens", "total_tput_tok_s",
+        "decode_tput_tok_s", "ttft_avg_ms", "ttft_p99_ms", "itl_avg_ms",
+        "itl_p99_ms", "completion_time_s")
+
+
+def run(quick: bool = False) -> list:
+    n = 150 if quick else 500
+    out = []
+    for name, kw in ROWS:
+        s = _run(n_requests=n, **kw)
+        out.append((name, {c: s.get(c, 0) for c in COLS},
+                    s.get("remote_hit_tokens", 0)))
+    return out
+
+
+def main(quick: bool = False) -> list:
+    rows = run(quick)
+    hdr = ["method"] + list(COLS)
+    print(",".join(hdr))
+    for name, cols, _ in rows:
+        print(name + "," + ",".join(f"{cols[c]:.1f}" for c in COLS))
+    # derived: improvements of pool+prefix over engine prefix caching
+    base = dict(rows[4][1])
+    best = dict(rows[5][1])
+    derived = {
+        "throughput_gain_pct":
+            100 * (best["total_tput_tok_s"] / max(base["total_tput_tok_s"],
+                                                  1e-9) - 1),
+        "ttft_avg_reduction_pct":
+            100 * (1 - best["ttft_avg_ms"] / max(base["ttft_avg_ms"], 1e-9)),
+        "ttft_p99_reduction_pct":
+            100 * (1 - best["ttft_p99_ms"] / max(base["ttft_p99_ms"], 1e-9)),
+        "itl_avg_reduction_pct":
+            100 * (1 - best["itl_avg_ms"] / max(base["itl_avg_ms"], 1e-9)),
+        "completion_reduction_pct":
+            100 * (1 - best["completion_time_s"]
+                   / max(base["completion_time_s"], 1e-9)),
+    }
+    print("derived," + ",".join(f"{k}={v:.1f}" for k, v in derived.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""High-density LoRA management (paper §3.2.1, Figure 2).
+
+Long-tail adapter fleet: N adapters with zipf demand.  Compare
+(a) dedicated-pod-per-adapter (the rigid baseline the paper calls out),
+(b) AIBrix high-density placement (many adapters per pod, replicas by
+heat) — pods needed, cost, and LoRA-affinity routing hit rate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lora.manager import AdapterSpec, LoRAController
+from repro.core.optimizer.profiles import DEVICES
+
+
+def main(quick: bool = False):
+    n_adapters = 12 if quick else 32
+    pods = 4 if quick else 8
+    slots_per_pod = 8
+    rng = np.random.default_rng(0)
+    heat = 1.0 / (np.arange(n_adapters) + 1.0)       # zipf demand
+    heat = heat / heat.sum() * 20.0                  # total 20 rps
+
+    ctrl = LoRAController(min_replicas=1, max_replicas=3)
+    ctrl.register(AdapterSpec("base-sft", "llama-7b", rank=16))
+    for i in range(n_adapters):
+        ctrl.register(AdapterSpec(
+            f"adapter-{i}", "llama-7b", rank=8,
+            parent="base-sft" if i % 4 == 0 else None,
+            requests_per_s=float(heat[i])))
+    for p in range(pods):
+        ctrl.add_pod(f"pod-{p}", capacity=slots_per_pod)
+    actions = ctrl.sync({})
+    plan = {p: sorted(s.loaded) for p, s in ctrl.pods.items()}
+
+    placed = sum(len(v) for v in plan.values())
+    covered = len({a for v in plan.values() for a in v})
+    # dedicated baseline: one pod per adapter (+1 for base)
+    dedicated_pods = n_adapters + 1
+    density_pods = pods
+    cost = DEVICES["a10"].cost_per_hour
+    print("scheme,pods,adapters_covered,cost_per_hour")
+    print(f"dedicated-pod-per-adapter,{dedicated_pods},{n_adapters + 1}"
+          f",{dedicated_pods*cost:.2f}")
+    print(f"aibrix-high-density,{density_pods},{covered}"
+          f",{density_pods*cost:.2f}")
+    hot_replicas = len(ctrl.endpoints("adapter-0"))
+    cold_replicas = len(ctrl.endpoints(f"adapter-{n_adapters-1}"))
+    print(f"derived,cost_reduction_pct="
+          f"{100*(1-density_pods/dedicated_pods):.1f}"
+          f",hot_adapter_replicas={hot_replicas}"
+          f",cold_adapter_replicas={cold_replicas}"
+          f",loads={ctrl.stats['loads']}")
+    assert covered == n_adapters + 1, "density placement must cover all"
+    return plan
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Prefill/decode disaggregation over the distributed KV pool.
+
+The paper names this as what the pool enables ("future prefill/decode
+disaggregation remote pool", citing DistServe).  We implement it and
+measure the DistServe claim structure: colocated engines interleave
+prefill chunks with decode iterations, so long prefills stall decoding
+(ITL tail); disaggregating prefill and decode pods — with KV handed
+over through the AIBrix pool — smooths ITL at the cost of a KV
+transfer on the handoff path.
+
+Setup: 4x A10 total.  colocated = 4 mixed engines; disaggregated =
+2 prefill + 2 decode engines, handoff via pool.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.sim.events import EventLoop
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.core.sim.workloads import sharegpt_like, summarize
+
+
+def _run(disagg: bool, quick: bool = False) -> dict:
+    cfg = get_config("deepseek-coder-7b")
+    loop = EventLoop()
+    pool = DistributedKVPool(capacity_bytes=96 << 30, policy="s3fifo",
+                             metadata_lag=0.002, clock=loop.clock)
+    engines = []
+    if disagg:
+        # 1P:3D — the workload is decode-residency-bound (150-token
+        # outputs over ~1.9k contexts), so disaggregation rebalances
+        # exactly as DistServe prescribes (role counts set by load)
+        roles = ["prefill", "decode", "decode", "decode"]
+    else:
+        roles = ["mixed"] * 4
+    for i, role in enumerate(roles):
+        sc = SimEngineConfig(device_type="a10", max_batch=24,
+                             chunk_size=512, role=role)
+        eng = SimEngine(cfg, loop, sc, kv_pool=pool,
+                        engine_id=f"{role}-{i}", node=f"node-{i}")
+        engines.append(eng)
+    prefillers = [e for e in engines if e.sc.role in ("prefill", "mixed")]
+    decoders = [e for e in engines if e.sc.role in ("decode", "mixed")]
+
+    def handoff(req):
+        tgt = min(decoders, key=lambda e: len(e.running) + len(e.waiting))
+        tgt.submit(req)
+
+    for e in engines:
+        e.handoff = handoff
+
+    # under-capacity regime (DistServe's comparison point): 2 prefill
+    # engines sustain ~5k tok/s; offer ~4.3k so both modes keep up and
+    # the metric is interference, not queueing
+    n = 150 if quick else 400
+    wl = sharegpt_like(rate_rps=2.4, duration_s=n / 2.4, seed=3,
+                       mean_prompt=1800, mean_output=150)
+    rr = 0
+    for tr in wl:
+        def dispatch(tr=tr):
+            nonlocal rr
+            tgt = min(prefillers,
+                      key=lambda e: len(e.waiting) + (e.prefilling is not None))
+            tgt.submit(tr.request)
+        loop.schedule(tr.arrival, dispatch)
+    end = wl[-1].arrival + 600.0
+    loop.run(until=end,
+             stop_when=lambda: loop.clock.now > wl[-1].arrival
+             and not any(e.has_work for e in engines))
+    return summarize([tr.request for tr in wl])
+
+
+def main(quick: bool = False):
+    cols = ("ttft_avg_ms", "ttft_p99_ms", "itl_avg_ms", "itl_p99_ms",
+            "total_tput_tok_s", "finished")
+    print("mode," + ",".join(cols))
+    rows = []
+    for name, disagg in (("colocated", False), ("pd-disaggregated", True)):
+        s = _run(disagg, quick)
+        rows.append((name, s))
+        print(name + "," + ",".join(f"{s.get(c, 0):.1f}" for c in cols))
+    co, pd = rows[0][1], rows[1][1]
+    print(f"derived,itl_p99_reduction_pct="
+          f"{100*(1-pd['itl_p99_ms']/max(co['itl_p99_ms'],1e-9)):.1f}"
+          f",itl_avg_reduction_pct="
+          f"{100*(1-pd['itl_avg_ms']/max(co['itl_avg_ms'],1e-9)):.1f}"
+          f",ttft_delta_pct="
+          f"{100*(pd['ttft_avg_ms']/max(co['ttft_avg_ms'],1e-9)-1):.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Routing strategy comparison (paper §3.2.2).
+
+The paper: picking a fitting routing strategy cuts mean latency 19.2%
+and P99 latency 79% vs naive routing.  We run the same fleet + workload
+under each policy.  The workload mixes multi-turn (prefix-heavy) chat
+with heavy-tailed prompt lengths and one degraded engine — the regime
+where random routing hotspots and latency-blind policies pay.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.diagnostics.tools import FaultKind
+from repro.core.sim import ClusterConfig, ServingCluster, SimEngineConfig
+from repro.core.sim.workloads import multiturn_chat
+
+POLICIES = ("random", "throughput", "least-request", "least-kv-cache",
+            "least-latency", "prefix-cache-aware", "prefix-load")
+
+
+def _run(policy: str, quick: bool = False) -> dict:
+    cfg = get_config("deepseek-coder-7b")
+    ccfg = ClusterConfig(
+        routing_policy=policy, device_type="a10", num_engines=4,
+        engine=SimEngineConfig(device_type="a10", max_batch=16,
+                               chunk_size=512))
+    cluster = ServingCluster(cfg, ccfg)
+    # one engine silently degraded: latency-aware policies must notice
+    cluster.injector.inject("engine-3", FaultKind.SILENT_DEGRADATION,
+                            now=0.0, severity=1.0)
+    # prefill-heavy multi-turn traffic (long shared contexts, short
+    # outputs): the regime in which the paper's gateway claims arise
+    n_conv = 24 if quick else 60
+    wl = multiturn_chat(n_conversations=n_conv, turns=6, rate_rps=14.0,
+                        seed=1, sys_prompt=900, turn_tokens=80,
+                        output_tokens=24)
+    return cluster.run(wl)
+
+
+def main(quick: bool = False) -> list:
+    rows = []
+    cols = ("latency_avg_s", "latency_p99_s", "ttft_avg_ms", "ttft_p99_ms",
+            "total_tput_tok_s", "prefix_hit_tokens")
+    print("policy," + ",".join(cols))
+    for pol in POLICIES:
+        s = _run(pol, quick)
+        rows.append((pol, s))
+        print(pol + "," + ",".join(f"{s.get(c, 0):.1f}" for c in cols))
+    base = dict(rows[0][1])           # random
+    best = min(rows[1:], key=lambda r: r[1]["latency_avg_s"])
+    print(f"derived,best_policy={best[0]}"
+          f",mean_latency_reduction_pct="
+          f"{100*(1-best[1]['latency_avg_s']/base['latency_avg_s']):.1f}"
+          f",p99_latency_reduction_pct="
+          f"{100*(1-best[1]['latency_p99_s']/base['latency_p99_s']):.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

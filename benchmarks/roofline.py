@@ -1,0 +1,69 @@
+"""§Roofline table builder: reads the dry-run JSON records and prints
+the per-(arch x shape x mesh) three-term roofline with dominant
+bottleneck, MODEL_FLOPS ratio, and HBM fit — EXPERIMENTS.md §Roofline
+is generated from this output.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_DIRS = ("benchmarks/results/dryrun_optimized",
+                "benchmarks/results/dryrun")
+
+
+def load_records(result_dir: str = "") -> List[Dict]:
+    dirs = [result_dir] if result_dir else [d for d in DEFAULT_DIRS
+                                            if os.path.isdir(d)]
+    recs = []
+    for d in dirs[:1]:
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            if f.endswith("_absorb.json"):
+                continue          # A/B variant artifact, not a baseline row
+            with open(f) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def main(result_dir: str = "", quick: bool = False):
+    recs = load_records(result_dir)
+    if not recs:
+        print("no dry-run records found — run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    print("case,status,chips,GB_per_dev,fits_16G,compute_s,memory_s,"
+          "collective_s,dominant,useful_flops_ratio,coll_MB_per_dev")
+    rows = []
+    for r in sorted(recs, key=lambda x: x["case"]):
+        if r["status"] == "skipped":
+            print(f"{r['case']},skipped,,,,,,,,,")
+            continue
+        if r["status"] == "error":
+            print(f"{r['case']},ERROR,,,,,,,,,")
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        coll = r["collectives_per_device_bytes"].get("total", 0)
+        rows.append(r)
+        print(f"{r['case']},ok,{r['chips']}"
+              f",{m['per_device_bytes']/1e9:.2f}"
+              f",{int(m['fits_16g_hbm'])}"
+              f",{t['compute_s']:.4f},{t['memory_s']:.4f}"
+              f",{t['collective_s']:.4f},{t['dominant']}"
+              f",{t['useful_flops_ratio']:.3f},{coll/1e6:.1f}")
+    # summary: dominant-term census + worst fits
+    census: Dict[str, int] = {}
+    for r in rows:
+        census[r["roofline"]["dominant"]] = \
+            census.get(r["roofline"]["dominant"], 0) + 1
+    n_fit = sum(int(r["memory"]["fits_16g_hbm"]) for r in rows)
+    print(f"derived,dominant_census={census}"
+          f",fits_hbm={n_fit}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "")

@@ -1,0 +1,60 @@
+"""Benchmark driver: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+
+Order mirrors the paper: Table 1 (distributed KV cache), routing
+(§3.2.2), autoscaling (§3.2.4), heterogeneous serving (§3.2.7/Fig 7-8),
+cold start (§3.2.3), LoRA density (§3.2.1), kernel microbench, and the
+roofline table from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_autoscaling, bench_coldstart, bench_hetero,
+                        bench_kernels, bench_kvcache, bench_lora,
+                        bench_pd_disagg, bench_routing, roofline)
+
+SUITES = [
+    ("table1_distributed_kvcache", bench_kvcache.main),
+    ("routing_strategies", bench_routing.main),
+    ("llm_autoscaling", bench_autoscaling.main),
+    ("heterogeneous_slo_serving", bench_hetero.main),
+    ("coldstart_streaming_loader", bench_coldstart.main),
+    ("high_density_lora", bench_lora.main),
+    ("pd_disaggregation_via_pool", bench_pd_disagg.main),
+    ("pallas_kernels", bench_kernels.main),
+    ("roofline_from_dryrun", lambda quick=False: roofline.main("", quick)),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI mode)")
+    ap.add_argument("--only", default="",
+                    help="substring filter on suite name")
+    args = ap.parse_args()
+    failures = []
+    for name, fn in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} " + "=" * max(8, 60 - len(name)))
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"----- {name} done in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        sys.exit(1)
+    print("\nall benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Long-context decoding with a constant-size state (the long_500k
+story at CPU scale): an xLSTM-family model decodes with a context far
+beyond what its (constant-size!) state stores explicitly, served
+through the SlotEngine.  The full-size analogue — 524,288-token decode
+sharded across pooled pod HBM — is exercised by
+``python -m repro.launch.dryrun --arch xlstm-1.3b --shape long_500k``.
+
+    PYTHONPATH=src python examples/long_context_ssm.py
+"""
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.engine.request import Request, SamplingParams
+from repro.engine.slot_engine import SlotEngine, SlotEngineConfig
+from repro.models import model as M
+
+
+def main():
+    cfg = get_reduced_config("xlstm-1.3b")
+    print(f"model: {cfg.name}  (mLSTM/sLSTM pattern "
+          f"{cfg.layer_runs}, no KV cache)")
+
+    # state size is CONSTANT in sequence length — measure it
+    caches = M.init_cache(cfg, 1, 8)
+    import jax
+    state_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(caches))
+    print(f"recurrent state: {state_bytes/1e3:.1f} KB per sequence, "
+          f"independent of context length")
+
+    eng = SlotEngine(cfg, SlotEngineConfig(max_slots=2, max_len=1024))
+    rng = np.random.default_rng(0)
+    # a 700-token context — far past anything storable at KV-cache cost
+    long_prompt = rng.integers(0, cfg.vocab_size, 700).tolist()
+    req = Request(prompt_tokens=long_prompt,
+                  sampling=SamplingParams(max_new_tokens=24))
+    eng.submit(req)
+    eng.run_until_idle()
+    print(f"context {len(long_prompt)} tokens -> generated "
+          f"{len(req.output_tokens)} tokens: {req.output_tokens[:12]}...")
+    assert len(req.output_tokens) == 24
+    print("long_context_ssm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end training driver: a ~100M-param qwen3-family model on the
+synthetic Markov corpus for a few hundred steps (CPU, ~10-20 min full;
+--steps 30 for a quick pass).  Shows a real decreasing loss curve,
+checkpointing, and restore.
+
+    PYTHONPATH=src python examples/train_dense_100m.py --steps 300
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import synthetic_lm_batches
+from repro.models.config import ModelConfig
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train_loop
+
+
+def model_100m() -> ModelConfig:
+    # qwen3 family scaled to ~100M params (8 layers, d=512, vocab 16k)
+    return get_config("qwen3-0.6b").replace(
+        name="qwen3-100m", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=4, d_ff=1536, vocab_size=16_384, head_dim=64,
+        layer_pattern=("dense",) * 8, max_seq_len=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_100m")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    from repro.models import model as M
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M")
+    data = synthetic_lm_batches(cfg.vocab_size, args.batch, args.seq,
+                                corpus_tokens=400_000)
+    opt = AdamWConfig(lr=6e-4, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps, weight_decay=0.05)
+    state, history = train_loop(
+        cfg, opt, data, args.steps, key=jax.random.PRNGKey(0),
+        log_every=max(args.steps // 15, 1),
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=max(args.steps // 2, 10))
+    for h in history:
+        print(f"  step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"lr {h['lr']:.2e}  gnorm {h['grad_norm']:.2f}  "
+              f"({h['elapsed_s']:.0f}s)")
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first - 0.3, "loss should drop on the Markov corpus"
+    # checkpoint roundtrip
+    step = ckpt.latest_step(args.ckpt_dir)
+    restored = ckpt.restore(args.ckpt_dir, state, step)
+    leaf0 = jax.tree.leaves(restored.params)[0]
+    print(f"checkpoint restore OK (step {step}, leaf {leaf0.shape})")
+    print("train_dense_100m OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+# AIBrix core: the paper's system-level contribution in composable modules.

@@ -1,0 +1,3 @@
+from repro.core.autoscaler.metrics import MetricStore, SlidingWindow  # noqa: F401
+from repro.core.autoscaler.policies import (APA, AUTOSCALERS, HPA, KPA,  # noqa: F401
+                                            make_autoscaler)

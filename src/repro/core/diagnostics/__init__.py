@@ -1,0 +1,2 @@
+from repro.core.diagnostics.tools import (DiagnosticMonitor, FailureInjector,  # noqa: F401
+                                          FaultKind, Telemetry)

@@ -1,0 +1,2 @@
+from repro.core.gateway.gateway import Gateway, RateLimit  # noqa: F401
+from repro.core.gateway.router import POLICIES, make_policy  # noqa: F401

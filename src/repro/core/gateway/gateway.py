@@ -1,0 +1,122 @@
+"""AIBrix API gateway: admission control + fairness + routing dispatch.
+
+The Envoy-extension role from the paper: every request passes token-
+based rate limiting (TPM/RPM per user — the thing the paper notes
+Knative-style circuit breakers cannot express), then the configured
+routing policy picks a serving engine.  The gateway is engine-agnostic:
+targets are handles registered by the orchestration layer.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.gateway.router import RoutingPolicy, make_policy
+
+
+@dataclass
+class RateLimit:
+    rpm: float = 600.0            # requests / minute
+    tpm: float = 600_000.0        # tokens / minute
+
+
+class TokenBucket:
+    def __init__(self, rate_per_min: float, burst: float = None):
+        self.rate = rate_per_min / 60.0
+        self.capacity = burst if burst is not None else rate_per_min / 6.0
+        self.level = self.capacity
+        self.t = 0.0
+
+    def allow(self, amount: float, now: float) -> bool:
+        self.level = min(self.capacity, self.level + (now - self.t) * self.rate)
+        self.t = now
+        if self.level >= amount:
+            self.level -= amount
+            return True
+        return False
+
+
+@dataclass
+class GatewayStats:
+    routed: int = 0
+    rejected_rpm: int = 0
+    rejected_tpm: int = 0
+    per_engine: Dict[str, int] = field(default_factory=dict)
+
+
+class Gateway:
+    def __init__(self, policy: str = "least-request",
+                 default_limit: RateLimit = None,
+                 clock: Callable[[], float] = None, **policy_kw):
+        self.policy: RoutingPolicy = make_policy(policy, **policy_kw)
+        self.default_limit = default_limit or RateLimit()
+        self.clock = clock or (lambda: 0.0)
+        self.engines: Dict[str, object] = {}
+        self.user_limits: Dict[str, RateLimit] = {}
+        self._rpm: Dict[str, TokenBucket] = {}
+        self._tpm: Dict[str, TokenBucket] = {}
+        self.stats = GatewayStats()
+        # workload histogram for the GPU optimizer's Load Monitor
+        self.request_log: collections.deque = collections.deque(maxlen=4096)
+
+    # -------------------------------------------------------------- admin
+    def register_engine(self, engine_id: str, handle) -> None:
+        self.engines[engine_id] = handle
+
+    def deregister_engine(self, engine_id: str) -> None:
+        self.engines.pop(engine_id, None)
+
+    def set_user_limit(self, user: str, limit: RateLimit) -> None:
+        self.user_limits[user] = limit
+
+    def set_policy(self, name: str, **kw) -> None:
+        self.policy = make_policy(name, **kw)
+
+    # -------------------------------------------------------------- route
+    def _buckets(self, user: str) -> Tuple[TokenBucket, TokenBucket]:
+        if user not in self._rpm:
+            lim = self.user_limits.get(user, self.default_limit)
+            self._rpm[user] = TokenBucket(lim.rpm)
+            self._tpm[user] = TokenBucket(lim.tpm)
+        return self._rpm[user], self._tpm[user]
+
+    def route(self, tokens: Sequence[int], user: str = "default",
+              lora_adapter: Optional[str] = None,
+              est_output_tokens: int = 64) -> Optional[str]:
+        """Admission + routing.  Returns engine id, or None if rejected
+        (token-based rate limit) / no engine registered."""
+        now = self.clock()
+        if not self.engines:
+            return None
+        rpm, tpm = self._buckets(user)
+        if not rpm.allow(1.0, now):
+            self.stats.rejected_rpm += 1
+            return None
+        if not tpm.allow(len(tokens) + est_output_tokens, now):
+            self.stats.rejected_tpm += 1
+            return None
+        eid = self.policy.select(self.engines, tokens, lora_adapter)
+        self.stats.routed += 1
+        self.stats.per_engine[eid] = self.stats.per_engine.get(eid, 0) + 1
+        self.request_log.append(
+            (now, len(tokens), est_output_tokens, user, eid))
+        return eid
+
+    # -------------------------------------------------------------- stats
+    def workload_histogram(self, in_edges=(200, 1000, 4000),
+                           out_edges=(100, 500)) -> Dict[tuple, int]:
+        """Bucketed (input_len, output_len) histogram — the Load Monitor
+        input for the SLO-driven GPU optimizer (paper §3.2.7)."""
+        hist: Dict[tuple, int] = {}
+
+        def bucket(v, edges):
+            for i, e in enumerate(edges):
+                if v < e:
+                    return i
+            return len(edges)
+
+        for _, ilen, olen, _, _ in self.request_log:
+            key = (bucket(ilen, in_edges), bucket(olen, out_edges))
+            hist[key] = hist.get(key, 0) + 1
+        return hist

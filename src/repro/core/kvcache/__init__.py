@@ -1,0 +1,2 @@
+from repro.core.kvcache.eviction import LRU, LRUK, S3FIFO, make_policy  # noqa: F401
+from repro.core.kvcache.pool import DistributedKVPool, KVBlock  # noqa: F401

@@ -1,0 +1,173 @@
+"""Distributed KV cache pool (paper §3.2.5, Figure 5).
+
+Cluster-scope, content-addressed store of KV blocks, shared by every
+engine.  Reproduces the paper's four stated mechanisms:
+
+  1. **Scan-resistant eviction** — pluggable policy, S3-FIFO by default
+     (one-shot prompt scans don't flush hot multi-turn prefixes).
+  2. **Reduced redundant transfers** — blocks are fetched at most once
+     per miss; publishes of a hash the pool already holds are dropped
+     at the metadata layer before any payload moves.
+  3. **Asynchronous metadata updates** — publishes enqueue a metadata
+     record and return immediately; a background flush (``tick``) makes
+     them visible, so the engine's token path never waits on the pool
+     index (visibility_lag models the paper's async update window).
+  4. **Shared-memory colocation** — fetches by an engine colocated with
+     the block's home node are zero-copy (cost model: dram_bw vs
+     network_bw), mirroring the cache-engine colocation fast path.
+
+Payloads are optional: real engines store (k_page, v_page) arrays; the
+cluster simulator stores None and uses the cost model only.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.kvcache.eviction import make_policy
+
+
+@dataclass
+class KVBlock:
+    block_hash: str
+    payload: Any                       # (k_page, v_page) or None (sim)
+    size_bytes: int
+    home_node: str                     # node that produced it
+    created_at: float = 0.0
+    hits: int = 0
+
+
+@dataclass
+class PoolStats:
+    puts: int = 0
+    dup_puts_dropped: int = 0
+    hits_local: int = 0                # shared-memory (colocated) hits
+    hits_remote: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_stored: int = 0
+    bytes_transferred: int = 0
+    pending_metadata: int = 0
+
+
+class DistributedKVPool:
+    """One logical pool; engines attach with a node id for colocation."""
+
+    def __init__(self, capacity_bytes: int = 8 << 30,
+                 block_bytes: int = 1 << 20,
+                 policy: str = "s3fifo",
+                 metadata_lag: float = 0.002,
+                 network_bw: float = 12.5e9,      # 100 Gb/s fabric
+                 dram_bw: float = 50e9,
+                 clock: Callable[[], float] = None):
+        self.capacity_bytes = capacity_bytes
+        self.block_bytes = block_bytes
+        self.policy = make_policy(policy, max(capacity_bytes // block_bytes,
+                                              2))
+        self.metadata_lag = metadata_lag
+        self.network_bw = network_bw
+        self.dram_bw = dram_bw
+        self.clock = clock or (lambda: 0.0)
+        self.blocks: Dict[str, KVBlock] = {}
+        self.stats = PoolStats()
+        # async metadata queue: (visible_at, hash, block)
+        self._pending: "collections.deque[Tuple[float, str, KVBlock]]" = \
+            collections.deque()
+        # engine node map (engine_id -> node id) for colocation checks
+        self._engine_node: Dict[str, str] = {}
+
+    # ------------------------------------------------------------ attach
+    def attach_engine(self, engine_id: str, node: str) -> None:
+        self._engine_node[engine_id] = node
+
+    # ------------------------------------------------------------ publish
+    def publish(self, block_hash: str, payload: Any, engine_id: str,
+                now: Optional[float] = None, size_bytes: int = 0) -> bool:
+        """Async publish; returns False when dropped as duplicate."""
+        now = self.clock() if now is None else now
+        if block_hash in self.blocks or any(
+                h == block_hash for _, h, _ in self._pending):
+            self.stats.dup_puts_dropped += 1
+            return False
+        blk = KVBlock(block_hash, payload,
+                      size_bytes or self.block_bytes,
+                      home_node=self._engine_node.get(engine_id, engine_id),
+                      created_at=now)
+        self._pending.append((now + self.metadata_lag, block_hash, blk))
+        self.stats.puts += 1
+        self.stats.pending_metadata = len(self._pending)
+        return True
+
+    def tick(self, now: Optional[float] = None) -> int:
+        """Flush metadata records that became visible.  Returns #flushed."""
+        now = self.clock() if now is None else now
+        n = 0
+        while self._pending and self._pending[0][0] <= now:
+            _, h, blk = self._pending.popleft()
+            if h in self.blocks:
+                self.stats.dup_puts_dropped += 1
+                continue
+            self._insert(blk)
+            n += 1
+        self.stats.pending_metadata = len(self._pending)
+        return n
+
+    def _insert(self, blk: KVBlock) -> None:
+        while (self.stats.bytes_stored + blk.size_bytes
+               > self.capacity_bytes):
+            victim = self.policy.evict()
+            if victim is None:
+                return                      # cannot fit
+            vb = self.blocks.pop(victim, None)
+            if vb is not None:
+                self.stats.bytes_stored -= vb.size_bytes
+                self.stats.evictions += 1
+        self.blocks[blk.block_hash] = blk
+        self.policy.on_insert(blk.block_hash)
+        self.stats.bytes_stored += blk.size_bytes
+
+    # ------------------------------------------------------------ fetch
+    def contains(self, block_hash: str) -> bool:
+        return block_hash in self.blocks
+
+    def fetch(self, block_hash: str, engine_id: str,
+              now: Optional[float] = None) -> Optional[Any]:
+        """Payload or None.  Updates hotness + transfer accounting."""
+        self.tick(now)
+        blk = self.blocks.get(block_hash)
+        if blk is None:
+            self.stats.misses += 1
+            return None
+        blk.hits += 1
+        self.policy.on_access(block_hash)
+        node = self._engine_node.get(engine_id, engine_id)
+        if node == blk.home_node:
+            self.stats.hits_local += 1
+        else:
+            self.stats.hits_remote += 1
+            self.stats.bytes_transferred += blk.size_bytes
+        return blk.payload if blk.payload is not None else True
+
+    def fetch_cost_s(self, block_hash: str, engine_id: str) -> float:
+        """Transfer-time model for the simulator (s)."""
+        blk = self.blocks.get(block_hash)
+        if blk is None:
+            return 0.0
+        node = self._engine_node.get(engine_id, engine_id)
+        bw = self.dram_bw if node == blk.home_node else self.network_bw
+        return blk.size_bytes / bw
+
+    # ------------------------------------------------------------ misc
+    def match_prefix(self, hashes: List[str]) -> int:
+        """Longest visible prefix run (router/scheduler scoring)."""
+        n = 0
+        for h in hashes:
+            if h not in self.blocks:
+                break
+            n += 1
+        return n
+
+    @property
+    def utilization(self) -> float:
+        return self.stats.bytes_stored / max(self.capacity_bytes, 1)

@@ -1,0 +1,1 @@
+from repro.core.lora.manager import AdapterSpec, LoRAController  # noqa: F401

@@ -1,0 +1,136 @@
+"""High-density LoRA management (paper §3.2.1, Figure 2).
+
+Cluster-level adapter control plane: a registry with lineage (adapters
+are versioned artifacts derived from a base model), a density-aware
+placement controller that packs many adapters per engine pod while
+respecting per-pod slot budgets and spreading replicas for availability,
+and the discovery view the gateway's LoRA-affinity routing reads
+(the Kubernetes Service/EndpointSlice role in the paper).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+
+@dataclass
+class AdapterSpec:
+    name: str
+    base_model: str
+    rank: int = 8
+    artifact_uri: str = ""
+    parent: Optional[str] = None       # lineage: fine-tuned from another
+    requests_per_s: float = 0.0        # observed demand (long-tail aware)
+
+
+@dataclass
+class PodSlots:
+    pod_id: str
+    capacity: int                      # adapter slots on this pod
+    loaded: Set[str] = field(default_factory=set)
+
+    @property
+    def free(self) -> int:
+        return self.capacity - len(self.loaded)
+
+
+class LoRAController:
+    """Registry + placement.  ``sync`` drives engines to match the plan
+    via their register/unregister_adapter hooks."""
+
+    def __init__(self, min_replicas: int = 1, max_replicas: int = 4):
+        self.adapters: Dict[str, AdapterSpec] = {}
+        self.pods: Dict[str, PodSlots] = {}
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.stats = {"loads": 0, "unloads": 0, "placement_runs": 0}
+
+    # ------------------------------------------------------------ registry
+    def register(self, spec: AdapterSpec) -> None:
+        if spec.parent and spec.parent not in self.adapters:
+            raise KeyError(f"lineage parent {spec.parent!r} not registered")
+        self.adapters[spec.name] = spec
+
+    def deregister(self, name: str) -> None:
+        children = [a.name for a in self.adapters.values()
+                    if a.parent == name]
+        if children:
+            raise ValueError(f"{name} has dependent adapters {children}")
+        self.adapters.pop(name, None)
+        for pod in self.pods.values():
+            pod.loaded.discard(name)
+
+    def lineage(self, name: str) -> List[str]:
+        out = [name]
+        while self.adapters[out[-1]].parent:
+            out.append(self.adapters[out[-1]].parent)
+        return out
+
+    # ------------------------------------------------------------ pods
+    def add_pod(self, pod_id: str, capacity: int = 8) -> None:
+        self.pods[pod_id] = PodSlots(pod_id, capacity)
+
+    def remove_pod(self, pod_id: str) -> None:
+        self.pods.pop(pod_id, None)
+
+    # ------------------------------------------------------------ placement
+    def plan_placement(self) -> Dict[str, Set[str]]:
+        """Desired pod -> adapters.  Density-first: hot adapters get up
+        to max_replicas spread across pods; cold (long-tail) adapters
+        pack onto the fewest pods (that's where the cost win is)."""
+        self.stats["placement_runs"] += 1
+        plan: Dict[str, Set[str]] = {p: set() for p in self.pods}
+        if not self.pods:
+            return plan
+        by_heat = sorted(self.adapters.values(),
+                         key=lambda a: -a.requests_per_s)
+        budget = {p: self.pods[p].capacity for p in self.pods}
+        total_rps = sum(a.requests_per_s for a in self.adapters.values())
+        for a in by_heat:
+            share = (a.requests_per_s / total_rps) if total_rps else 0.0
+            replicas = max(self.min_replicas,
+                           min(self.max_replicas,
+                               round(share * len(self.pods) * 2)))
+            # prefer pods that already have it (stickiness), then most-free
+            order = sorted(self.pods,
+                           key=lambda p: (a.name not in self.pods[p].loaded,
+                                          -budget[p]))
+            placed = 0
+            for p in order:
+                if placed >= replicas:
+                    break
+                if budget[p] > 0:
+                    plan[p].add(a.name)
+                    budget[p] -= 1
+                    placed += 1
+        return plan
+
+    def sync(self, engines: Dict[str, object]) -> Dict[str, List[str]]:
+        """Apply the plan to live engines.  Returns per-pod load/unload
+        actions (for observability/tests)."""
+        plan = self.plan_placement()
+        actions: Dict[str, List[str]] = {}
+        for pod_id, want in plan.items():
+            eng = engines.get(pod_id)
+            pod = self.pods[pod_id]
+            acts = []
+            for name in sorted(pod.loaded - want):
+                if eng is not None:
+                    eng.unregister_adapter(name)
+                pod.loaded.discard(name)
+                acts.append(f"unload:{name}")
+                self.stats["unloads"] += 1
+            for name in sorted(want - pod.loaded):
+                if eng is not None:
+                    eng.register_adapter(name)
+                pod.loaded.add(name)
+                acts.append(f"load:{name}")
+                self.stats["loads"] += 1
+            actions[pod_id] = acts
+        return actions
+
+    # ------------------------------------------------------------ discovery
+    def endpoints(self, adapter: str) -> List[str]:
+        """Pods currently serving an adapter (EndpointSlice analogue)."""
+        return sorted(p for p, s in self.pods.items() if adapter in s.loaded)

@@ -1,0 +1,4 @@
+from repro.core.optimizer.gpu_optimizer import (GPUOptimizer, LoadMonitor,  # noqa: F401
+                                                homogeneous_cost)
+from repro.core.optimizer.profiles import (DEVICES, PerfModel,  # noqa: F401
+                                           ProfileTable, WorkloadBucket)

@@ -1,0 +1,207 @@
+"""SLO-driven heterogeneous GPU optimizer (paper §3.2.7, Figure 8).
+
+Three components, matching the paper's architecture figure:
+
+  * LoadMonitor  — turns gateway request logs into bucketed demand rates
+  * GPUOptimizer — Mélange-inspired ILP: pick GPU counts per type that
+                   minimize $/h subject to (a) every bucket's demand is
+                   served, (b) only SLO-meeting (bucket, device)
+                   assignments are allowed, (c) availability caps.
+                   scipy MILP when available, greedy cover fallback.
+  * External metric source — desired counts are exposed in the format
+    the Pod Autoscaler consumes (one desired-replicas value per
+    deployment), closing the paper's optimizer -> autoscaler loop.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.optimizer.profiles import (DEVICES, ProfileTable,
+                                           WorkloadBucket)
+
+
+@dataclass
+class DemandBucket:
+    bucket: WorkloadBucket
+    rps: float
+
+
+class LoadMonitor:
+    """Aggregates gateway logs into representative workload buckets."""
+
+    def __init__(self, in_edges: Sequence[int] = (200, 1000, 4000),
+                 out_edges: Sequence[int] = (100, 500)):
+        self.in_edges = list(in_edges)
+        self.out_edges = list(out_edges)
+
+    def _rep(self, idx: int, edges: List[int]) -> int:
+        """Representative length for a bucket index."""
+        lo = 0 if idx == 0 else edges[idx - 1]
+        hi = edges[idx] if idx < len(edges) else lo * 2 or 8000
+        return max((lo + hi) // 2, 16)
+
+    def demand(self, request_log, window_s: float = 600.0,
+               now: Optional[float] = None) -> List[DemandBucket]:
+        if not request_log:
+            return []
+        now = request_log[-1][0] if now is None else now
+        rows = [r for r in request_log if r[0] >= now - window_s]
+        span = max(window_s, 1e-9)
+        counts: Dict[Tuple[int, int], int] = {}
+        for _, ilen, olen, _, _ in rows:
+            bi = sum(ilen >= e for e in self.in_edges)
+            bo = sum(olen >= e for e in self.out_edges)
+            counts[(bi, bo)] = counts.get((bi, bo), 0) + 1
+        out = []
+        for (bi, bo), c in sorted(counts.items()):
+            b = WorkloadBucket(self._rep(bi, self.in_edges),
+                               self._rep(bo, self.out_edges))
+            out.append(DemandBucket(b, c / span))
+        return out
+
+
+@dataclass
+class Allocation:
+    counts: Dict[str, int]
+    cost_per_hour: float
+    assignment: Dict[Tuple[Tuple[int, int], str], float]
+    feasible: bool = True
+    note: str = ""
+
+
+class GPUOptimizer:
+    def __init__(self, table: ProfileTable,
+                 device_types: Sequence[str] = ("a10", "l20", "v100"),
+                 availability: Optional[Dict[str, int]] = None,
+                 headroom: float = 1.2):
+        self.table = table
+        self.device_types = list(device_types)
+        self.availability = availability or {}
+        self.headroom = headroom
+
+    # ------------------------------------------------------------- solve
+    def optimize(self, demand: List[DemandBucket]) -> Allocation:
+        demand = [d for d in demand if d.rps > 0]
+        if not demand:
+            return Allocation({g: 0 for g in self.device_types}, 0.0, {})
+        caps = {(i, gi): self.table.capacity(name, d.bucket)
+                for i, d in enumerate(demand)
+                for gi, name in enumerate(self.device_types)}
+        try:
+            return self._solve_milp(demand, caps)
+        except Exception as e:  # scipy missing / infeasible numerical
+            alloc = self._solve_greedy(demand, caps)
+            alloc.note = f"greedy fallback ({type(e).__name__})"
+            return alloc
+
+    def _solve_milp(self, demand, caps) -> Allocation:
+        import numpy as np
+        from scipy.optimize import LinearConstraint, milp
+        from scipy.optimize import Bounds
+
+        nb, ng = len(demand), len(self.device_types)
+        # variables: x[i,g] rps of bucket i on type g (continuous),
+        #            n[g] device count (integer)
+        nx = nb * ng
+
+        def xi(i, g):
+            return i * ng + g
+
+        c = np.zeros(nx + ng)
+        for g, name in enumerate(self.device_types):
+            c[nx + g] = DEVICES[name].cost_per_hour
+        A_rows, lbs, ubs = [], [], []
+        # demand served: sum_g x[i,g] == demand_i * headroom
+        for i, d in enumerate(demand):
+            row = np.zeros(nx + ng)
+            for g in range(ng):
+                row[xi(i, g)] = 1.0
+            A_rows.append(row)
+            lbs.append(d.rps * self.headroom)
+            ubs.append(d.rps * self.headroom)
+        # capacity: sum_i x[i,g]/cap[i,g] <= n[g]
+        for g in range(ng):
+            row = np.zeros(nx + ng)
+            for i in range(nb):
+                cap = caps[(i, g)]
+                row[xi(i, g)] = (1.0 / cap) if cap > 0 else 1e9
+            row[nx + g] = -1.0
+            A_rows.append(row)
+            lbs.append(-np.inf)
+            ubs.append(0.0)
+        ub_x = np.full(nx + ng, np.inf)
+        for g, name in enumerate(self.device_types):
+            if name in self.availability:
+                ub_x[nx + g] = self.availability[name]
+        integrality = np.concatenate([np.zeros(nx), np.ones(ng)])
+        res = milp(c=c,
+                   constraints=LinearConstraint(np.array(A_rows),
+                                                np.array(lbs),
+                                                np.array(ubs)),
+                   integrality=integrality,
+                   bounds=Bounds(np.zeros(nx + ng), ub_x))
+        if not res.success:
+            raise RuntimeError(f"milp failed: {res.message}")
+        counts = {name: int(round(res.x[nx + g]))
+                  for g, name in enumerate(self.device_types)}
+        assignment = {}
+        for i, d in enumerate(demand):
+            for g, name in enumerate(self.device_types):
+                v = float(res.x[xi(i, g)])
+                if v > 1e-9:
+                    assignment[(d.bucket.key, name)] = v
+        cost = sum(counts[n] * DEVICES[n].cost_per_hour for n in counts)
+        return Allocation(counts, cost, assignment)
+
+    def _solve_greedy(self, demand, caps) -> Allocation:
+        """Cheapest-per-request device per bucket, then pack counts."""
+        load_per_dev: Dict[str, float] = {g: 0.0 for g in self.device_types}
+        assignment = {}
+        for i, d in enumerate(demand):
+            best, best_cpr = None, float("inf")
+            for g, name in enumerate(self.device_types):
+                cap = caps.get((i, g), 0)
+                if cap <= 0:
+                    continue
+                cpr = DEVICES[name].cost_per_hour / cap
+                if cpr < best_cpr:
+                    best, best_cpr = name, cpr
+            if best is None:
+                return Allocation({g: 0 for g in self.device_types}, 0.0,
+                                  {}, feasible=False,
+                                  note=f"bucket {d.bucket.key} unservable")
+            g = self.device_types.index(best)
+            load_per_dev[best] += d.rps * self.headroom / caps[(i, g)]
+            assignment[(d.bucket.key, best)] = d.rps
+        counts = {}
+        for name, load in load_per_dev.items():
+            n = math.ceil(load)
+            cap_limit = self.availability.get(name)
+            if cap_limit is not None:
+                n = min(n, cap_limit)
+            counts[name] = n
+        cost = sum(counts[n] * DEVICES[n].cost_per_hour for n in counts)
+        return Allocation(counts, cost, assignment)
+
+    # ----------------------------------------------- autoscaler interface
+    def metric_source(self, demand: List[DemandBucket]) -> Dict[str, int]:
+        """Desired replicas per device-typed deployment — the 'external
+        MetricSource' the Pod Autoscaler reads (paper Figure 8)."""
+        alloc = self.optimize(demand)
+        return {f"deploy-{g}": n for g, n in alloc.counts.items()}
+
+
+def homogeneous_cost(table: ProfileTable, demand: List[DemandBucket],
+                     device: str, headroom: float = 1.2) -> Tuple[int, float]:
+    """Baseline: serve everything on one device type."""
+    load = 0.0
+    for d in demand:
+        cap = table.capacity(device, d.bucket)
+        if cap <= 0:
+            return 0, float("inf")
+        load += d.rps * headroom / cap
+    n = max(math.ceil(load), 1)
+    return n, n * DEVICES[device].cost_per_hour

@@ -1,0 +1,2 @@
+from repro.core.orchestration.cluster import (ClusterManager, EngineGroup,  # noqa: F401
+                                              GroupSpec, Pod, PodState)

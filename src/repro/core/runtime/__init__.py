@@ -1,0 +1,2 @@
+from repro.core.runtime.sidecar import (AIRuntime, ColdStartManager,  # noqa: F401
+                                        ModelArtifact, load_time_s)

@@ -1,0 +1,4 @@
+from repro.core.sim.cluster_sim import ClusterConfig, ServingCluster  # noqa: F401
+from repro.core.sim.events import EventLoop, SimClock  # noqa: F401
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig  # noqa: F401
+from repro.core.sim import workloads  # noqa: F401

@@ -1,0 +1,210 @@
+"""ServingCluster: the full AIBrix stack wired over the event loop.
+
+Gateway (+routing policy) -> SimEngine fleet -> distributed KV pool,
+with the metric pump (AI runtime scrape), autoscaler reconciliation
+through the ClusterManager (cold starts included), failure injection,
+and the GPU optimizer's desired-count feed.  This is the testbed every
+cluster-level benchmark runs on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.autoscaler.metrics import MetricStore
+from repro.core.autoscaler.policies import Autoscaler
+from repro.core.diagnostics.tools import (DiagnosticMonitor, FailureInjector,
+                                          Telemetry)
+from repro.core.gateway.gateway import Gateway
+from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.orchestration.cluster import ClusterManager, PodState
+from repro.core.runtime.sidecar import (AIRuntime, ColdStartManager,
+                                        ModelArtifact)
+from repro.core.sim.events import EventLoop, SimClock
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.core.sim.workloads import TimedRequest, summarize
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class ClusterConfig:
+    routing_policy: str = "least-request"
+    routing_kw: dict = field(default_factory=dict)
+    device_type: str = "a10"
+    num_engines: int = 4
+    engine: SimEngineConfig = None
+    use_kv_pool: bool = False
+    kv_pool_gb: float = 64.0
+    kv_pool_policy: str = "s3fifo"
+    autoscaler: Optional[Autoscaler] = None
+    metric_delay_s: float = 0.0      # legacy metrics-path propagation
+    scrape_period_s: float = 1.0
+    autoscale_period_s: float = 2.0
+    model_bytes: float = 14e9        # ~7B bf16 artifact
+    telemetry: bool = False
+
+
+class ServingCluster:
+    def __init__(self, cfg: ModelConfig, ccfg: ClusterConfig):
+        self.cfg = cfg
+        self.ccfg = ccfg
+        self.loop = EventLoop()
+        self.clock = self.loop.clock
+        self.kv_pool = None
+        if ccfg.use_kv_pool:
+            per_tok = 1  # placeholder, real size set by engines' PerfModel
+            self.kv_pool = DistributedKVPool(
+                capacity_bytes=int(ccfg.kv_pool_gb * (1 << 30)),
+                policy=ccfg.kv_pool_policy, clock=self.clock)
+        self.gateway = Gateway(policy=ccfg.routing_policy,
+                               clock=self.clock, **ccfg.routing_kw)
+        self.engines: Dict[str, SimEngine] = {}
+        self.runtimes: Dict[str, AIRuntime] = {}
+        self.metrics = MetricStore(propagation_delay_s=ccfg.metric_delay_s)
+        self.injector = FailureInjector()
+        self.monitor = DiagnosticMonitor()
+        self.diagnoses: List = []
+        self.all_requests: List = []
+        self.rejected: int = 0
+        self.scale_history: List[tuple] = []
+        # orchestration (pods + cold start) — used when autoscaling
+        self.cold = ColdStartManager(streaming_loader=True)
+        self.cold.register_artifact(
+            ModelArtifact(cfg.name, ccfg.model_bytes,
+                          tier_by_node={"node-0": "dram"}))
+        self.cluster = ClusterManager(self.cold, clock=self.clock)
+        for i in range(max(ccfg.num_engines,
+                           (ccfg.autoscaler.max_replicas
+                            if ccfg.autoscaler else ccfg.num_engines))):
+            self.cluster.add_node(f"node-{i}", ccfg.device_type, 8)
+            if i > 0:
+                self.cold.note_cached(cfg.name, f"node-{i}", "local")
+        for i in range(ccfg.num_engines):
+            self._spawn_engine(ready=True)
+
+    # ------------------------------------------------------------ engines
+    def _spawn_engine(self, ready: bool = False) -> str:
+        eid = f"engine-{len(self.runtimes)}"
+        node = f"node-{len(self.runtimes) % max(len(self.cluster.nodes), 1)}"
+        ecfg = self.ccfg.engine or SimEngineConfig(
+            device_type=self.ccfg.device_type)
+        eng = SimEngine(self.cfg, self.loop, ecfg, kv_pool=self.kv_pool,
+                        engine_id=eid, node=node)
+        eng.slowdown_fn = (lambda e=eid: self.injector.slowdown_factor(e))
+        self.engines[eid] = eng
+        self.runtimes[eid] = AIRuntime(eng, pod_id=eid, node=node)
+        if ready:
+            self.gateway.register_engine(eid, eng)
+        else:
+            # simulate cold start before joining the gateway
+            pod = self.cluster.create_pod(self.cfg.name,
+                                          self.ccfg.device_type)
+            delay = (pod.ready_at - self.clock.now) if pod else 30.0
+            self.loop.after(delay,
+                            lambda: self.gateway.register_engine(eid, eng))
+        return eid
+
+    def _retire_engine(self) -> None:
+        live = [e for e in self.engines if e in self.gateway.engines]
+        if len(live) <= 1:
+            return
+        # retire the emptiest engine (graceful: it finishes its work)
+        eid = min(live, key=lambda e: self.engines[e].metrics().num_running)
+        self.gateway.deregister_engine(eid)
+
+    @property
+    def active_replicas(self) -> int:
+        return len(self.gateway.engines)
+
+    # ------------------------------------------------------------ pumps
+    def _scrape(self) -> None:
+        now = self.clock.now
+        # snapshot: remediation may spawn replacement engines mid-scrape
+        for eid, rt in list(self.runtimes.items()):
+            if eid not in self.gateway.engines:
+                continue
+            for k, v in rt.scrape().items():
+                self.metrics.record(now, k, v)
+            if self.ccfg.telemetry:
+                m = rt.engine.metrics()
+                sample = Telemetry(pod_id=eid, t=now,
+                                   tokens_per_sec=m.tokens_per_sec)
+                sample = self.injector.perturb(sample)
+                for d in self.monitor.observe(sample):
+                    self.diagnoses.append(d)
+                    self._remediate(d)
+
+    def _remediate(self, d) -> None:
+        if d.action in ("restart", "cordon", "drain"):
+            if d.pod_id in self.gateway.engines:
+                self.gateway.deregister_engine(d.pod_id)
+                # replacement spins up with a cold start
+                self._spawn_engine(ready=False)
+
+    def _autoscale(self) -> None:
+        asc = self.ccfg.autoscaler
+        if asc is None:
+            return
+        now = self.clock.now
+        decision = asc.desired(now, self.metrics, self.active_replicas)
+        self.scale_history.append((now, self.active_replicas,
+                                   decision.desired))
+        delta = decision.desired - self.active_replicas
+        for _ in range(max(delta, 0)):
+            # reuse a warm spare if one exists, else cold-start a new pod
+            spare = [e for e in self.engines
+                     if e not in self.gateway.engines
+                     and self.engines[e].healthy()]
+            if spare:
+                self.gateway.register_engine(spare[0],
+                                             self.engines[spare[0]])
+            else:
+                self._spawn_engine(ready=False)
+        for _ in range(max(-delta, 0)):
+            self._retire_engine()
+
+    # ------------------------------------------------------------ run
+    def run(self, workload: List[TimedRequest],
+            drain_s: float = 600.0) -> dict:
+        for tr in workload:
+            self.all_requests.append(tr.request)
+            self.loop.schedule(tr.arrival, self._make_dispatch(tr))
+        self.loop.every(self.ccfg.scrape_period_s, self._scrape)
+        if self.ccfg.autoscaler is not None:
+            self.loop.every(self.ccfg.autoscale_period_s, self._autoscale)
+        end = workload[-1].arrival + drain_s if workload else drain_s
+
+        def done() -> bool:
+            return self.clock.now > end or (
+                self.clock.now > (workload[-1].arrival if workload else 0)
+                and not any(e.has_work for e in self.engines.values()))
+
+        self.loop.run(until=end, stop_when=done)
+        return self.summary()
+
+    def _make_dispatch(self, tr: TimedRequest) -> Callable:
+        def dispatch():
+            eid = self.gateway.route(
+                tr.request.prompt_tokens, user=tr.request.user,
+                lora_adapter=tr.request.lora_adapter,
+                est_output_tokens=tr.request.sampling.max_new_tokens)
+            if eid is None:
+                self.rejected += 1
+                return
+            self.engines[eid].submit(tr.request)
+        return dispatch
+
+    def summary(self) -> dict:
+        s = summarize(self.all_requests)
+        s["rejected"] = self.rejected
+        s["routing_policy"] = self.ccfg.routing_policy
+        if self.kv_pool is not None:
+            st = self.kv_pool.stats
+            s["pool_hits"] = st.hits_local + st.hits_remote
+            s["pool_evictions"] = st.evictions
+            s["pool_dup_drops"] = st.dup_puts_dropped
+        agg = [e.metrics() for e in self.engines.values()]
+        s["prefix_hit_tokens"] = sum(m.prefix_hit_tokens for m in agg)
+        s["remote_hit_tokens"] = sum(m.remote_hit_tokens for m in agg)
+        s["preemptions"] = sum(m.preemptions for m in agg)
+        return s

@@ -1,0 +1,1 @@
+from repro.data.pipeline import synthetic_lm_batches, TokenPipeline  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.engine.engine import (EngineConfig, EngineMetrics,  # noqa: F401
+                                 InferenceEngine)
+from repro.engine.request import Request, RequestState, SamplingParams  # noqa: F401

@@ -1,0 +1,374 @@
+"""Continuous-batching inference engine (the "vLLM" role in the paper).
+
+One ``InferenceEngine`` = one serving pod's engine process: paged KV
+cache + hash-indexed prefix cache, chunked prefill, batched decode,
+high-density multi-LoRA, and the metric surface the AIBrix control
+plane consumes (queue depth, KV utilization, token throughput, latency).
+
+The engine takes an injectable ``clock`` so it runs identically under
+wall-clock (CPU examples/tests) and under the discrete-event cluster
+simulator (repro.core.sim).  A ``kv_pool_client`` hook connects it to
+the distributed KV cache pool (repro.core.kvcache): local prefix misses
+consult the pool by block hash; newly filled pages are published back.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import paged_model as PM
+from repro.engine.page_table import PageAllocator, chunk_hashes
+from repro.engine.request import Request, RequestState
+from repro.engine.sampling import sample
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class EngineConfig:
+    page_size: int = 16
+    num_pages: int = 512
+    max_batch: int = 8              # decode slots
+    max_pages_per_seq: int = 32     # block-table width
+    chunk_size: int = 64            # chunked-prefill chunk
+    chunked_prefill: bool = True
+    prefix_caching: bool = True
+    impl: str = "pallas"            # pallas | ref
+    dtype: str = "float32"
+    lora_rank: int = 8
+    max_adapters: int = 8
+
+
+@dataclass
+class EngineMetrics:
+    """Snapshot consumed by gateway routing + autoscaler."""
+    num_running: int = 0
+    num_waiting: int = 0
+    kv_utilization: float = 0.0
+    tokens_per_sec: float = 0.0
+    avg_latency: float = 0.0        # EWMA of per-request total latency
+    avg_queue_time: float = 0.0
+    admitted_requests: int = 0
+    finished_requests: int = 0
+    preemptions: int = 0
+    prefix_hit_tokens: int = 0
+    remote_hit_tokens: int = 0
+    loaded_adapters: tuple = ()
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig = None,
+                 params=None, clock: Callable[[], float] = time.monotonic,
+                 kv_pool_client=None, engine_id: str = "engine-0",
+                 seed: int = 0):
+        ecfg = ecfg or EngineConfig()
+        if not PM.pageable(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged engine requires a uniform dense/moe "
+                "attention pattern; use the slot engine for hybrid/SSM")
+        self.cfg, self.ecfg = cfg, ecfg
+        self.engine_id = engine_id
+        self.clock = clock
+        self.kv_pool = kv_pool_client
+        dtype = jnp.dtype(ecfg.dtype)
+        self.params = params if params is not None else M.init(
+            cfg, jax.random.PRNGKey(seed), dtype)
+        self.pool = PM.init_pool(cfg, ecfg.num_pages + 1, ecfg.page_size,
+                                 dtype)  # +1: OOB scratch page for drops
+        self.alloc = PageAllocator(ecfg.num_pages, ecfg.page_size)
+        self.lora = PM.init_lora(cfg, ecfg.max_adapters, ecfg.lora_rank,
+                                 dtype)
+        self._adapter_ids: Dict[str, int] = {}
+        self._free_adapter_slots = list(range(1, ecfg.max_adapters))
+        self.waiting: List[Request] = []
+        self.prefilling: Optional[Request] = None
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self._key = jax.random.PRNGKey(seed + 1)
+        self._m = EngineMetrics()
+        self._tok_window: List[tuple] = []      # (t, ntokens)
+        self._lat_ewma = 0.0
+        self._q_ewma = 0.0
+
+    # ------------------------------------------------------------- LoRA
+    def register_adapter(self, name: str, weights: dict = None) -> int:
+        """Dynamic high-density LoRA registration (paper §3.2.1)."""
+        if name in self._adapter_ids:
+            return self._adapter_ids[name]
+        if not self._free_adapter_slots:
+            raise RuntimeError("adapter slots exhausted")
+        idx = self._free_adapter_slots.pop(0)
+        if weights is None:
+            weights = PM.make_adapter(self.cfg, self.ecfg.lora_rank,
+                                      jax.random.fold_in(self._key, idx))
+        self.lora = {k: self.lora[k].at[idx].set(weights[k])
+                     for k in self.lora}
+        self._adapter_ids[name] = idx
+        return idx
+
+    def unregister_adapter(self, name: str) -> None:
+        idx = self._adapter_ids.pop(name, None)
+        if idx is not None:
+            self.lora = {k: self.lora[k].at[idx].set(0.0) for k in self.lora}
+            self._free_adapter_slots.append(idx)
+
+    @property
+    def adapters(self) -> List[str]:
+        return sorted(self._adapter_ids)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        if req.arrival_time == 0.0:
+            req.arrival_time = self.clock()
+        if req.lora_adapter and req.lora_adapter not in self._adapter_ids:
+            self.register_adapter(req.lora_adapter)
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running or self.prefilling)
+
+    # ------------------------------------------------------------- helpers
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.ecfg.page_size)
+
+    def _try_admit(self) -> Optional[Request]:
+        if not self.waiting or len(self.running) >= self.ecfg.max_batch:
+            return None
+        req = self.waiting[0]
+        total = req.prompt_len + req.sampling.max_new_tokens
+        if self._pages_for(total) > self.ecfg.max_pages_per_seq:
+            req.state = RequestState.FAILED
+            self.waiting.pop(0)
+            return None
+        now = self.clock()
+        matched_pages: List[int] = []
+        matched_tokens = 0
+        if self.ecfg.prefix_caching:
+            matched_pages, matched_tokens = self.alloc.match_prefix(
+                req.prompt_tokens, now)
+            if self.kv_pool is not None:
+                rp, rt = self._pool_fetch(req, matched_tokens)
+                matched_pages += rp
+                matched_tokens += rt
+        need = self._pages_for(total) - len(matched_pages)
+        fresh = self.alloc.allocate(need, now)
+        if fresh is None:
+            self.alloc.release(matched_pages, now)
+            return None     # no memory — stay queued
+        self.waiting.pop(0)
+        req.page_ids = matched_pages + fresh
+        req.cached_prefix_tokens = matched_tokens
+        req.prefill_done_tokens = matched_tokens
+        req.state = RequestState.PREFILLING
+        req.schedule_time = now
+        self._m.admitted_requests += 1
+        self._m.prefix_hit_tokens += matched_tokens
+        self._q_ewma = 0.9 * self._q_ewma + 0.1 * req.queue_time
+        return req
+
+    def _pool_fetch(self, req: Request, have_tokens: int):
+        """Extend a local prefix hit with pages from the distributed pool."""
+        ps = self.ecfg.page_size
+        hashes = chunk_hashes(req.prompt_tokens, ps)
+        start = have_tokens // ps
+        pages, tokens = [], 0
+        for i in range(start, len(hashes)):
+            if (i + 1) * ps >= req.prompt_len:
+                break
+            payload = self.kv_pool.fetch(hashes[i], self.engine_id)
+            if payload is None:
+                break
+            pids = self.alloc.allocate(1, self.clock())
+            if not pids:
+                break
+            k_page, v_page = payload
+            self.pool = PM.PagePool(
+                self.pool.k.at[:, pids[0]].set(k_page),
+                self.pool.v.at[:, pids[0]].set(v_page))
+            self.alloc.register_hash(pids[0], hashes[i])
+            pages.append(pids[0])
+            tokens += ps
+            self._m.remote_hit_tokens += ps
+        return pages, tokens
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_one(self, req: Request) -> None:
+        ecfg = self.ecfg
+        s = ecfg.chunk_size if ecfg.chunked_prefill else \
+            max(req.prompt_len, 1)
+        start = req.prefill_done_tokens
+        chunk = req.prompt_tokens[start:start + s]
+        chunk_len = len(chunk)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :chunk_len] = chunk
+        nb = ecfg.max_pages_per_seq
+        bt = np.full((1, nb), ecfg.num_pages, np.int32)  # OOB scratch page
+        bt[0, :len(req.page_ids)] = req.page_ids
+        aid = self._adapter_ids.get(req.lora_adapter or "", 0)
+        logits, self.pool = PM.prefill_step(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.int32(start), jnp.int32(chunk_len),
+            self.lora, jnp.asarray([aid], jnp.int32),
+            cfg=self.cfg, page_size=ecfg.page_size, impl=ecfg.impl)
+        req.prefill_done_tokens += chunk_len
+        if req.prefill_done_tokens >= req.prompt_len:
+            # register full prompt pages for prefix reuse + publish
+            self._register_prompt_pages(req)
+            tok = self._sample(logits, [req])[0]
+            now = self.clock()
+            req.output_tokens.append(int(tok))
+            req.first_token_time = now
+            req.state = RequestState.RUNNING
+            self.running.append(req)
+            self._note_tokens(req.prompt_len + 1)
+            self._maybe_finish(req)
+
+    def _register_prompt_pages(self, req: Request) -> None:
+        if not self.ecfg.prefix_caching:
+            return
+        ps = self.ecfg.page_size
+        hashes = chunk_hashes(req.prompt_tokens, ps)
+        for i, h in enumerate(hashes):
+            pid = req.page_ids[i]
+            if self.alloc.pages[pid].block_hash is None:
+                self.alloc.register_hash(pid, h)
+                if self.kv_pool is not None:
+                    self.kv_pool.publish(
+                        h, (np.asarray(self.pool.k[:, pid]),
+                            np.asarray(self.pool.v[:, pid])),
+                        self.engine_id, self.clock())
+
+    # ------------------------------------------------------------- decode
+    def _decode(self) -> None:
+        ecfg = self.ecfg
+        b = ecfg.max_batch
+        reqs = self.running[:b]
+        toks = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        bts = np.full((b, ecfg.max_pages_per_seq), ecfg.num_pages, np.int32)
+        active = np.zeros(b, bool)
+        aids = np.zeros(b, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i] = r.output_tokens[-1]
+            pos[i] = r.prompt_len + len(r.output_tokens) - 1
+            bts[i, :len(r.page_ids)] = r.page_ids
+            active[i] = True
+            aids[i] = self._adapter_ids.get(r.lora_adapter or "", 0)
+        logits, self.pool = PM.decode_batch(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bts), jnp.asarray(active), self.lora,
+            jnp.asarray(aids), cfg=self.cfg, page_size=ecfg.page_size,
+            impl=ecfg.impl)
+        new = self._sample(logits, reqs)
+        now = self.clock()
+        for i, r in enumerate(reqs):
+            r.output_tokens.append(int(new[i]))
+            r.token_times.append(now)
+            # grow pages if the next token crosses a page boundary
+            nxt = r.prompt_len + len(r.output_tokens)
+            if self._pages_for(nxt + 1) > len(r.page_ids):
+                pid = self.alloc.allocate(1, now)
+                if pid is None:
+                    self._preempt(r)
+                    continue
+                r.page_ids += pid
+            self._maybe_finish(r)
+        self._note_tokens(len(reqs))
+
+    def _sample(self, logits, reqs) -> np.ndarray:
+        b = logits.shape[0]
+        temps = np.zeros(b, np.float32)
+        tops = np.ones(b, np.float32)
+        for i, r in enumerate(reqs[:b]):
+            temps[i] = r.sampling.temperature
+            tops[i] = r.sampling.top_p
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(sample(logits, sub, jnp.asarray(temps),
+                                 top_k=0, top_p=jnp.asarray(tops)))
+
+    def _maybe_finish(self, req: Request) -> None:
+        sp = req.sampling
+        done = len(req.output_tokens) >= sp.max_new_tokens or (
+            sp.stop_token is not None
+            and req.output_tokens[-1] == sp.stop_token)
+        if not done:
+            return
+        now = self.clock()
+        req.finish_time = now
+        req.state = RequestState.FINISHED
+        if req in self.running:
+            self.running.remove(req)
+        self.alloc.release(req.page_ids, now)
+        req.page_ids = []
+        self.finished.append(req)
+        self._m.finished_requests += 1
+        self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
+                          if self._lat_ewma else req.total_latency)
+
+    def _preempt(self, req: Request) -> None:
+        self.running.remove(req)
+        self.alloc.release(req.page_ids, self.clock())
+        req.page_ids = []
+        req.output_tokens = []
+        req.prefill_done_tokens = 0
+        req.state = RequestState.QUEUED
+        self.waiting.insert(0, req)
+        self._m.preemptions += 1
+
+    # ------------------------------------------------------------- step
+    def step(self) -> int:
+        """One scheduler iteration.  Returns #tokens produced."""
+        if self.prefilling is None:
+            self.prefilling = self._try_admit()
+        if self.prefilling is not None:
+            req = self.prefilling
+            self._prefill_one(req)
+            if req.state != RequestState.PREFILLING:
+                self.prefilling = None
+            return 1
+        if self.running:
+            n = len(self.running[:self.ecfg.max_batch])
+            self._decode()
+            return n
+        return 0
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.has_work:
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")
+
+    # ------------------------------------------------------------- metrics
+    def _note_tokens(self, n: int) -> None:
+        self._tok_window.append((self.clock(), n))
+        cutoff = self.clock() - 10.0
+        self._tok_window = [(t, c) for t, c in self._tok_window
+                            if t >= cutoff]
+
+    def metrics(self) -> EngineMetrics:
+        span = 10.0
+        tput = sum(c for _, c in self._tok_window) / span
+        return EngineMetrics(
+            num_running=len(self.running),
+            num_waiting=len(self.waiting),
+            kv_utilization=self.alloc.utilization,
+            tokens_per_sec=tput,
+            avg_latency=self._lat_ewma,
+            avg_queue_time=self._q_ewma,
+            admitted_requests=self._m.admitted_requests,
+            finished_requests=self._m.finished_requests,
+            preemptions=self._m.preemptions,
+            prefix_hit_tokens=self._m.prefix_hit_tokens,
+            remote_hit_tokens=self._m.remote_hit_tokens,
+            loaded_adapters=tuple(self.adapters))
+
+    def match_prefix_len(self, tokens) -> int:
+        """Prefix-cache coverage for router scoring (non-mutating)."""
+        return self.alloc.match_len(tokens)

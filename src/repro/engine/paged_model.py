@@ -1,0 +1,244 @@
+"""Jitted paged-KV forward passes for serving (uniform-attention archs).
+
+This is the engine's "vLLM model runner" role: prefill writes K/V into a
+global page pool through per-request block tables; decode batches one
+token per sequence through the Pallas paged-attention kernel.  Both are
+``lax.scan``s over the stacked layer parameters of a single-run config
+(DENSE or MOE pattern), reusing the substrate's MoE/MLP/norm code.
+
+High-density LoRA (paper §3.2.1) is applied in-batch: every request
+carries an adapter id into a gathered (adapter, d, r) x (adapter, r, out)
+pair on the q/v projections — adapter 0 is the zero (base-model) adapter,
+so mixed batches of base + N adapters run in one step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers, moe
+from repro.models import model as M
+from repro.models.config import DENSE, MOE, ModelConfig
+from repro.models.params import Spec, abstract_params, init_params
+
+
+def pageable(cfg: ModelConfig) -> bool:
+    """True when the paged path supports this config (uniform attn run)."""
+    return (len(cfg.layer_runs) == 1
+            and cfg.layer_runs[0][0] in (DENSE, MOE)
+            and cfg.num_codebooks == 0)
+
+
+class PagePool(NamedTuple):
+    k: jax.Array            # (L, P, page, Hkv, D)
+    v: jax.Array
+
+
+def init_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+              dtype=jnp.float32) -> PagePool:
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return PagePool(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------- LoRA
+def lora_specs(cfg: ModelConfig, n_adapters: int, rank: int) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "A_q": Spec((n_adapters, d, rank), (None, None, None), "zeros"),
+        "B_q": Spec((n_adapters, rank, h * hd), (None, None, None), "zeros"),
+        "A_v": Spec((n_adapters, d, rank), (None, None, None), "zeros"),
+        "B_v": Spec((n_adapters, rank, hkv * hd), (None, None, None),
+                    "zeros"),
+    }
+
+
+def init_lora(cfg: ModelConfig, n_adapters: int, rank: int,
+              dtype=jnp.float32):
+    return init_params(lora_specs(cfg, n_adapters, rank), jax.random.PRNGKey(7),
+                       dtype)
+
+
+def make_adapter(cfg: ModelConfig, rank: int, key: jax.Array,
+                 dtype=jnp.float32):
+    """A single random (non-zero) adapter's weights."""
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    a_scale = 1.0 / (d ** 0.5)
+    b_scale = 0.5 / (rank ** 0.5)       # strong enough to alter outputs
+    return {
+        "A_q": jax.random.normal(k1, (d, rank), dtype) * a_scale,
+        "B_q": jax.random.normal(k2, (rank, h * hd), dtype) * b_scale,
+        "A_v": jax.random.normal(k3, (d, rank), dtype) * a_scale,
+        "B_v": jax.random.normal(k4, (rank, hkv * hd), dtype) * b_scale,
+    }
+
+
+def _lora_delta(lora, which, x, adapter_ids):
+    """x: (B, S, d); adapter_ids: (B,) -> (B, S, out)."""
+    a = lora[f"A_{which}"][adapter_ids]          # (B, d, r)
+    b_ = lora[f"B_{which}"][adapter_ids]         # (B, r, out)
+    return jnp.einsum("bsr,bro->bso", jnp.einsum("bsd,bdr->bsr", x, a), b_)
+
+
+def _qkv_lora(p_attn, cfg, x, positions, lora, adapter_ids):
+    q, k, v = layers.attn_qkv(p_attn, cfg, x, positions)
+    if lora is not None:
+        b, s = x.shape[:2]
+        dq = _lora_delta(lora, "q", x, adapter_ids).reshape(
+            b, s, cfg.n_heads, cfg.head_dim)
+        dv = _lora_delta(lora, "v", x, adapter_ids).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim)
+        # note: LoRA delta applied post-rope on q is an approximation we
+        # avoid — recompute rope on the delta instead (rope is linear).
+        sin, cos = layers.rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+        q = q + layers.apply_rope(dq, sin, cos)
+        v = v + dv
+    return q, k, v
+
+
+# ---------------------------------------------------------------- prefill
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "page_size", "impl"),
+    donate_argnums=(1,))
+def prefill_step(params, pool: PagePool, tokens: jax.Array,
+                 block_table: jax.Array, ctx_len: jax.Array,
+                 chunk_len: jax.Array, lora=None,
+                 adapter_ids: Optional[jax.Array] = None, *,
+                 cfg: ModelConfig, page_size: int, impl: str = "pallas"
+                 ) -> Tuple[jax.Array, PagePool]:
+    """One (possibly chunked) prefill for ONE request.
+
+    tokens:      (1, s) current chunk (padded; ``chunk_len`` valid)
+    block_table: (1, NB) pages covering [0, ctx+s)
+    ctx_len:     scalar — tokens already in the pages (prefix cache +
+                 earlier chunks)
+    Returns (last-token logits (1, V), updated pool).
+    """
+    s = tokens.shape[1]
+    nb = block_table.shape[1]
+    positions = ctx_len + jnp.arange(s)[None]                  # (1, s)
+    x = M.embed(params, cfg, tokens)
+    ltype = cfg.layer_runs[0][0]
+
+    def body(x, xs):
+        p_l, kp_l, vp_l = xs
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _qkv_lora(p_l["attn"], cfg, h, positions, lora,
+                            adapter_ids)
+        # scatter the chunk's K/V into this layer's pages
+        tok_pos = (ctx_len + jnp.arange(s))                    # (s,)
+        in_range = jnp.arange(s) < chunk_len
+        pidx = jnp.where(in_range, block_table[0, tok_pos // page_size],
+                         kp_l.shape[0])                        # OOB -> drop
+        slot = tok_pos % page_size
+        kp_l = kp_l.at[pidx, slot].set(k[0], mode="drop")
+        vp_l = vp_l.at[pidx, slot].set(v[0], mode="drop")
+        # gather full context (ctx + chunk) for flash attention
+        k_all = kp_l[block_table[0]].reshape(1, nb * page_size,
+                                             cfg.n_kv_heads, cfg.head_dim)
+        v_all = vp_l[block_table[0]].reshape(1, nb * page_size,
+                                             cfg.n_kv_heads, cfg.head_dim)
+        o = _flash_dyn(q, k_all, v_all, ctx_len, chunk_len, impl)
+        a = layers.attn_out(p_l["attn"], o)
+        x = x + a
+        h2 = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if ltype == MOE:
+            f, _aux = moe.moe_ffn(p_l["moe"], cfg.moe, h2, cfg.act)
+        else:
+            f = layers.mlp(p_l["mlp"], h2, cfg.act)
+        return x + f, (kp_l, vp_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["run_0"], pool.k,
+                                               pool.v))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # last valid token's logits
+    last = jnp.take(x, jnp.maximum(chunk_len - 1, 0), axis=1)[:, None]
+    logits = M.unembed(params, cfg, last)[:, 0]
+    return logits, PagePool(k_new, v_new)
+
+
+def _flash_dyn(q, k_all, v_all, ctx_len, chunk_len, impl):
+    """flash attention where q sits at dynamic offset ctx_len.
+
+    The kernel wants a static q_offset; we instead fold the offset into
+    per-token positions by passing lengths = ctx+chunk and masking via
+    the ref-style path: positions of q are [ctx, ctx+s) which equals a
+    causal mask over k < ctx + 1 + i.  We reuse the kernel with
+    q_offset=0 by shifting: causal over absolute positions requires
+    q_offset=ctx (dynamic).  Pallas grid params must be static, so we
+    use the oracle for dynamic offsets — on TPU the engine pads chunks
+    to fixed boundaries making ctx static per compiled shape.
+    """
+    from repro.kernels import ref as kref
+    s = q.shape[1]
+    qpos = ctx_len + jnp.arange(s)
+    kpos = jnp.arange(k_all.shape[1])
+    mask = (kpos[None, :] <= qpos[:, None])[None]
+    mask &= (kpos < ctx_len + chunk_len)[None, None]
+    b, sq, h, d = q.shape
+    hkv = k_all.shape[2]
+    g = h // hkv
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_all.astype(jnp.float32))
+    logits = jnp.where(mask[:, None, None], logits, kref.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_all.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- decode
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "page_size", "impl"),
+    donate_argnums=(1,))
+def decode_batch(params, pool: PagePool, tokens: jax.Array,
+                 positions: jax.Array, block_tables: jax.Array,
+                 active: jax.Array, lora=None,
+                 adapter_ids: Optional[jax.Array] = None, *,
+                 cfg: ModelConfig, page_size: int, impl: str = "pallas"
+                 ) -> Tuple[jax.Array, PagePool]:
+    """One decode step for a batch.
+
+    tokens: (B,) int32; positions: (B,) next position (== current length);
+    block_tables: (B, NB); active: (B,) bool (padding slots excluded).
+    Returns (logits (B, V), updated pool).
+    """
+    b = tokens.shape[0]
+    positions_ = positions[:, None]                            # (B, 1)
+    x = M.embed(params, cfg, tokens[:, None])
+    lengths = jnp.where(active, positions + 1, 0).astype(jnp.int32)
+    bidx = jnp.arange(b)
+
+    def body(x, xs):
+        p_l, kp_l, vp_l = xs
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _qkv_lora(p_l["attn"], cfg, h, positions_, lora,
+                            adapter_ids)
+        pidx = jnp.where(active,
+                         block_tables[bidx, positions // page_size],
+                         kp_l.shape[0])                        # OOB -> drop
+        slot = positions % page_size
+        kp_l = kp_l.at[pidx, slot].set(k[:, 0], mode="drop")
+        vp_l = vp_l.at[pidx, slot].set(v[:, 0], mode="drop")
+        o = kops.paged_attention(q[:, 0], kp_l, vp_l, block_tables,
+                                 lengths, impl=impl)
+        a = layers.attn_out(p_l["attn"], o[:, None])
+        x = x + a
+        h2 = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if cfg.layer_runs[0][0] == MOE:
+            f, _aux = moe.moe_ffn(p_l["moe"], cfg.moe, h2, cfg.act)
+        else:
+            f = layers.mlp(p_l["mlp"], h2, cfg.act)
+        return x + f, (kp_l, vp_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["run_0"], pool.k,
+                                               pool.v))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = M.unembed(params, cfg, x)[:, 0]
+    return logits, PagePool(k_new, v_new)

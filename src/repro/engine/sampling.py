@@ -1,0 +1,32 @@
+"""Token sampling: greedy / temperature / top-k / top-p, batched."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def sample(logits: jax.Array, key: jax.Array, temperature: jax.Array,
+           top_k: int = 0, top_p: jax.Array = None) -> jax.Array:
+    """logits: (B, V); temperature: (B,). temperature<=0 -> greedy."""
+    b, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.maximum(temperature, 1e-4)[:, None]
+    scaled = logits / t
+    if top_k:
+        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    if top_p is not None:
+        sorted_ = jnp.sort(scaled, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < top_p[:, None], axis=-1)
+        cutoff = jnp.take_along_axis(sorted_, cutoff_idx[:, None], axis=-1)
+        scaled = jnp.where(scaled >= cutoff, scaled, -jnp.inf)
+    keys = jax.random.split(key, b)
+    sampled = jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(
+        keys, scaled)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)

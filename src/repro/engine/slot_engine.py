@@ -1,0 +1,201 @@
+"""Slot-based engine for non-pageable architectures (SSM / hybrid /
+codebook models).
+
+The paged engine requires uniform full-attention layers; xLSTM, Hymba,
+gemma3-style local:global patterns and MusicGen's codebook stream do
+not fit page tables.  The SlotEngine serves *any* ModelConfig with the
+substrate's contiguous per-slot caches (recurrent states double as the
+"KV cache" for SSM layers — constant-size, so slots never grow).
+
+Same handle contract as InferenceEngine (submit/step/metrics/
+match_prefix_len), so the gateway and control plane treat both alike.
+Prefix caching is not available here: an SSM has no token-addressable
+KV — the pool-equivalent is recurrent-state snapshotting at fixed
+strides (see DESIGN.md §4, noted as partial support).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.engine import EngineMetrics
+from repro.engine.request import Request, RequestState
+from repro.engine.sampling import sample
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class SlotEngineConfig:
+    max_slots: int = 4
+    max_len: int = 256
+    dtype: str = "float32"
+
+
+class SlotEngine:
+    def __init__(self, cfg: ModelConfig, ecfg: SlotEngineConfig = None,
+                 params=None, clock: Callable[[], float] = time.monotonic,
+                 engine_id: str = "slot-0", seed: int = 0):
+        self.cfg = cfg
+        self.ecfg = ecfg or SlotEngineConfig()
+        self.clock = clock
+        self.engine_id = engine_id
+        dtype = jnp.dtype(self.ecfg.dtype)
+        self.params = params if params is not None else M.init(
+            cfg, jax.random.PRNGKey(seed), dtype)
+        self.caches = M.init_cache(cfg, self.ecfg.max_slots,
+                                   self.ecfg.max_len, dtype)
+        self.slots: List[Optional[Request]] = [None] * self.ecfg.max_slots
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self._key = jax.random.PRNGKey(seed + 1)
+        self._fin = 0
+        self._lat_ewma = 0.0
+        self._tok_window: List[tuple] = []
+
+    # ------------------------------------------------------------ contract
+    def submit(self, req: Request) -> None:
+        if req.arrival_time == 0.0:
+            req.arrival_time = self.clock()
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or any(self.slots))
+
+    def match_prefix_len(self, tokens) -> int:
+        return 0                     # no token-addressable KV (SSM note)
+
+    def register_adapter(self, name, weights=None):   # parity no-op
+        pass
+
+    def unregister_adapter(self, name):
+        pass
+
+    # ------------------------------------------------------------ internals
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        toks = np.asarray([req.prompt_tokens], np.int32)
+        one_cache = M.init_cache(self.cfg, 1, self.ecfg.max_len,
+                                 jax.tree.leaves(self.caches)[0].dtype
+                                 if jax.tree.leaves(self.caches) else
+                                 jnp.float32)
+        logits, one_cache = M.prefill(self.params, self.cfg,
+                                      jnp.asarray(toks), one_cache)
+        # write the single-row cache into this slot's row
+        self.caches = jax.tree.map(
+            lambda c, n: c.at[:, slot].set(n[:, 0]) if c.ndim >= 2 else c,
+            self.caches, one_cache)
+        tok = self._sample(logits.reshape(1, -1), [req])[0]
+        now = self.clock()
+        tok = tok.tolist() if self.cfg.num_codebooks else int(tok)
+        self._push_token(req, tok, now, first=True)
+        req.state = RequestState.RUNNING
+        req.schedule_time = now
+        req.slot = slot
+        self.slots[slot] = req
+
+    def _push_token(self, req: Request, tok, now, first=False) -> None:
+        if self.cfg.num_codebooks:
+            req.output_tokens.append(tok)
+        else:
+            req.output_tokens.append(int(tok))
+        if first:
+            req.first_token_time = now
+        else:
+            req.token_times.append(now)
+        self._tok_window.append((now, 1))
+
+    def _sample(self, logits, reqs) -> np.ndarray:
+        if self.cfg.num_codebooks:
+            # greedy per codebook
+            lg = logits.reshape(len(reqs), self.cfg.num_codebooks, -1)
+            return np.asarray(jnp.argmax(lg, -1), np.int32)
+        b = logits.shape[0]
+        temps = np.zeros(b, np.float32)
+        for i, r in enumerate(reqs[:b]):
+            temps[i] = r.sampling.temperature
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(sample(logits, sub, jnp.asarray(temps)))
+
+    def step(self) -> int:
+        # admit
+        while self.waiting and None in self.slots:
+            req = self.waiting[0]
+            total = req.prompt_len + req.sampling.max_new_tokens
+            if total > self.ecfg.max_len:
+                req.state = RequestState.FAILED
+                self.waiting.pop(0)
+                continue
+            self.waiting.pop(0)
+            self._prefill_into_slot(req, self.slots.index(None))
+            self._maybe_finish(self.slots[req.slot])
+            return 1
+        # batched decode over active slots
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return 0
+        b = self.ecfg.max_slots
+        if self.cfg.num_codebooks:
+            toks = np.zeros((b, self.cfg.num_codebooks), np.int32)
+        else:
+            toks = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            last = r.output_tokens[-1]
+            toks[i] = last
+            pos[i] = r.prompt_len + len(r.output_tokens) - 1
+        logits, self.caches = M.decode_step(
+            self.params, self.cfg, self.caches, jnp.asarray(toks),
+            jnp.asarray(pos))
+        new = self._sample(np.asarray(logits).reshape(b, -1)
+                           if not self.cfg.num_codebooks else logits,
+                           [r or Request(prompt_tokens=[0])
+                            for r in self.slots])
+        now = self.clock()
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            tok = new[i].tolist() if self.cfg.num_codebooks else new[i]
+            self._push_token(r, tok, now)
+            self._maybe_finish(r)
+        return len(active)
+
+    def _maybe_finish(self, req: Request) -> None:
+        if req is None or \
+                len(req.output_tokens) < req.sampling.max_new_tokens:
+            return
+        req.finish_time = self.clock()
+        req.state = RequestState.FINISHED
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+            req.slot = -1
+        self.finished.append(req)
+        self._fin += 1
+        self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
+                          if self._lat_ewma else req.total_latency)
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.has_work:
+                return
+            self.step()
+        raise RuntimeError("slot engine did not drain")
+
+    def metrics(self) -> EngineMetrics:
+        now = self.clock()
+        self._tok_window = [(t, c) for t, c in self._tok_window
+                            if t >= now - 10.0]
+        used = sum(r is not None for r in self.slots)
+        return EngineMetrics(
+            num_running=used, num_waiting=len(self.waiting),
+            kv_utilization=used / max(self.ecfg.max_slots, 1),
+            tokens_per_sec=sum(c for _, c in self._tok_window) / 10.0,
+            avg_latency=self._lat_ewma,
+            finished_requests=self._fin)

@@ -1,0 +1,4 @@
+# Serving compute hot-spots (the role vLLM's CUDA paged-attention /
+# flash kernels play in the paper's stack), adapted to TPU as Pallas
+# kernels.  ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
+from repro.kernels.ops import flash_attention, paged_attention  # noqa: F401

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles shape padding (seq lens to block multiples, batch page tables),
+platform dispatch (interpret=True off-TPU so CPU tests execute the real
+kernel bodies), and an ``impl`` switch so every call site can be A/B'd
+against the pure-jnp oracle (impl="ref").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    *, impl: str = "pallas"):
+    """Decode attention over paged KV.  See kernels/ref.py for shapes."""
+    if impl == "ref":
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                       lengths)
+    return _paged(q, k_pages, v_pages, block_tables, lengths,
+                  interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, lengths, *, window: int = 0, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    impl: str = "pallas"):
+    """Causal/windowed prefill attention with automatic seq padding."""
+    if impl == "ref":
+        return ref.flash_prefill_ref(q, k, v, lengths, window=window,
+                                     q_offset=q_offset)
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(sk, 8))
+    sq_p = _round_up(sq, bq)
+    sk_p = _round_up(sk, bk)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    out = _flash(q, k, v, lengths, window=window, q_offset=q_offset,
+                 block_q=bq, block_k=bk, interpret=not _on_tpu())
+    return out[:, :sq]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

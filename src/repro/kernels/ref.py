@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth for tests/test_kernels.py shape/dtype sweeps
+(assert_allclose vs the interpret-mode kernels) and the reference path
+the engine falls back to on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array
+                        ) -> jax.Array:
+    """Decode attention over a paged KV cache.
+
+    q:            (B, H, D)         one query token per sequence
+    k_pages:      (P, page, Hkv, D) global page pool
+    v_pages:      (P, page, Hkv, D)
+    block_tables: (B, NB) int32     page ids per sequence (padded arbitrary)
+    lengths:      (B,) int32        tokens in cache (incl. current token)
+    returns:      (B, H, D)
+    """
+    b, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    g = h // hkv
+    # gather pages -> contiguous (B, NB*page, Hkv, D)
+    k = k_pages[block_tables].reshape(b, nb * page, hkv, d)
+    v = v_pages[block_tables].reshape(b, nb * page, hkv, d)
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    valid = jnp.arange(nb * page)[None] < lengths[:, None]        # (B, K)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      lengths: jax.Array, *, window: int = 0,
+                      q_offset: int = 0) -> jax.Array:
+    """Causal (optionally sliding-window) prefill attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D); lengths: (B,) valid k tokens.
+    ``q_offset`` places the query chunk at absolute positions
+    [q_offset, q_offset+Sq) — used by chunked prefill.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    mask = mask[None] & (kpos[None, None, :] < lengths[:, None, None])
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows with no valid key (qpos >= length under a window) define to 0
+    any_valid = mask.any(-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

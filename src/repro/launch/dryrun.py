@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) ---
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, InputShape,  # noqa: E402
+                           get_config, shape_applicable)
+from repro.launch import analytic, hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models import sharding  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.training.optimizer import AdamWConfig, AdamWState  # noqa: E402
+from repro.training.train_loop import TrainState, make_train_step  # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) combination this lowers
+and compiles the real step function against ShapeDtypeStruct stand-ins
+(zero device allocation), proving the distribution config is coherent:
+shardings legal, collectives supported, memory within per-chip HBM.
+
+Outputs one JSON record per case (memory analysis, cost analysis,
+trip-count-corrected collective bytes, analytic roofline terms) into
+``--out`` for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+
+DTYPE = jnp.bfloat16
+
+
+def _scalar_axes():
+    return ()
+
+
+def _axes_like(tree, axes_leaf_tree):
+    return axes_leaf_tree
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, ctx: sharding.ShardingCtx
+                ) -> Tuple[Dict, Dict]:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for one case.  Returns (kwargs for .lower, axes info)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.num_codebooks) if cfg.num_codebooks else (b, s)
+    tok_axes = (("batch", "seq", None) if cfg.num_codebooks
+                else ("batch", "seq"))
+
+    def sds(shp, dt, axes):
+        return jax.ShapeDtypeStruct(
+            shp, dt, sharding=ctx.sharding_for(shp, axes))
+
+    if shape.kind == "train":
+        params_abs = M.abstract(cfg, DTYPE)
+        paxes = M.param_axes(cfg)
+        # sharding regime by model size:
+        #   < 8B : ZeRO-1 — weights replicated across data (TP only),
+        #          optimizer moments sharded data x model.  Kills the
+        #          per-layer FSDP weight all-gathers that dominate the
+        #          collective term for small models on 256 chips.
+        #   >= 8B: full FSDP (weights + moments 2D-sharded).
+        full_fsdp = cfg.param_count() >= 8e9
+        pctx = ctx if full_fsdp else sharding.ShardingCtx(
+            ctx.mesh, tuple(ctx.rules.items()), fsdp=False)
+        params = sharding.with_shardings(pctx, params_abs, paxes)
+        # bf16 Adam moments at 200B-scale (math stays f32 in the update)
+        opt_dtype = jnp.bfloat16 if cfg.param_count() >= 5e10 \
+            else jnp.float32
+        opt_abs = M.abstract(cfg, opt_dtype)
+        mu = sharding.with_shardings(ctx, opt_abs, paxes)
+        nu = sharding.with_shardings(ctx, opt_abs, paxes)
+        state = TrainState(params, AdamWState(
+            jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=ctx.sharding_for((), ())),
+            mu, nu))
+        batch = {
+            "tokens": sds(tok_shape, jnp.int32, tok_axes),
+            "labels": sds(tok_shape, jnp.int32, tok_axes),
+            "weights": sds((b, s), jnp.float32, ("batch", "seq")),
+        }
+        return {"state": state, "batch": batch}, {}
+
+    params_abs = M.abstract(cfg, DTYPE)
+    params = sharding.with_shardings(ctx, params_abs, M.param_axes(cfg))
+    if shape.kind == "prefill":
+        caches = sharding.with_shardings(
+            ctx, M.abstract_cache(cfg, b, s, DTYPE), M.cache_axes(cfg, b, s))
+        return {"params": params,
+                "tokens": sds(tok_shape, jnp.int32, tok_axes),
+                "caches": caches}, {}
+    # decode: ONE new token against a seq_len cache
+    caches = sharding.with_shardings(
+        ctx, M.abstract_cache(cfg, b, s, DTYPE), M.cache_axes(cfg, b, s))
+    dec_tok = ((b, cfg.num_codebooks) if cfg.num_codebooks else (b,))
+    dec_axes = (("batch", None) if cfg.num_codebooks else ("batch",))
+    return {"params": params, "caches": caches,
+            "tokens": sds(dec_tok, jnp.int32, dec_axes),
+            "positions": sds((b,), jnp.int32, ("batch",))}, {}
+
+
+def step_fn(cfg: ModelConfig, shape: InputShape, donate: bool = True):
+    """Returns (fn, donate_argnames).  Donation aliases the updated
+    train state / KV caches onto their inputs — without it the compiled
+    module holds input AND output copies of the biggest buffers
+    (§Perf iteration 1: musicgen decode 27.4 -> see EXPERIMENTS.md)."""
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        # microbatch big models: activation peak ~ 1/grad_accum
+        n = cfg.param_count()
+        accum = 1 if n < 1.2e9 else (4 if n < 12e9 else
+                                     (8 if n < 50e9 else 16))
+        ts = make_train_step(cfg, opt, remat=True, grad_accum=accum)
+
+        def train_step(state, batch):
+            return ts(state, batch)
+        return train_step, (("state",) if donate else ())
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens, caches):
+            return M.prefill(params, cfg, tokens, caches)
+        return prefill_step, (("caches",) if donate else ())
+
+    def serve_step(params, caches, tokens, positions):
+        return M.decode_step(params, cfg, caches, tokens, positions)
+    return serve_step, (("caches",) if donate else ())
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, rules: Optional[tuple] = None,
+             mla_absorb: Optional[bool] = None,
+             save_hlo: Optional[str] = None) -> Dict:
+    cfg = get_config(arch)
+    if mla_absorb is not None and cfg.mla is not None:
+        cfg = cfg.replace(mla_absorb=mla_absorb)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind in ("prefill", "decode"):
+        # inference weight layout: no per-step FSDP weight gathers
+        cfg = cfg.replace(inference_weight_layout=True)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    case = f"{arch}|{shape_name}|{mesh_name}"
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"case": case, "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    if rules is None:
+        rules = (sharding.LONG_CONTEXT_RULES if shape_name == "long_500k"
+                 else sharding.DEFAULT_RULES)
+    ctx = sharding.ShardingCtx(mesh, rules)
+    t0 = time.time()
+    try:
+        with mesh, sharding.use_sharding(ctx):
+            kwargs, _ = input_specs(cfg, shape, ctx)
+            fn, donate_names = step_fn(cfg, shape)
+            lowered = jax.jit(fn, donate_argnames=donate_names
+                              ).lower(**kwargs)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = hlo_analysis.collective_report(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        est = analytic.estimate(cfg, shape.kind, shape.global_batch,
+                                shape.seq_len)
+        terms = analytic.roofline_terms(est, coll.get("total", 0), chips)
+        per_dev_bytes = (mem.argument_size_in_bytes
+                         + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes
+                         - mem.alias_size_in_bytes)
+        rec = {
+            "case": case, "status": "ok",
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "chips": chips,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_bytes": per_dev_bytes,
+                "fits_16g_hbm": bool(per_dev_bytes < 16e9),
+            },
+            "cost_analysis": {
+                "flops_raw": cost.get("flops", 0.0),
+                "bytes_raw": cost.get("bytes accessed", 0.0),
+                "note": "XLA counts while bodies once; see analytic",
+            },
+            "collectives_per_device_bytes": coll,
+            "analytic": {
+                "flops": est.flops, "hbm_bytes": est.hbm_bytes,
+                "model_flops": est.model_flops,
+            },
+            "roofline": terms,
+        }
+        if verbose:
+            print(f"[OK] {case}: compile {rec['compile_s']}s, "
+                  f"{per_dev_bytes/1e9:.2f} GB/dev, "
+                  f"dominant={terms['dominant']}, "
+                  f"coll={coll.get('total',0)/1e6:.1f} MB/dev")
+            print("     memory_analysis:", mem)
+            print("     cost_analysis: flops=%.3e bytes=%.3e" %
+                  (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)))
+        return rec
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return {"case": case, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (10 assigned)")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(INPUT_SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="pod",
+                    choices=("pod", "multipod", "both"))
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--mla-absorb", action="store_true",
+                    help="use the absorbed MLA decode path")
+    args = ap.parse_args()
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_case(arch, shape, mp,
+                               mla_absorb=args.mla_absorb or None)
+                tag = rec["case"].replace("|", "_")
+                if args.mla_absorb:
+                    tag += "_absorb"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+                if rec["status"] == "skipped":
+                    print(f"[SKIP] {rec['case']}: {rec['reason']}")
+                elif rec["status"] == "error":
+                    print(f"[ERR] {rec['case']}: {rec['error']}")
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped "
+          f"(documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

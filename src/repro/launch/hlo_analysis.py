@@ -1,0 +1,167 @@
+"""Compiled-HLO analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so for
+scanned-layer models both its FLOPs and its collective traffic
+undercount by ~n_layers.  This module parses the optimized HLO text into
+computations, attributes collective ops to their enclosing while bodies,
+recovers trip counts from the loop conditions' compare-against-constant,
+and reports trip-count-corrected collective bytes per primitive kind.
+
+This is the "profile" of the §Perf loop: redundant all-gathers, layout
+copies around collectives, and reshape/transpose chatter all show up in
+the per-op table.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# header = "name (params...) -> result {"; params may nest parens
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    collective_bytes: Dict[str, int] = field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # cond, body
+    calls: List[str] = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+    return comps
+
+
+def _analyze_computation(comp: Computation) -> None:
+    for line in comp.lines:
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        for kind in COLLECTIVES:
+            # op name appears as `kind(` start of rhs expression
+            if re.search(rf"\s{kind}(-start|-done)?\(", rhs) or \
+                    rhs.lstrip().startswith(f"{kind}("):
+                if f"{kind}-done(" in rhs:
+                    continue        # avoid double count of async pairs
+                comp.collective_bytes[kind] = (
+                    comp.collective_bytes.get(kind, 0)
+                    + _shape_bytes(lhs + rhs.split("(")[0]))
+                break
+        wm = _WHILE_RE.search(s)
+        if wm:
+            comp.whiles.append((wm.group(1), wm.group(2)))
+        for cm in re.finditer(r"(?:call|fusion)\(.*?to_apply=%?([\w\.\-]+)",
+                              s):
+            comp.calls.append(cm.group(1))
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    consts = []
+    for line in comp.lines:
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_report(hlo_text: str) -> Dict[str, int]:
+    """Trip-count-corrected collective bytes by kind + total."""
+    comps = _split_computations(hlo_text)
+    for c in comps.values():
+        _analyze_computation(c)
+
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total_of(name: str, depth: int = 0) -> Dict[str, int]:
+        if name in memo or depth > 12:
+            return memo.get(name, {})
+        comp = comps.get(name)
+        if comp is None:
+            return {}
+        out = defaultdict(int)
+        for k, v in comp.collective_bytes.items():
+            out[k] += v
+        for callee in comp.calls:
+            for k, v in total_of(callee, depth + 1).items():
+                out[k] += v
+        for cond, body in comp.whiles:
+            trips = _trip_count(comps, cond)
+            for k, v in total_of(body, depth + 1).items():
+                out[k] += v * trips
+        memo[name] = dict(out)
+        return memo[name]
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: sum everything once
+        out = defaultdict(int)
+        for c in comps.values():
+            for k, v in c.collective_bytes.items():
+                out[k] += v
+        result = dict(out)
+    else:
+        result = total_of(entry)
+    result["total"] = sum(v for k, v in result.items() if k != "total")
+    return result
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Rough opcode histogram of the entry module (perf-loop smell test:
+    count copies/transposes/reshapes near collectives)."""
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*[\w\[\],\{\}\s]*?\s([a-z][\w\-]*)\(", line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1]))

@@ -1,0 +1,20 @@
+"""Production mesh construction (TPU v5e; 256 chips/pod, 2 pods).
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — dryrun.py must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

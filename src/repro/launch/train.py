@@ -1,0 +1,64 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-0.6b``.
+
+On real hardware this runs the sharded train step on the production
+mesh; on this CPU container use --debug for a reduced config on a 1x1
+mesh (the full configs are exercised via dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced_config
+from repro.data import synthetic_lm_batches
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import model as M
+from repro.models import sharding
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_loop import TrainState, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced config on a debug mesh (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-json", default="")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.debug \
+        else get_config(args.arch)
+    mesh = make_debug_mesh() if args.debug \
+        else make_production_mesh(multi_pod=args.multi_pod)
+    ctx = sharding.ShardingCtx(mesh, sharding.DEFAULT_RULES)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    data = synthetic_lm_batches(cfg.vocab_size, args.batch, args.seq,
+                                num_codebooks=cfg.num_codebooks)
+    with mesh, sharding.use_sharding(ctx):
+        params = M.init(cfg, jax.random.PRNGKey(0))
+        state = TrainState(params, adamw_init(params))
+        step = jax.jit(make_train_step(cfg, opt_cfg, remat=not args.debug))
+        history = []
+        for i in range(args.steps):
+            state, metrics = step(state, next(data))
+            if i % 10 == 0 or i == args.steps - 1:
+                row = {"step": i,
+                       **{k: float(v) for k, v in metrics.items()}}
+                history.append(row)
+                print(row)
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(history, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Per-layer-type blocks: spec builders, cache shapes, and apply fns.
+
+Every layer type exposes:
+  * ``layer_specs(cfg, ltype)``            parameter Spec tree
+  * ``cache_shape(cfg, ltype, B, S)``      dict name -> (shape, axes) or {}
+  * ``apply_layer(p, cfg, ltype, x, ...)`` residual block forward
+
+``apply_layer`` runs in two modes:
+  * mode="full":   x (B, S, d), positions (B, S) — train / prefill.
+                   Fills ``cache`` (if given) for subsequent decode.
+  * mode="decode": x (B, 1, d), positions (B,) — one token against cache.
+
+Sliding-window layers keep a ring-buffer cache of size ``window`` with an
+explicit per-slot absolute-position array (keys are roped at write time,
+so RoPE stays consistent across ring wraparound).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as C
+from repro.models import layers, mla, moe, ssm
+from repro.models.params import Spec
+
+
+# ------------------------------------------------------------------ specs
+def layer_specs(cfg: C.ModelConfig, ltype: str) -> dict:
+    d = cfg.d_model
+    inf = cfg.inference_weight_layout
+    ln = layers.norm_spec(d)
+    if ltype in (C.DENSE, C.SWA):
+        return {"ln1": ln, "attn": layers.attn_specs(cfg),
+                "ln2": ln, "mlp": layers.mlp_specs(d, cfg.d_ff, inf)}
+    if ltype == C.MOE:
+        return {"ln1": ln, "attn": layers.attn_specs(cfg),
+                "ln2": ln, "moe": moe.moe_specs(d, cfg.moe, inf)}
+    if ltype == C.MLA_DENSE:
+        # deepseek-v2 layer 0: dense FFN sized like shared+routed width
+        f = cfg.d_ff if cfg.d_ff else cfg.moe.d_expert * 4
+        return {"ln1": ln, "mla": mla.mla_specs(cfg),
+                "ln2": ln, "mlp": layers.mlp_specs(d, f, inf)}
+    if ltype == C.MLA_MOE:
+        return {"ln1": ln, "mla": mla.mla_specs(cfg),
+                "ln2": ln, "moe": moe.moe_specs(d, cfg.moe, inf)}
+    if ltype in (C.HYMBA, C.HYMBA_GLOBAL):
+        return {"ln1": ln, "attn": layers.attn_specs(cfg),
+                "mamba": ssm.mamba_specs(cfg),
+                "ln2": ln, "mlp": layers.mlp_specs(d, cfg.d_ff, inf)}
+    if ltype == C.MLSTM:
+        return {"ln1": ln, "mlstm": ssm.mlstm_specs(cfg)}
+    if ltype == C.SLSTM:
+        f = int(cfg.xlstm.slstm_proj_factor * d)
+        return {"ln1": ln, "slstm": ssm.slstm_specs(cfg),
+                "ln2": ln, "mlp": layers.mlp_specs(d, f, inf)}
+    raise ValueError(f"unknown layer type {ltype}")
+
+
+# ------------------------------------------------------------------ caches
+def _kv_cache(cfg, batch, length) -> Dict[str, Tuple[tuple, tuple]]:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    axes = ("batch", "cache_seq", "kv_heads", None)
+    return {"k": ((batch, length, hkv, hd), axes),
+            "v": ((batch, length, hkv, hd), axes)}
+
+
+def _window_cache(cfg, batch) -> Dict[str, Tuple[tuple, tuple]]:
+    w = cfg.sliding_window
+    c = _kv_cache(cfg, batch, w)
+    c["pos"] = ((batch, w), ("batch", None))
+    return c
+
+
+def cache_shape(cfg: C.ModelConfig, ltype: str, batch: int,
+                cache_len: int) -> Dict[str, Tuple[tuple, tuple]]:
+    """dict of cache field -> ((shape), (logical axes)).  {} = stateless."""
+    if ltype in (C.DENSE, C.MOE):
+        return _kv_cache(cfg, batch, cache_len)
+    if ltype == C.SWA:
+        return _window_cache(cfg, batch)
+    if ltype in (C.MLA_DENSE, C.MLA_MOE):
+        m = cfg.mla
+        return {"c_kv": ((batch, cache_len, m.kv_lora_rank),
+                         ("batch", "cache_seq", None)),
+                "k_rope": ((batch, cache_len, m.qk_rope_head_dim),
+                           ("batch", "cache_seq", None))}
+    if ltype == C.HYMBA:
+        return {**_window_cache(cfg, batch),
+                **ssm.mamba_state_shape(cfg, batch)}
+    if ltype == C.HYMBA_GLOBAL:
+        return {**_kv_cache(cfg, batch, cache_len),
+                **ssm.mamba_state_shape(cfg, batch)}
+    if ltype == C.MLSTM:
+        return ssm.mlstm_state_shape(cfg, batch)
+    if ltype == C.SLSTM:
+        return ssm.slstm_state_shape(cfg, batch)
+    raise ValueError(f"unknown layer type {ltype}")
+
+
+def init_cache(cfg: C.ModelConfig, ltype: str, batch: int, cache_len: int,
+               dtype=jnp.float32) -> dict:
+    out = {}
+    for name, (shape, _axes) in cache_shape(cfg, ltype, batch, cache_len).items():
+        if name == "pos":
+            out[name] = jnp.full(shape, -1, jnp.int32)
+        else:
+            out[name] = jnp.zeros(shape, dtype)
+    return out
+
+
+# ------------------------------------------------------------------ attention paths
+def _attn_full(p, cfg, x, positions, cache, window: int):
+    """Full-sequence attention (train/prefill); optionally fill cache."""
+    s = x.shape[1]
+    q, k, v = layers.attn_qkv(p, cfg, x, positions)
+    o = layers.attn_causal(q, k, v, window=window,
+                           softcap=cfg.attn_logit_softcap)
+    if cache is not None:
+        if "pos" in cache:  # ring buffer: scatter the last `window` tokens
+            w = cfg.sliding_window
+            slots = positions % w                              # (B, S)
+            keep_from = jnp.maximum(s - w, 0)
+            b = x.shape[0]
+            bidx = jnp.arange(b)[:, None]
+            # only the last w tokens may land in the ring; earlier tokens
+            # would collide on slots — mask them out of the scatter.
+            sel = jnp.arange(s)[None, :] >= keep_from
+            tgt = jnp.where(sel, slots, w)                     # w = OOB drop
+            cache = dict(cache)
+            cache["k"] = cache["k"].at[bidx, tgt].set(k, mode="drop")
+            cache["v"] = cache["v"].at[bidx, tgt].set(v, mode="drop")
+            cache["pos"] = cache["pos"].at[bidx, tgt].set(
+                positions, mode="drop")
+        else:
+            cache = dict(cache)
+            cache["k"] = cache["k"].at[:, :s].set(k)
+            cache["v"] = cache["v"].at[:, :s].set(v)
+    return layers.attn_out(p, o), cache
+
+
+def _attn_decode(p, cfg, x, positions, cache, window: int):
+    """One-token decode against a (possibly ring-buffer) cache."""
+    b = x.shape[0]
+    q, k, v = layers.attn_qkv(p, cfg, x, positions[:, None])
+    bidx = jnp.arange(b)
+    cache = dict(cache)
+    if "pos" in cache:
+        w = cfg.sliding_window
+        slot = positions % w
+        cache["k"] = cache["k"].at[bidx, slot].set(k[:, 0])
+        cache["v"] = cache["v"].at[bidx, slot].set(v[:, 0])
+        cache["pos"] = cache["pos"].at[bidx, slot].set(positions)
+        kpos = cache["pos"]                                    # (B, w)
+        valid = (kpos >= 0) & (kpos <= positions[:, None]) \
+            & (kpos > positions[:, None] - w)
+        mask = valid[:, None, :]
+    else:
+        cache["k"] = cache["k"].at[bidx, positions].set(k[:, 0])
+        cache["v"] = cache["v"].at[bidx, positions].set(v[:, 0])
+        mask = layers.decode_mask(positions, cache["k"].shape[1],
+                                  window=window)
+    o = layers.attention(q, cache["k"], cache["v"], mask,
+                         softcap=cfg.attn_logit_softcap)
+    return layers.attn_out(p, o), cache
+
+
+# ------------------------------------------------------------------ apply
+def apply_layer(p: dict, cfg: C.ModelConfig, ltype: str, x: jax.Array,
+                positions: jax.Array, cache: Optional[dict],
+                mode: str) -> Tuple[jax.Array, Optional[dict], dict]:
+    """Residual block.  Returns (x, new_cache, aux_losses)."""
+    aux: dict = {}
+    full = mode == "full"
+
+    # ---- token mixer sublayer
+    if ltype in (C.DENSE, C.SWA, C.MOE):
+        window = cfg.sliding_window if ltype == C.SWA else 0
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if full:
+            a, cache = _attn_full(p["attn"], cfg, h, positions, cache, window)
+        else:
+            a, cache = _attn_decode(p["attn"], cfg, h, positions, cache, window)
+        x = x + a
+    elif ltype in (C.MLA_DENSE, C.MLA_MOE):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if full:
+            a, cache = mla.mla_full(p["mla"], cfg, h, positions, cache,
+                                    absorb=cfg.mla_absorb)
+        else:
+            a, cache = mla.mla_decode(p["mla"], cfg, h, positions, cache,
+                                      absorb=cfg.mla_absorb)
+        x = x + a
+    elif ltype in (C.HYMBA, C.HYMBA_GLOBAL):
+        window = cfg.sliding_window if ltype == C.HYMBA else 0
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_cache = {k: v for k, v in (cache or {}).items()
+                      if k in ("k", "v", "pos")} or None
+        ssm_state = {k: v for k, v in (cache or {}).items()
+                     if k in ("conv", "h")}
+        if full:
+            a, attn_cache = _attn_full(p["attn"], cfg, h, positions,
+                                       attn_cache, window)
+            m_out, ssm_state = ssm.mamba_seq(p["mamba"], cfg, h, ssm_state
+                                             or _fresh_mamba(cfg, h))
+        else:
+            a, attn_cache = _attn_decode(p["attn"], cfg, h, positions,
+                                         attn_cache, window)
+            m_out, ssm_state = ssm.mamba_step(p["mamba"], cfg, h[:, 0],
+                                              ssm_state)
+            m_out = m_out[:, None, :]
+        x = x + 0.5 * (a + m_out)
+        cache = {**(attn_cache or {}), **ssm_state} if cache is not None else None
+    elif ltype == C.MLSTM:
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        st = cache if cache else _fresh_mlstm(cfg, h)
+        if full:
+            a, st = ssm.mlstm_seq(p["mlstm"], cfg, h, st)
+        else:
+            a, st = ssm.mlstm_step(p["mlstm"], cfg, h[:, 0], st)
+            a = a[:, None, :]
+        x = x + a
+        cache = st if cache is not None else None
+        return x, cache, aux                      # no FFN sublayer
+    elif ltype == C.SLSTM:
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        st = cache if cache else _fresh_slstm(cfg, h)
+        if full:
+            a, st = ssm.slstm_seq(p["slstm"], cfg, h, st)
+        else:
+            a, st = ssm.slstm_step(p["slstm"], cfg, h[:, 0], st)
+            a = a[:, None, :]
+        x = x + a
+        cache = st if cache is not None else None
+    else:
+        raise ValueError(f"unknown layer type {ltype}")
+
+    # ---- FFN sublayer
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, aux = moe.moe_ffn(p["moe"], cfg.moe, h, cfg.act)
+    else:
+        f = layers.mlp(p["mlp"], h, cfg.act)
+    return x + f, cache, aux
+
+
+def _fresh_mamba(cfg, x):
+    return {k: jnp.zeros(s, x.dtype) if k != "pos" else None
+            for k, (s, _) in ssm.mamba_state_shape(cfg, x.shape[0]).items()}
+
+
+def _fresh_mlstm(cfg, x):
+    return {k: jnp.zeros(s, jnp.float32)
+            for k, (s, _) in ssm.mlstm_state_shape(cfg, x.shape[0]).items()}
+
+
+def _fresh_slstm(cfg, x):
+    return {k: jnp.zeros(s, jnp.float32)
+            for k, (s, _) in ssm.slstm_state_shape(cfg, x.shape[0]).items()}

@@ -1,0 +1,302 @@
+"""Shared NN building blocks: norms, RoPE, activations, GQA attention, MLP.
+
+All functions are pure; parameters arrive as pytrees built from
+``repro.models.params.Spec`` trees.  Attention supports full-causal,
+sliding-window, and decode-over-cache modes with fp32 softmax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale) + bias).astype(dtype)
+
+
+def norm_spec(d: int) -> Spec:
+    return Spec((d,), (None,), "zeros")
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """(sin, cos) of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); sin/cos: (..., S, D//2) broadcast over heads."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------- masks
+def causal_mask(sq: int, sk: int, q_offset=0, window: int = 0) -> jax.Array:
+    """(sq, sk) boolean mask. ``q_offset`` shifts query positions (chunked
+    prefill); ``window`` > 0 restricts to a sliding window."""
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def decode_mask(positions: jax.Array, sk: int, window: int = 0) -> jax.Array:
+    """(B, 1, sk) mask for decoding one token at ``positions`` (B,)."""
+    kpos = jnp.arange(sk)
+    m = kpos[None, :] <= positions[:, None]
+    if window:
+        m &= kpos[None, :] > (positions[:, None] - window)
+    return m[:, None, :]
+
+
+# ---------------------------------------------------------------- attention
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+              *, softcap: float = 0.0, scale: Optional[float] = None):
+    """Grouped-query attention core.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D); mask broadcastable to
+    (B, Sq, Sk).  Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask_b = jnp.broadcast_to(mask[:, None, None, :, :] if mask.ndim == 3
+                              else mask[None, None, None, :, :],
+                              logits.shape)
+    logits = jnp.where(mask_b, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attn_specs(cfg) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    em = "embed"          # 2D (model x data/FSDP) in both regimes
+    specs = {
+        "wq": Spec((d, h, hd), (em, "heads", None), "scaled", 0),
+        "wk": Spec((d, hkv, hd), (em, "kv_heads", None), "scaled", 0),
+        "wv": Spec((d, hkv, hd), (em, "kv_heads", None), "scaled", 0),
+        "wo": Spec((h, hd, d), ("heads", None, em), "scaled", 0),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = Spec((h, hd), ("heads", None), "zeros")
+        specs["bk"] = Spec((hkv, hd), ("kv_heads", None), "zeros")
+        specs["bv"] = Spec((hkv, hd), ("kv_heads", None), "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = norm_spec(hd)
+        specs["k_norm"] = norm_spec(hd)
+    return specs
+
+
+def attn_qkv(p: dict, cfg, x: jax.Array, positions: jax.Array):
+    """Project to roped (q, k, v).  x: (B, S, d); positions: (B, S)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def attn_out(p: dict, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ------------------------------------------------------- blockwise attention
+def attn_causal(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                window: int = 0, softcap: float = 0.0,
+                scale: Optional[float] = None, q_offset: int = 0,
+                block_q: int = 512, block_k: int = 512,
+                force_blockwise: bool = False) -> jax.Array:
+    """Causal (optionally windowed) attention that never materializes the
+    (Sq, Sk) score matrix for long sequences — the pure-JAX flash used by
+    train/prefill paths (the Pallas kernel is the serving-engine analogue;
+    this one must lower for the multi-pod dry-run on any backend).
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    if sq * sk <= 2048 * 2048 and not force_blockwise:
+        mask = causal_mask(sq, sk, q_offset=q_offset, window=window)[None]
+        return attention(q, k, v, mask, softcap=softcap, scale=scale)
+    return _blockwise(q, k, v, scale=scale, q_offset=q_offset,
+                      window=window, softcap=softcap, norm="softmax",
+                      block_q=block_q, block_k=block_k)
+
+
+def mlstm_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
+                   bias_q: jax.Array, bias_k: jax.Array,
+                   block_q: int = 512, block_k: int = 512) -> jax.Array:
+    """Parallel (quadratic) mLSTM form: gate-biased blockwise attention
+    with signed-sum normalization (xLSTM eq. 25-27).  bias_q = F_t
+    (cumulative log-forget), bias_k = i_s - F_s; entry bias = F_t-F_s+i_s.
+    k must arrive pre-scaled by 1/sqrt(dh) (as in the recurrent form)."""
+    return _blockwise(q, k, v, scale=1.0, q_offset=0, window=0, softcap=0.0,
+                      norm="mlstm", bias_q=bias_q, bias_k=bias_k,
+                      block_q=block_q, block_k=block_k)
+
+
+def _blockwise(q, k, v, *, scale, q_offset, window, softcap, norm,
+               bias_q=None, bias_k=None, block_q=512, block_k=512):
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sq_p = -(-sq // bq) * bq
+    sk_p = -(-sk // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+        if bias_q is not None:
+            bias_q = jnp.pad(bias_q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        if bias_k is not None:
+            bias_k = jnp.pad(bias_k, ((0, 0), (0, sk_p - sk), (0, 0)),
+                             constant_values=NEG_INF)
+    nq, nk = sq_p // bq, sk_p // bk
+    # stay in input dtype until per-block compute (f32 upfront doubles
+    # the scan-carried working set); shard heads over model when the
+    # count divides, else fall back to sequence-sharded q blocks.
+    from repro.models import sharding as _sh
+    qb = q.reshape(b, nq, bq, hkv, g, d)
+    qb = _sh.constrain(qb, ("batch", None, "seq", "kv_heads", None, None))
+    kb = k.reshape(b, nk, bk, hkv, d)
+    kb = _sh.constrain(kb, ("batch", None, None, "kv_heads", None))
+    vb = v.reshape(b, nk, bk, hkv, dv)
+    vb = _sh.constrain(vb, ("batch", None, None, "kv_heads", None))
+    bqb = (bias_q.reshape(b, nq, bq, hkv, g).astype(jnp.float32)
+           if bias_q is not None else None)
+    bkb = (bias_k.reshape(b, nk, bk, hkv).astype(jnp.float32)
+           if bias_k is not None else None)
+
+    def kv_body(carry, xs):
+        acc, m, l, qi, q_blk, bq_blk = carry
+        k_blk, v_blk, bk_blk, ki = xs
+        q32 = q_blk.astype(jnp.float32) * scale
+        k32 = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q32, k32)
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+        kpos = ki * bk + jnp.arange(bk)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < sk)
+        if window:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        mask = mask[None, None, None]                    # (1,1,1,bq,bk)
+        if norm == "softmax":
+            score = jnp.where(mask, logits, NEG_INF)
+            m_cur = jnp.max(score, axis=-1)
+            m_new = jnp.maximum(m, m_cur)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(mask, jnp.exp(score - m_new[..., None]), 0.0)
+        else:                                            # mlstm
+            bias = (bq_blk.transpose(0, 2, 3, 1)[..., :, None]
+                    + bk_blk.transpose(0, 2, 1)[:, :, None, None, :])
+            bias = jnp.where(mask, bias, NEG_INF)        # (b,hkv,g,bq,bk)
+            m_cur = jnp.max(bias, axis=-1)
+            m_new = jnp.maximum(m, m_cur)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(mask, logits * jnp.exp(bias - m_new[..., None]),
+                          0.0)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_blk)
+        return (acc, m_new, l, qi, q_blk, bq_blk), None
+
+    def q_body(_, xs):
+        q_blk, bq_blk, qi = xs
+        acc0 = jnp.zeros((b, hkv, g, bq, dv), jnp.float32)
+        m0 = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        (acc, m, l, *_), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0, qi, q_blk, bq_blk),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+             (bkb.swapaxes(0, 1) if bkb is not None
+              else jnp.zeros((nk, b, bk, hkv), jnp.float32)),
+             jnp.arange(nk)))
+        if norm == "softmax":
+            denom = jnp.maximum(l, 1e-30)
+        else:
+            denom = jnp.maximum(jnp.abs(l), 1.0)
+        return None, (acc / denom[..., None])
+
+    # remat the whole per-q-block kv sweep: scan-of-scan backward would
+    # otherwise store the (b,hkv,g,bq,dv) f32 accumulator for every
+    # (q_block, kv_block) pair — O(Sq·Sk) residuals.
+    q_body = jax.checkpoint(q_body, prevent_cse=False)
+    _, out = jax.lax.scan(
+        q_body, None,
+        (qb.swapaxes(0, 1),
+         (bqb.swapaxes(0, 1) if bqb is not None
+          else jnp.zeros((nq, b, bq, hkv, g), jnp.float32)),
+         jnp.arange(nq)))
+    # out: (nq, b, hkv, g, bq, dv) -> (b, sq, h, dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_p, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_specs(d: int, f: int, inference: bool = False) -> dict:
+    em = "embed"          # dense weights stay 2D-sharded (see moe.py
+    # for the expert-bank inference layout, where the win lives)
+    return {
+        "w_gate": Spec((d, f), (em, "mlp"), "scaled", 0),
+        "w_in": Spec((d, f), (em, "mlp"), "scaled", 0),
+        "w_out": Spec((f, d), ("mlp", em), "scaled", 0),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    g = a(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    return jnp.einsum("bsf,fd->bsd", g * h, p["w_out"])

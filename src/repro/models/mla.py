@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a per-token latent ``c_kv`` of rank ``kv_lora_rank``
+plus a shared roped key ``k_rope``; the decode cache stores only
+(c_kv, k_rope) — ~9x smaller than a GQA cache for deepseek-v2-236b.
+
+Two decode paths:
+  * ``absorb=False`` (paper-faithful / vLLM-v0.7-era): expand K/V from the
+    latent every step, run standard MHA.
+  * ``absorb=True`` (beyond-paper optimization, used by the perf loop):
+    fold W_uk into the query and W_uv into the output so attention runs
+    in latent space — per-step FLOPs drop from O(S·H·d_nope) expansion
+    to O(S·rank), and no (S, H, d) tensors are materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import MLAConfig, ModelConfig
+from repro.models.params import Spec
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    em = "embed"
+    specs = {
+        "w_dkv": Spec((d, m.kv_lora_rank), (em, None), "scaled", 0),
+        "kv_norm": layers.norm_spec(m.kv_lora_rank),
+        "w_krope": Spec((d, m.qk_rope_head_dim), (em, None), "scaled", 0),
+        "w_uk": Spec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                     (None, "heads", None), "scaled", 0),
+        "w_uv": Spec((m.kv_lora_rank, h, m.v_head_dim),
+                     (None, "heads", None), "scaled", 0),
+        "w_o": Spec((h, m.v_head_dim, d), ("heads", None, em), "scaled", 0),
+    }
+    if m.q_lora_rank:
+        specs["w_dq"] = Spec((d, m.q_lora_rank), (em, None), "scaled", 0)
+        specs["q_norm"] = layers.norm_spec(m.q_lora_rank)
+        specs["w_uq"] = Spec((m.q_lora_rank, h, qk),
+                             (None, "heads", None), "scaled", 0)
+    else:
+        specs["w_q"] = Spec((d, h, qk), (em, "heads", None), "scaled", 0)
+    return specs
+
+
+def _queries(p, cfg, x, positions):
+    """-> q_nope (B,S,H,dn), q_rope (B,S,H,dr)."""
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = layers.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]),
+                             p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    sin, cos = layers.rope_freqs(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg, x, positions):
+    """-> c_kv (B,S,rank), k_rope (B,S,dr)   (the decode-cache contents)."""
+    m = cfg.mla
+    c_kv = layers.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]),
+                           p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])
+    sin, cos = layers.rope_freqs(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, c_kv, k_rope, mask,
+                  *, absorb: bool = False):
+    """Attention of queries from ``x`` against latents (c_kv, k_rope).
+
+    c_kv: (B, Sk, rank); k_rope: (B, Sk, dr); mask: (B, Sq, Sk).
+    """
+    m = cfg.mla
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+
+    if absorb:
+        # fold W_uk into q:  logits = (q W_uk^T) c_kv + q_rope k_rope
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"])
+        logits = (jnp.einsum("bshr,bkr->bhsk", q_lat, c_kv)
+                  + jnp.einsum("bshr,bkr->bhsk", q_rope, k_rope))
+        logits = (logits * scale).astype(jnp.float32)
+        logits = jnp.where(mask[:, None, :, :], logits, layers.NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx_lat = jnp.einsum("bhsk,bkr->bshr", probs.astype(x.dtype), c_kv)
+        o = jnp.einsum("bshr,rhv->bshv", ctx_lat, p["w_uv"])
+    else:
+        k_nope = jnp.einsum("bkr,rhn->bkhn", c_kv, p["w_uk"])
+        v = jnp.einsum("bkr,rhv->bkhv", c_kv, p["w_uv"])
+        k_rope_b = jnp.broadcast_to(
+            k_rope[:, :, None, :],
+            k_rope.shape[:2] + (cfg.n_heads, m.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        o = layers.attention(q, k, v, mask, scale=scale)
+    return jnp.einsum("bshv,hvd->bsd", o, p["w_o"])
+
+
+def mla_full(p, cfg, x, positions, cache=None, *, absorb=False):
+    """Train/prefill path: compute latents from x, optionally fill cache.
+
+    Uses the expanded-KV blockwise-causal path (never materializes the
+    S x S score matrix); ``absorb`` only changes the decode path.
+    """
+    m = cfg.mla
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    k_nope = jnp.einsum("bkr,rhn->bkhn", c_kv, p["w_uk"])
+    v = jnp.einsum("bkr,rhv->bkhv", c_kv, p["w_uv"])
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, :, None, :],
+        k_rope.shape[:2] + (cfg.n_heads, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = layers.attn_causal(q, k, v, scale=scale)
+    out = jnp.einsum("bshv,hvd->bsd", o, p["w_o"])
+    if cache is not None:
+        s = c_kv.shape[1]
+        cache = {"c_kv": cache["c_kv"].at[:, :s].set(c_kv),
+                 "k_rope": cache["k_rope"].at[:, :s].set(k_rope)}
+    return out, cache
+
+
+def mla_decode(p, cfg, x, positions, cache, *, absorb=False):
+    """One-token decode: write latent at ``positions``, attend over cache."""
+    b = x.shape[0]
+    c_new, kr_new = _latents(p, cfg, x, positions[:, None])
+    bidx = jnp.arange(b)
+    cache = {"c_kv": cache["c_kv"].at[bidx, positions].set(c_new[:, 0]),
+             "k_rope": cache["k_rope"].at[bidx, positions].set(kr_new[:, 0])}
+    mask = layers.decode_mask(positions, cache["c_kv"].shape[1])
+    out = mla_attention(p, cfg, x, positions[:, None], cache["c_kv"],
+                        cache["k_rope"], mask, absorb=absorb)
+    return out, cache

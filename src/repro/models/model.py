@@ -1,0 +1,278 @@
+"""Composable decoder-only model over run-grouped scanned layers.
+
+The model executes ``cfg.layer_runs`` — maximal runs of identical layer
+types — each as one ``lax.scan`` over stacked per-layer params (and
+stacked caches).  This keeps compile units small even for 60-layer
+models and heterogeneous patterns (gemma3's 5:1 local:global, hymba's
+3 global layers, xlstm's 7:1 mLSTM:sLSTM).
+
+Entry points:
+  * ``loss_fn``       train_4k           (full causal, no cache)
+  * ``prefill``       prefill_32k        (full causal, fills cache)
+  * ``decode_step``   decode_32k/long_500k (1 token against cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, layers, sharding
+from repro.models import config as C
+from repro.models.params import (Spec, abstract_params, axes_tree,
+                                 init_params, map_specs_with_path,
+                                 param_count, stack_specs)
+
+AUX_KEYS = {
+    C.MOE: ("moe_load_balance", "moe_router_z"),
+    C.MLA_MOE: ("moe_load_balance", "moe_router_z"),
+}
+
+
+# ===================================================================== specs
+def model_specs(cfg: C.ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {}
+    if cfg.num_codebooks:
+        specs["embedding"] = Spec((cfg.num_codebooks, v, d),
+                                  (None, "vocab", None), "embed")
+    else:
+        specs["embedding"] = Spec((v, d), ("vocab", "embed"), "embed")
+    for i, (ltype, n) in enumerate(cfg.layer_runs):
+        specs[f"run_{i}"] = stack_specs(blocks.layer_specs(cfg, ltype), n,
+                                        "layers")
+    specs["final_norm"] = layers.norm_spec(d)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks:
+            specs["lm_head"] = Spec((d, cfg.num_codebooks, v),
+                                    ("embed", None, "vocab"), "scaled", 0)
+        else:
+            specs["lm_head"] = Spec((d, v), ("embed", "vocab"), "scaled", 0)
+    return specs
+
+
+def init(cfg: C.ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return init_params(model_specs(cfg), key, dtype)
+
+
+def abstract(cfg: C.ModelConfig, dtype=jnp.float32):
+    return abstract_params(model_specs(cfg), dtype)
+
+
+def param_axes(cfg: C.ModelConfig):
+    return axes_tree(model_specs(cfg))
+
+
+def count_params(cfg: C.ModelConfig, active_only: bool = False) -> int:
+    """Total (or MoE-active) parameter count, from the spec tree."""
+    total = 0
+
+    def visit(path: str, s: Spec):
+        nonlocal total
+        n = 1
+        for dim in s.shape:
+            n *= dim
+        if active_only and cfg.moe is not None and "/experts/" in path:
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+        return None
+
+    map_specs_with_path(visit, model_specs(cfg))
+    return total
+
+
+# ===================================================================== cache
+def cache_struct(cfg: C.ModelConfig, batch: int, cache_len: int):
+    """[(run cache shapes dict) ...] — name -> ((n, *shape), (axes))."""
+    out = []
+    for ltype, n in cfg.layer_runs:
+        shapes = blocks.cache_shape(cfg, ltype, batch, cache_len)
+        out.append({name: ((n,) + shape, ("layers",) + axes)
+                    for name, (shape, axes) in shapes.items()})
+    return out
+
+
+def init_cache(cfg, batch, cache_len, dtype=jnp.float32) -> List[dict]:
+    caches = []
+    for run in cache_struct(cfg, batch, cache_len):
+        c = {}
+        for name, (shape, _axes) in run.items():
+            if name == "pos":
+                c[name] = jnp.full(shape, -1, jnp.int32)
+            elif name in ("C", "n", "m", "h", "c"):   # recurrent states: f32
+                c[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                c[name] = jnp.zeros(shape, dtype)
+        caches.append(c)
+    return caches
+
+
+def abstract_cache(cfg, batch, cache_len, dtype=jnp.float32) -> List[dict]:
+    out = []
+    for run in cache_struct(cfg, batch, cache_len):
+        c = {}
+        for name, (shape, _axes) in run.items():
+            if name == "pos":
+                c[name] = jax.ShapeDtypeStruct(shape, jnp.int32)
+            elif name in ("C", "n", "m", "h", "c"):
+                c[name] = jax.ShapeDtypeStruct(shape, jnp.float32)
+            else:
+                c[name] = jax.ShapeDtypeStruct(shape, dtype)
+        out.append(c)
+    return out
+
+
+def cache_axes(cfg, batch, cache_len) -> List[dict]:
+    return [{name: axes for name, (_s, axes) in run.items()}
+            for run in cache_struct(cfg, batch, cache_len)]
+
+
+# ===================================================================== embed
+def embed(params, cfg: C.ModelConfig, tokens: jax.Array) -> jax.Array:
+    emb = params["embedding"]
+    if cfg.num_codebooks:
+        # tokens: (B, S, K) — sum the K codebook embeddings (MusicGen).
+        parts = [emb[k][tokens[..., k]] for k in range(cfg.num_codebooks)]
+        return functools.reduce(jnp.add, parts)
+    return emb[tokens]
+
+
+def unembed(params, cfg: C.ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        emb = params["embedding"]
+        if cfg.num_codebooks:
+            return jnp.einsum("bsd,kvd->bskv", x, emb)
+        return jnp.einsum("bsd,vd->bsv", x, emb)
+    head = params["lm_head"]
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,dkv->bskv", x, head)
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+# ===================================================================== forward
+def _apply_run(run_p, cfg, ltype, x, positions, run_cache, mode, remat):
+    """Scan one run of identical layers.  run_cache: stacked dict or None.
+
+    The cache rides in the scan CARRY and is updated in place with
+    dynamic_update_slice — XLA aliases carried while-loop buffers, so the
+    cache is single-buffered.  (Passing it as xs/ys double-buffers the
+    whole KV cache: +16.4 GB/dev temp on musicgen decode_32k.)
+    """
+    aux0 = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS.get(ltype, ())}
+    has_cache = run_cache is not None
+
+    def body(carry, p_l):
+        xc, aux_acc, cache, i = carry
+        c_l = (jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            cache) if has_cache else None)
+        xc, c_new, aux = blocks.apply_layer(p_l, cfg, ltype, xc, positions,
+                                            c_l, mode)
+        if has_cache:
+            cache = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0), cache, c_new)
+        aux_acc = {k: aux_acc[k] + aux.get(k, 0.0) for k in aux_acc}
+        return (xc, aux_acc, cache, i + 1), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux, new_cache, _), _ = jax.lax.scan(
+        body, (x, aux0, run_cache, jnp.int32(0)), run_p)
+    return x, (new_cache if has_cache else None), aux
+
+
+def forward(params, cfg: C.ModelConfig, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            caches: Optional[List[dict]] = None, mode: str = "full",
+            remat: bool = False):
+    """Returns (hidden (B,S,d), new_caches, aux dict)."""
+    if mode == "full":
+        b, s = tokens.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = embed(params, cfg, tokens)
+        x = sharding.constrain(x, ("batch", "seq", None))
+    else:
+        # decode: tokens (B,) (or (B, K) for codebooks), positions (B,)
+        x = embed(params, cfg, tokens[:, None] if tokens.ndim == 1
+                  else tokens[:, None, :])
+        x = sharding.constrain(x, ("batch", None, None))
+    aux_total: Dict[str, jax.Array] = {}
+    new_caches = [] if caches is not None else None
+    for i, (ltype, _n) in enumerate(cfg.layer_runs):
+        run_cache = caches[i] if caches is not None else None
+        x, c_new, aux = _apply_run(params[f"run_{i}"], cfg, ltype, x,
+                                   positions, run_cache, mode, remat)
+        if mode == "full":
+            x = sharding.constrain(x, ("batch", "seq", None))
+        if caches is not None:
+            new_caches.append(c_new)
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, aux_total
+
+
+# ===================================================================== steps
+def _nll_chunk(params, cfg, x_chunk, labels_chunk):
+    """Cross-entropy over one sequence chunk (keeps the f32 logits
+    working set at (B, chunk, V) — a 262k-vocab model would otherwise
+    materialize multi-GB f32 logits for the full sequence)."""
+    logits = unembed(params, cfg, x_chunk).astype(jnp.float32)
+    logit_axes = (("batch", "seq", None, "vocab") if logits.ndim == 4
+                  else ("batch", "seq", "vocab"))
+    logits = sharding.constrain(logits, logit_axes)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_chunk[..., None], axis=-1)[..., 0]
+    if cfg.num_codebooks:
+        nll = nll.mean(-1)                      # average codebook losses
+    return nll
+
+
+def loss_fn(params, cfg: C.ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = True, ce_chunk: int = 512):
+    """batch: tokens, labels, weights.  Returns (loss, metrics)."""
+    x, _, aux = forward(params, cfg, batch["tokens"], mode="full",
+                        remat=remat)
+    labels = batch["labels"]
+    s = x.shape[1]
+    ck = min(ce_chunk, s)
+    if s % ck == 0 and s > ck:
+        nc = s // ck
+        xc = x.reshape((x.shape[0], nc, ck) + x.shape[2:]).swapaxes(0, 1)
+        lc = labels.reshape((labels.shape[0], nc, ck)
+                            + labels.shape[2:]).swapaxes(0, 1)
+
+        def body(_, xs):
+            return None, _nll_chunk(params, cfg, xs[0], xs[1])
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        _, nll = jax.lax.scan(body, None, (xc, lc))
+        nll = nll.swapaxes(0, 1).reshape(labels.shape[0], s)
+    else:
+        nll = _nll_chunk(params, cfg, x, labels)
+    w = batch["weights"].astype(jnp.float32)
+    loss = (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+    metrics = {"nll": loss, **aux}
+    total = loss + sum(aux.values(), jnp.zeros((), jnp.float32))
+    return total, metrics
+
+
+def prefill(params, cfg: C.ModelConfig, tokens: jax.Array,
+            caches: List[dict]):
+    """Full prefill; returns (last-token logits (B, ...), caches)."""
+    x, caches, _ = forward(params, cfg, tokens, caches=caches, mode="full")
+    logits = unembed(params, cfg, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg: C.ModelConfig, caches: List[dict],
+                tokens: jax.Array, positions: jax.Array):
+    """One decode step.  tokens: (B,) or (B, K); positions: (B,)."""
+    x, caches, _ = forward(params, cfg, tokens, positions=positions,
+                           caches=caches, mode="decode")
+    logits = unembed(params, cfg, x)
+    return logits[:, 0], caches

@@ -1,0 +1,150 @@
+"""Mixture-of-experts FFN with shard-local, sort-based capacity dispatch.
+
+Tokens are routed top-k, sorted by expert id *within each data shard*,
+packed into (shards, E, C_local, d) buffers (capacity overflow dropped —
+Switch/GShard semantics), batch-matmul'd through the experts, and
+combined with router weights.  FLOPs scale with *active* experts, which
+keeps the roofline honest for MoE archs.
+
+Sharding design (the §Perf fix over a naive global sort, which forces
+XLA SPMD to replicate the dispatch buffers — observed 566 GB/device on
+granite-moe):
+  * every dispatch tensor carries an explicit leading shard dim mapped
+    to the data mesh axis, so sorts/scatters stay shard-local;
+  * the buffer's expert dim is constrained to the model axis (expert
+    parallelism); XLA materializes the token exchange as an
+    all-to-all — the EP dispatch pattern — instead of replicating;
+  * expert weights are (expert -> model, d_model -> data) 2D-sharded so
+    236B-scale MoE fits per-device HBM (deepseek-v2: 29.5 GB -> 1.8 GB).
+
+DeepSeek-style shared experts run densely on every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, sharding
+from repro.models.config import MoEConfig
+from repro.models.params import Spec
+
+
+def moe_specs(d_model: int, mcfg: MoEConfig, inference: bool = False
+              ) -> dict:
+    e, f = mcfg.num_experts, mcfg.d_expert
+    if inference:
+        # shard expert->model, f->data: contraction dim d stays
+        # unsharded so the expert matmuls need NO weight gathers
+        gate_axes = ("expert", None, "embed")
+        out_axes = ("expert", "embed", None)
+    else:
+        gate_axes = ("expert", "embed", "mlp")
+        out_axes = ("expert", "mlp", "embed")
+    specs = {
+        "router": Spec((d_model, e), (None, "expert"), "scaled", 0),
+        "experts": {
+            "w_gate": Spec((e, d_model, f), gate_axes, "scaled", 1),
+            "w_in": Spec((e, d_model, f), gate_axes, "scaled", 1),
+            "w_out": Spec((e, f, d_model), out_axes, "scaled", 1),
+        },
+    }
+    if mcfg.num_shared_experts:
+        fs = mcfg.d_shared_expert * mcfg.num_shared_experts
+        specs["shared"] = layers.mlp_specs(d_model, fs, inference)
+    return specs
+
+
+def _capacity(tokens_per_shard: int, mcfg: MoEConfig) -> int:
+    c = int(tokens_per_shard * mcfg.top_k / mcfg.num_experts
+            * mcfg.capacity_factor)
+    return max(c, mcfg.top_k)
+
+
+def moe_ffn(p: dict, mcfg: MoEConfig, x: jax.Array, act: str = "silu"):
+    """x: (B, S, d) -> (out (B, S, d), aux_losses dict of scalars)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = mcfg.num_experts, mcfg.top_k
+    ctx = sharding.current()
+    n_sh = ctx.data_shards if ctx is not None else 1
+    while t % n_sh:                       # safety for odd test shapes
+        n_sh //= 2
+    tl = t // n_sh                        # tokens per data shard
+    cap = _capacity(tl, mcfg)
+    xf = x.reshape(n_sh, tl, d)
+    xf = sharding.constrain(xf, ("batch", None, None))
+
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32),
+        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, k)                # (g, tl, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance + z auxiliary losses (Switch-style, global)
+    one_hot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)
+    frac_tokens = one_hot.sum((0, 1, 2)) / (t * k)            # f_e
+    frac_probs = probs.mean((0, 1))                           # P_e
+    aux = {
+        "moe_load_balance": e * jnp.sum(frac_tokens * frac_probs)
+                            * mcfg.router_aux_coef,
+        "moe_router_z": jnp.mean(
+            jax.scipy.special.logsumexp(router_logits, -1) ** 2)
+            * mcfg.router_z_coef,
+    }
+
+    # ---- shard-local sort-based dispatch (GATHER-only: XLA SPMD lowers
+    # scatters with sharded operands via replicated expanded indices —
+    # a 206 GB/dev all-gather on granite train — gathers stay local)
+    flat_expert = expert_ids.reshape(n_sh, tl * k)            # (g, tl·k)
+    sort_idx = jnp.argsort(flat_expert, axis=-1)              # stable
+    sorted_expert = jnp.take_along_axis(flat_expert, sort_idx, -1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(
+        sorted_expert)                                        # (g, E)
+    ends = jnp.concatenate(
+        [starts[:, 1:], jnp.full((n_sh, 1), tl * k)], axis=1)
+    rank = (jnp.arange(tl * k)[None]
+            - jnp.take_along_axis(starts, sorted_expert, -1))  # pos in expert
+    token_idx = sort_idx // k                                 # (g, tl·k)
+
+    # slot (e, c) reads sorted position starts[e] + c (gather, not scatter)
+    slot_pos = starts[:, :, None] + jnp.arange(cap)[None, None]   # (g,E,cap)
+    slot_valid = slot_pos < ends[:, :, None]
+    slot_tok = jnp.take_along_axis(
+        token_idx, jnp.minimum(slot_pos, tl * k - 1).reshape(n_sh, -1), -1)
+    buf = jnp.take_along_axis(xf, slot_tok[..., None], axis=1)    # (g,E·cap,d)
+    buf = (buf * slot_valid.reshape(n_sh, -1, 1)).reshape(n_sh, e, cap, d)
+    buf = sharding.constrain(buf, ("batch", "expert", None, None))
+
+    # ---- expert compute (batched GLU), expert dim model-sharded
+    ep = p["experts"]
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    g_act = actf(jnp.einsum("gecd,edf->gecf", buf, ep["w_gate"]))
+    h_act = jnp.einsum("gecd,edf->gecf", buf, ep["w_in"])
+    out_buf = jnp.einsum("gecf,efd->gecd", g_act * h_act, ep["w_out"])
+    out_buf = sharding.constrain(out_buf, ("batch", "expert", None, None))
+
+    # ---- combine (inverse-permutation gather)
+    gidx = jnp.arange(n_sh)[:, None]
+    inv = jnp.argsort(sort_idx, axis=-1)                      # (g, tl·k)
+    rank_orig = jnp.take_along_axis(rank, inv, -1)            # rank of j
+    keep = rank_orig < cap
+    flat_slot = flat_expert * cap + jnp.minimum(rank_orig, cap - 1)
+    # sharded indices make the combine gather emit a sharded result
+    # directly (constraining only the output leaves an unsharded
+    # (tl·k, d) transient in the gather's wake)
+    flat_slot = sharding.constrain(flat_slot, ("batch", "seq"))
+    vals = jnp.take_along_axis(
+        out_buf.reshape(n_sh, e * cap, d), flat_slot[..., None], axis=1)
+    vals = jnp.where(keep[..., None], vals, 0.0)              # (g, tl·k, d)
+    # the (tl·k, d) combine tensor is 6x the residual stream — shard its
+    # token dim over the model axis (sequence-parallel combine)
+    vals = sharding.constrain(vals, ("batch", "seq", None))
+    combined = (vals.reshape(n_sh, tl, k, d)
+                * gate.astype(x.dtype)[..., None]).sum(axis=2)
+    combined = sharding.constrain(combined, ("batch", None, None))
+
+    out = combined.reshape(b, s, d)
+    if mcfg.num_shared_experts:
+        out = out + layers.mlp(p["shared"], x, act)
+    return out, aux

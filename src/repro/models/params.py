@@ -1,0 +1,113 @@
+"""Minimal parameter-spec system (no flax).
+
+Modules describe their parameters once as a nested dict of ``Spec``s
+(shape + logical axes + init style).  From one spec tree we derive:
+
+  * concrete parameters     (``init_params``)
+  * abstract parameters     (``abstract_params`` — ShapeDtypeStruct only,
+                             used by the multi-pod dry-run: no allocation)
+  * logical-axis tree       (``axes_tree`` — consumed by
+                             ``repro.models.sharding`` to build
+                             NamedShardings for the production mesh)
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Spec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | embed | scaled
+    scale_dim: int = -1               # fan-in dim index for "scaled"
+
+    def __post_init__(self):  # pragma: no cover - NamedTuple has no post_init
+        pass
+
+
+SpecTree = Dict[str, Any]   # nested dict of Spec
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def map_specs(fn, tree: SpecTree):
+    """Map ``fn`` over every Spec leaf, preserving dict structure."""
+    if _is_spec(tree):
+        return fn(tree)
+    return {k: map_specs(fn, v) for k, v in tree.items()}
+
+
+def map_specs_with_path(fn, tree: SpecTree, path: str = ""):
+    if _is_spec(tree):
+        return fn(path, tree)
+    return {k: map_specs_with_path(fn, v, f"{path}/{k}") for k, v in tree.items()}
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.sha256(path.encode()).digest()
+    fold = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, fold)
+
+
+def init_params(specs: SpecTree, key: jax.Array, dtype=jnp.float32):
+    """Materialize parameters for a spec tree (deterministic in path)."""
+    def init_one(path: str, s: Spec):
+        k = _path_key(key, path)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        if s.init == "embed":
+            return (jax.random.normal(k, s.shape) * 0.02).astype(dtype)
+        # normal / scaled: truncated-normal with 1/sqrt(fan_in) scaling
+        fan_in = s.shape[s.scale_dim] if s.init == "scaled" else (
+            s.shape[0] if len(s.shape) > 1 else s.shape[-1])
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.truncated_normal(k, -2.0, 2.0, s.shape)
+                * scale).astype(dtype)
+
+    return map_specs_with_path(init_one, specs)
+
+
+def abstract_params(specs: SpecTree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — NO device allocation (dry-run path)."""
+    return map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+
+
+def axes_tree(specs: SpecTree):
+    """Tree of logical-axis tuples matching the param tree structure."""
+    return map_specs(lambda s: s.axes, specs)
+
+
+def param_count(specs: SpecTree) -> int:
+    total = 0
+
+    def add(s: Spec):
+        nonlocal total
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+        return None
+
+    map_specs(add, specs)
+    return total
+
+
+def stack_specs(specs: SpecTree, n: int, axis_name: Optional[str] = None) -> SpecTree:
+    """Stack a per-layer spec tree ``n`` times along a new leading 'layers' dim.
+
+    Used for run-grouped ``lax.scan`` execution: a run of ``n`` identical
+    layers stores parameters as one stacked tree.
+    """
+    return map_specs(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                       s.scale_dim if s.scale_dim < 0 else s.scale_dim + 1),
+        specs)

@@ -1,0 +1,169 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, minimal).
+
+Every parameter / cache / activation tensor carries a tuple of logical
+axis names (see ``params.Spec``).  ``logical_to_spec`` maps those names
+onto mesh axes by priority-ordered rules with two safety properties:
+
+  * a rule only fires if the dim size is divisible by the mesh-axes
+    product (e.g. kv_heads=2 on model=16 silently falls back to
+    replicated instead of erroring);
+  * no mesh axis is used twice within one tensor.
+
+The active rule set is a context variable so model code can request
+activation constraints (``constrain``) without threading a mesh through
+every call — on CPU tests there is no context and constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Priority-ordered candidate mesh axes per logical axis.  Each candidate
+# is a tuple of mesh axis names used jointly for that dim.
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[Tuple[str, ...], ...]], ...] = (
+    ("batch", (("pod", "data"), ("data",))),
+    ("vocab", (("model",),)),
+    ("expert", (("model",),)),
+    ("heads", (("model",),)),
+    ("kv_heads", (("model",),)),
+    ("mlp", (("model",),)),
+    ("cache_seq", (("model",),)),          # decode: pooled-HBM KV sharding
+    ("seq", (("model",),)),                # sequence parallelism (activations)
+    ("embed", (("pod", "data"), ("data",))),  # FSDP weight sharding
+    ("layers", ()),
+)
+
+# Variant used for long_500k: batch=1 so the data axis is free; the KV
+# cache sequence dim spreads across BOTH axes = the whole pod's HBM
+# (the TPU-native analogue of AIBrix's distributed KV cache pool).
+LONG_CONTEXT_RULES = (
+    ("batch", ()),
+    ("vocab", (("model",),)),
+    ("expert", (("model",),)),
+    ("heads", (("model",),)),
+    ("kv_heads", (("model",),)),
+    ("mlp", (("model",),)),
+    ("cache_seq", (("pod", "data"), ("data",))),
+    ("seq", (("data",),)),
+    ("embed", (("pod", "data"), ("data",))),
+    ("layers", ()),
+)
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules=DEFAULT_RULES, fsdp: bool = True):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self.fsdp = fsdp
+
+    @property
+    def data_shards(self) -> int:
+        """Number of shards along the 'batch' logical axis (for
+        shard-local MoE dispatch)."""
+        for cand in self.rules.get("batch", ()):
+            size = self.axis_size(cand)
+            if size:
+                return size
+        return 1
+
+    def axis_size(self, names: Tuple[str, ...]) -> Optional[int]:
+        size = 1
+        for n in names:
+            if n not in self.mesh.shape:
+                return None
+            size *= self.mesh.shape[n]
+        return size
+
+    def spec_for(self, shape: Sequence[int],
+                 axes: Sequence[Optional[str]]) -> P:
+        """Build a PartitionSpec; priority order = DEFAULT_RULES order."""
+        assign: dict = {}
+        used: set = set()
+        # evaluate logical axes in rule-priority order, not dim order
+        for rule_name, candidates in self.rules.items():
+            if rule_name == "embed" and not self.fsdp:
+                continue
+            for dim, ax in enumerate(axes):
+                if ax != rule_name or dim in assign:
+                    continue
+                for cand in candidates:
+                    if any(c in used for c in cand):
+                        continue
+                    size = self.axis_size(cand)
+                    if size is None or size <= 1:
+                        continue
+                    if shape[dim] % size == 0:
+                        assign[dim] = cand if len(cand) > 1 else cand[0]
+                        used.update(cand)
+                        break
+        entries = [assign.get(d) for d in range(len(shape))]
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+_CTX: contextvars.ContextVar[Optional[ShardingCtx]] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> Optional[ShardingCtx]:
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Activation sharding constraint; no-op without an active context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = ctx.spec_for(x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def tree_shardings(ctx: ShardingCtx, abstract_tree, axes_tree):
+    """NamedSharding tree matching an abstract (ShapeDtypeStruct) tree."""
+    return jax.tree.map(
+        lambda a, ax: ctx.sharding_for(a.shape, ax),
+        abstract_tree, axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+
+def with_shardings(ctx: ShardingCtx, abstract_tree, axes_tree):
+    """Attach shardings to a ShapeDtypeStruct tree (for .lower inputs)."""
+    def attach(a, ax):
+        return jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=ctx.sharding_for(a.shape, ax))
+    return _tree_map_axes(attach, abstract_tree, axes_tree)
+
+
+def _tree_map_axes(fn, tree, axes_tree):
+    if hasattr(axes_tree, "_fields"):          # NamedTuple containers
+        return type(axes_tree)(*(
+            _tree_map_axes(fn, getattr(tree, f), getattr(axes_tree, f))
+            for f in axes_tree._fields))
+    if isinstance(axes_tree, tuple) and all(
+            isinstance(e, (str, type(None))) for e in axes_tree):
+        return fn(tree, axes_tree)             # axes leaf (possibly empty)
+    if isinstance(axes_tree, dict):
+        return {k: _tree_map_axes(fn, tree[k], axes_tree[k])
+                for k in axes_tree}
+    if isinstance(axes_tree, (list, tuple)):
+        return type(axes_tree)(
+            _tree_map_axes(fn, t, a) for t, a in zip(tree, axes_tree))
+    raise TypeError(type(axes_tree))

@@ -1,0 +1,355 @@
+"""Recurrent token mixers: Mamba selective SSM (Hymba's parallel head),
+and xLSTM's mLSTM (matrix memory) / sLSTM (scalar memory) blocks.
+
+All three expose a *sequence* form (lax.scan over time — used for train
+and prefill) and a *single-step* form (O(1) state update — used by
+decode).  State pytrees double as the "KV cache" for these layers: they
+are constant-size, which is what makes the SSM/hybrid architectures
+eligible for the long_500k decode shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig, SSMConfig, XLSTMConfig
+from repro.models.params import Spec
+
+
+def _causal_conv_seq(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, D); w: (CW, D) -> (B, S, D)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = b
+    s = x.shape[1]
+    for i in range(cw):
+        out = out + pad[:, i:i + s] * w[i]
+    return out
+
+
+def _causal_conv_step(x: jax.Array, buf: jax.Array, w: jax.Array,
+                      b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token conv.  x: (B, D); buf: (B, CW-1, D) previous inputs."""
+    window = jnp.concatenate([buf, x[:, None, :]], axis=1)      # (B, CW, D)
+    out = jnp.einsum("bcd,cd->bd", window, w) + b
+    return out, window[:, 1:]
+
+
+# ===================================================================== Mamba
+def mamba_specs(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    n = s.state_size
+    r = s.dt_rank or max(1, math.ceil(d / 16))
+    return {
+        "in_proj": Spec((d, 2 * di), ("embed", "mlp"), "scaled", 0),
+        "conv_w": Spec((s.conv_width, di), (None, "mlp"), "normal"),
+        "conv_b": Spec((di,), ("mlp",), "zeros"),
+        "x_proj": Spec((di, r + 2 * n), ("mlp", None), "scaled", 0),
+        "dt_w": Spec((r, di), (None, "mlp"), "scaled", 0),
+        "dt_b": Spec((di,), ("mlp",), "ones"),
+        "A_log": Spec((di, n), ("mlp", None), "ones"),
+        "D": Spec((di,), ("mlp",), "ones"),
+        "out_proj": Spec((di, d), ("mlp", "embed"), "scaled", 0),
+    }
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {"conv": ((batch, s.conv_width - 1, di), ("batch", None, None)),
+            "h": ((batch, di, s.state_size), ("batch", None, None))}
+
+
+def _mamba_core(p, scfg, x_c, x_in, h0, chunk: int = 128):
+    """Selective-scan recurrence, chunked for sqrt-memory training.
+
+    Outer scan over chunks is rematerialized (only the inter-chunk state
+    is saved for backward); padded steps carry dt=0, which is an exact
+    no-op on the state (exp(0)=1 decay, 0 input).
+    """
+    n = scfg.state_size
+    r = p["dt_w"].shape[0]
+    s = x_c.shape[1]
+    dbc = jnp.einsum("bsd,dk->bsk", x_c, p["x_proj"])
+    dt_r, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_r, p["dt_w"]) + p["dt_b"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di, N)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs                                # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dtt.astype(jnp.float32)[..., None] * a)    # (B, di, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + p["D"] * xt
+        return h, y.astype(xt.dtype)
+
+    ck = min(chunk, s)
+    s_p = -(-s // ck) * ck
+    pad = s_p - s
+
+    def tpad(x):  # (B, S, ...) -> (nc, ck, B, ...)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        x = x.swapaxes(0, 1)
+        return x.reshape((s_p // ck, ck) + x.shape[1:])
+
+    xs = (tpad(x_c), tpad(dt), tpad(bmat), tpad(cmat))
+
+    def chunk_body(h, xs_c):
+        return jax.lax.scan(step, h, xs_c)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    h_final, ys = jax.lax.scan(chunk_body, h0.astype(jnp.float32), xs)
+    ys = ys.reshape((s_p,) + ys.shape[2:]).swapaxes(0, 1)
+    return ys[:, :s], h_final
+
+
+def mamba_seq(p, cfg: ModelConfig, x: jax.Array, state: dict):
+    """x: (B, S, d) -> (out, new_state)."""
+    scfg = cfg.ssm
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # seed the conv with the carried buffer (supports chunked prefill)
+    cw = scfg.conv_width
+    padded = jnp.concatenate([state["conv"].astype(x_in.dtype), x_in], axis=1)
+    x_c = jax.nn.silu(_causal_conv_seq(padded, p["conv_w"], p["conv_b"])
+                      [:, cw - 1:])
+    y, h = _mamba_core(p, scfg, x_c, x_in, state["h"])
+    out = jnp.einsum("bsd,dk->bsk", y * jax.nn.silu(z), p["out_proj"])
+    new_state = {"conv": padded[:, -(cw - 1):], "h": h}
+    return out, new_state
+
+
+def mamba_step(p, cfg: ModelConfig, x: jax.Array, state: dict):
+    """x: (B, d) one token -> (out (B, d), new_state)."""
+    scfg = cfg.ssm
+    xz = jnp.einsum("bd,dk->bk", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_buf = _causal_conv_step(x_in, state["conv"].astype(x_in.dtype),
+                                     p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    y, h = _mamba_core(p, scfg, xc[:, None], x_in[:, None], state["h"])
+    out = jnp.einsum("bd,dk->bk", y[:, 0] * jax.nn.silu(z), p["out_proj"])
+    return out, {"conv": conv_buf, "h": h}
+
+
+# ===================================================================== mLSTM
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    di = int(xc.mlstm_proj_factor * d)
+    h = xc.num_heads
+    return {
+        "up_proj": Spec((d, 2 * di), ("embed", "mlp"), "scaled", 0),
+        "conv_w": Spec((xc.conv_width, di), (None, "mlp"), "normal"),
+        "conv_b": Spec((di,), ("mlp",), "zeros"),
+        # block-diagonal per head (the xLSTM paper's BlockDiagonal
+        # projections): (H, dh, dh) instead of dense (di, di)
+        "wq": Spec((h, di // h, di // h), ("heads", None, None),
+                   "scaled", 1),
+        "wk": Spec((h, di // h, di // h), ("heads", None, None),
+                   "scaled", 1),
+        "wv": Spec((h, di // h, di // h), ("heads", None, None),
+                   "scaled", 1),
+        "igate_w": Spec((di, h), (None, None), "scaled", 0),
+        "igate_b": Spec((h,), (None,), "zeros"),
+        "fgate_w": Spec((di, h), (None, None), "scaled", 0),
+        "fgate_b": Spec((h,), (None,), "zeros"),
+        "out_norm": layers.norm_spec(di),
+        "down_proj": Spec((di, d), ("mlp", "embed"), "scaled", 0),
+    }
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    xc = cfg.xlstm
+    di = int(xc.mlstm_proj_factor * cfg.d_model)
+    h = xc.num_heads
+    dh = di // h
+    return {
+        "conv": ((batch, xc.conv_width - 1, di), ("batch", None, None)),
+        # matrix memory is the big decode state (B,H,dh,dh); its v-dim
+        # shards over the model axis (heads=4 never divides 16) — the
+        # per-step update k v^T and readout q·C stay shard-local
+        "C": ((batch, h, dh, dh), ("batch", "heads", None, "mlp")),
+        "n": ((batch, h, dh), ("batch", "heads", None)),
+        "m": ((batch, h), ("batch", "heads")),
+    }
+
+
+def _mlstm_core(p, nheads, q, k, v, i_raw, f_raw, state):
+    """q,k,v: (B, S, H, dh) f32; gates (B, S, H).  Scan over S."""
+    def step(carry, inputs):
+        c_mat, n_vec, m = carry
+        qt, kt, vt, it, ft = inputs
+        f_log = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(f_log + m, it)
+        i_sc = jnp.exp(it - m_new)
+        f_sc = jnp.exp(f_log + m - m_new)
+        c_mat = (f_sc[..., None, None] * c_mat
+                 + i_sc[..., None, None] * kt[..., :, None] * vt[..., None, :])
+        n_vec = f_sc[..., None] * n_vec + i_sc[..., None] * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n_vec, qt)), 1.0)
+        h = jnp.einsum("bhd,bhdv->bhv", qt, c_mat) / denom[..., None]
+        return (c_mat, n_vec, m_new), h
+
+    xs = tuple(t.swapaxes(0, 1) for t in (q, k, v, i_raw, f_raw))
+    carry = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32),
+             state["m"].astype(jnp.float32))
+    (c_mat, n_vec, m), hs = jax.lax.scan(step, carry, xs)
+    return hs.swapaxes(0, 1), {"C": c_mat, "n": n_vec, "m": m}
+
+
+def mlstm_seq(p, cfg: ModelConfig, x: jax.Array, state: dict,
+              parallel: bool = None):
+    """Sequence mLSTM.  parallel=True (default for S>1) uses the
+    quadratic gate-biased attention form (xLSTM's 'fully parallelizable'
+    mode) — O(S^2) compute, O(S) memory via blockwise accumulation, and
+    critically no per-step (dh x dh) matrix state saved for backward.
+    The final recurrent state is reconstructed in closed form so decode
+    can continue from a parallel prefill.  parallel assumes a fresh
+    (zero) initial state; decode uses the recurrent step."""
+    xc = cfg.xlstm
+    b, s, _ = x.shape
+    hn = xc.num_heads
+    if parallel is None:
+        parallel = s > 1
+    xz = jnp.einsum("bsd,dk->bsk", x, p["up_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    di = x_in.shape[-1]
+    dh = di // hn
+    cw = xc.conv_width
+    padded = jnp.concatenate([state["conv"].astype(x_in.dtype), x_in], axis=1)
+    x_c = jax.nn.silu(_causal_conv_seq(padded, p["conv_w"], p["conv_b"])
+                      [:, cw - 1:])
+    x_ch = x_c.reshape(b, s, hn, dh)
+    x_inh = x_in.reshape(b, s, hn, dh)
+    q = jnp.einsum("bshd,hde->bshe", x_ch, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", x_ch, p["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", x_inh, p["wv"])
+    i_raw = (jnp.einsum("bsd,dh->bsh", x_in, p["igate_w"])
+             + p["igate_b"]).astype(jnp.float32)
+    f_raw = (jnp.einsum("bsd,dh->bsh", x_in, p["fgate_w"])
+             + p["fgate_b"] + 3.0).astype(jnp.float32)
+    if parallel:
+        f_log = jax.nn.log_sigmoid(f_raw)                  # (B,S,H)
+        f_cum = jnp.cumsum(f_log, axis=1)                  # F_t
+        bias_q = f_cum
+        bias_k = i_raw - f_cum                             # i_s - F_s
+        hs = layers.mlstm_parallel(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), bias_q, bias_k)         # (B,S,H,dh)
+        # closed-form final state for decode continuation
+        f_total = f_cum[:, -1]                             # F_S (B,H)
+        log_w = f_total[:, None] - f_cum + i_raw           # F_S-F_s+i_s
+        m_new = jnp.max(log_w, axis=1)                     # (B,H)
+        w = jnp.exp(log_w - m_new[:, None])                # (B,S,H)
+        c_mat = jnp.einsum("bsh,bshd,bshe->bhde", w,
+                           k.astype(jnp.float32), v.astype(jnp.float32))
+        n_vec = jnp.einsum("bsh,bshd->bhd", w, k.astype(jnp.float32))
+        new_core = {"C": c_mat, "n": n_vec, "m": m_new}
+    else:
+        hs, new_core = _mlstm_core(
+            p, hn, *(t.astype(jnp.float32) for t in (q, k, v)),
+            i_raw, f_raw, state)
+    y = hs.reshape(b, s, di).astype(x.dtype)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", y * jax.nn.silu(z), p["down_proj"])
+    new_core["conv"] = padded[:, -(cw - 1):]
+    return out, new_core
+
+
+def mlstm_step(p, cfg, x, state):
+    out, new_state = mlstm_seq(p, cfg, x[:, None, :], {**state},
+                               parallel=False)
+    return out[:, 0], new_state
+
+
+# ===================================================================== sLSTM
+def slstm_specs(cfg: ModelConfig) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    h = xc.num_heads
+    dh = d // h
+    return {
+        "w_gates": Spec((d, 4, h, dh), ("embed", None, "heads", None),
+                        "scaled", 0),
+        "r_gates": Spec((h, dh, 4, dh), ("heads", None, None, None),
+                        "scaled", 1),
+        "b_gates": Spec((4, h, dh), (None, "heads", None), "zeros"),
+        "out_norm": layers.norm_spec(d),
+    }
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.xlstm.num_heads
+    dh = cfg.d_model // h
+    shp = ((batch, h, dh), ("batch", "heads", None))
+    return {"c": shp, "n": shp, "m": shp, "h": shp}
+
+
+def _slstm_scan(p, cfg, wx, state, chunk: int = 128):
+    """wx: (B, S, 4, H, dh) input contributions; recurrent h feedback.
+
+    Chunked with remat like the mamba core; padded steps are masked to
+    exact no-ops (sLSTM's h-feedback makes zero-input steps non-neutral).
+    """
+    def step(carry, inputs):
+        wx_t, valid = inputs
+        c, n, m, h_prev = carry
+        rec = jnp.einsum("bhd,hdgk->bghk", h_prev, p["r_gates"])
+        pre = wx_t + rec + p["b_gates"]                     # (B, 4, H, dh)
+        z_t = jnp.tanh(pre[:, 0])
+        i_t = pre[:, 1]
+        f_t = jax.nn.log_sigmoid(pre[:, 2])
+        o_t = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_sc = jnp.exp(i_t - m_new)
+        f_sc = jnp.exp(f_t + m - m_new)
+        c_new = f_sc * c + i_sc * z_t
+        n_new = f_sc * n + i_sc
+        h = o_t * c_new / jnp.maximum(n_new, 1e-6)
+        sel = lambda a, b_: jnp.where(valid, a, b_)  # noqa: E731
+        out = (sel(c_new, c), sel(n_new, n), sel(m_new, m),
+               sel(h, h_prev))
+        return out, h
+
+    s = wx.shape[1]
+    ck = min(chunk, s)
+    s_p = -(-s // ck) * ck
+    pad = s_p - s
+    wx_t = wx.swapaxes(0, 1)                                # (S,B,4,H,dh)
+    valid = jnp.ones((s,), bool)
+    if pad:
+        wx_t = jnp.pad(wx_t, ((0, pad),) + ((0, 0),) * (wx_t.ndim - 1))
+        valid = jnp.pad(valid, (0, pad))
+    wx_c = wx_t.reshape((s_p // ck, ck) + wx_t.shape[1:])
+    valid_c = valid.reshape(s_p // ck, ck, 1, 1, 1)
+
+    def chunk_body(carry, xs):
+        return jax.lax.scan(step, carry, xs)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    carry = tuple(state[k].astype(jnp.float32) for k in ("c", "n", "m", "h"))
+    (c, n, m, h), hs = jax.lax.scan(chunk_body, carry, (wx_c, valid_c))
+    hs = hs.reshape((s_p,) + hs.shape[2:]).swapaxes(0, 1)[:, :s]
+    return hs, {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_seq(p, cfg: ModelConfig, x: jax.Array, state: dict):
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,dghk->bsghk", x.astype(jnp.float32),
+                    p["w_gates"].astype(jnp.float32))
+    hs, new_state = _slstm_scan(p, cfg, wx, state)
+    y = hs.reshape(b, s, d).astype(x.dtype)
+    return layers.rms_norm(y, p["out_norm"], cfg.norm_eps), new_state
+
+
+def slstm_step(p, cfg, x, state):
+    out, new_state = slstm_seq(p, cfg, x[:, None, :], state)
+    return out[:, 0], new_state

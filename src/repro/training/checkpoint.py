@@ -1,0 +1,70 @@
+"""Flat-namespace checkpointing: pytree -> one .npz per step + manifest.
+
+No external deps (no orbax); arrays are saved by their tree path so a
+checkpoint round-trips through any pytree with matching structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}"))
+    elif hasattr(tree, "_fields"):            # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}/{k}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **{k: v for k, v in flat.items()})
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump({"latest_step": step, "latest": path}, f)
+    return path
+
+
+def latest_step(directory: str) -> int:
+    try:
+        with open(os.path.join(directory, "manifest.json")) as f:
+            return json.load(f)["latest_step"]
+    except FileNotFoundError:
+        return 0
+
+
+def restore(directory: str, like: Any, step: int = 0) -> Any:
+    """Restore into the structure of ``like``."""
+    step = step or latest_step(directory)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k), f"{prefix}/{k}")
+                                for k in tree._fields))
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        arr = data[prefix]
+        return jnp.asarray(arr, dtype=tree.dtype if hasattr(tree, "dtype")
+                           else None)
+
+    return rebuild(like)

@@ -1,0 +1,6 @@
+import os
+
+# Keep tests on the single real CPU device (the 512-device override is
+# dryrun.py-only); cap compilation parallelism for container stability.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")

@@ -1,0 +1,77 @@
+"""Autoscaler policies + sliding-window metrics (paper §3.2.4)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.autoscaler import (APA, HPA, KPA, MetricStore,
+                                   SlidingWindow, make_autoscaler)
+
+
+def test_sliding_window_mean_and_trim():
+    w = SlidingWindow(window_s=10.0, granularity_s=1.0)
+    for t in range(20):
+        w.record(float(t), float(t))
+    # at t=19 the window covers [9, 19]
+    assert 13.0 <= w.mean(19.0) <= 15.0
+    assert w.mean(100.0) is None          # fully trimmed
+
+
+def test_metric_store_propagation_delay():
+    s = MetricStore(propagation_delay_s=15.0)
+    s.record(0.0, "concurrency", 10.0)
+    assert s.stable(5.0, "concurrency") is None       # still in flight
+    assert s.stable(16.0, "concurrency") == 10.0      # delivered
+
+
+def _store_with_load(values):
+    s = MetricStore()
+    for t, v in values:
+        s.record(t, "m", v)
+    return s
+
+
+def test_kpa_panic_reacts_to_burst():
+    s = _store_with_load([(float(t), 2.0 if t < 60 else 40.0)
+                          for t in range(70)])
+    kpa = make_autoscaler("kpa", metric="m", target=4.0)
+    d = kpa.desired(69.5, s, current=1)
+    assert d.desired >= 8
+    assert d.panic
+
+
+def test_apa_tolerance_band_no_flapping():
+    # load right at capacity: APA must hold steady
+    s = _store_with_load([(float(t), 8.05) for t in range(60)])
+    apa = make_autoscaler("apa", metric="m", target=4.0,
+                          up_fluctuation=0.1, down_fluctuation=0.2)
+    assert apa.desired(59.5, s, current=2).desired == 2
+
+
+def test_hpa_scale_down_stabilization():
+    hpa = HPA(metric="m", target=4.0, sync_period_s=1.0,
+              scale_down_stabilization_s=100.0)
+    s = MetricStore(stable_window_s=5.0)
+    for t in range(30):
+        s.record(float(t), "m", 40.0)     # high load
+    d_hi = hpa.desired(30.0, s, current=2)
+    assert d_hi.desired >= 8
+    for t in range(31, 60):
+        s.record(float(t), "m", 0.5)      # load vanishes
+    d_lo = hpa.desired(59.0, s, current=d_hi.desired)
+    # stabilization window keeps the old (high) desired for a while
+    assert d_lo.desired >= d_hi.desired
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(["hpa", "kpa", "apa"]),
+       st.lists(st.floats(0.0, 100.0), min_size=5, max_size=50),
+       st.integers(1, 16))
+def test_desired_always_within_bounds(name, loads, current):
+    """Property: any metric stream yields min<=desired<=max."""
+    asc = make_autoscaler(name, metric="m", target=4.0,
+                          min_replicas=1, max_replicas=20)
+    s = MetricStore()
+    for i, v in enumerate(loads):
+        s.record(float(i), "m", v)
+    d = asc.desired(float(len(loads)), s, current)
+    assert 1 <= d.desired <= 20

@@ -1,0 +1,138 @@
+"""Gateway + routing policy tests (paper §3.2.2) over stub engines."""
+from dataclasses import dataclass, field
+from typing import List
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.gateway import Gateway, RateLimit
+from repro.core.gateway.router import POLICIES, make_policy
+from repro.engine.engine import EngineMetrics
+
+
+@dataclass
+class StubEngine:
+    m: EngineMetrics = field(default_factory=EngineMetrics)
+    prefix_tokens: int = 0
+
+    def metrics(self):
+        return self.m
+
+    def match_prefix_len(self, tokens):
+        return min(self.prefix_tokens, len(tokens))
+
+
+def _engines(**per_engine):
+    return {k: v for k, v in per_engine.items()}
+
+
+def test_least_request_picks_emptiest():
+    e = _engines(
+        a=StubEngine(EngineMetrics(num_running=5, num_waiting=2)),
+        b=StubEngine(EngineMetrics(num_running=1)),
+        c=StubEngine(EngineMetrics(num_running=3)))
+    assert make_policy("least-request").select(e, [1, 2, 3]) == "b"
+
+
+def test_least_kv_cache():
+    e = _engines(a=StubEngine(EngineMetrics(kv_utilization=0.9)),
+                 b=StubEngine(EngineMetrics(kv_utilization=0.2)))
+    assert make_policy("least-kv-cache").select(e, []) == "b"
+
+
+def test_least_latency():
+    e = _engines(
+        a=StubEngine(EngineMetrics(avg_latency=1.0, avg_queue_time=0.1)),
+        b=StubEngine(EngineMetrics(avg_latency=0.3, avg_queue_time=0.2)))
+    assert make_policy("least-latency").select(e, []) == "b"
+
+
+def test_throughput_picks_lowest_tps():
+    e = _engines(a=StubEngine(EngineMetrics(tokens_per_sec=900.0)),
+                 b=StubEngine(EngineMetrics(tokens_per_sec=100.0)))
+    assert make_policy("throughput").select(e, []) == "b"
+
+
+def test_prefix_cache_aware_threshold():
+    tokens = list(range(100))
+    e = _engines(
+        a=StubEngine(EngineMetrics(num_running=0), prefix_tokens=80),
+        b=StubEngine(EngineMetrics(num_running=9), prefix_tokens=0))
+    pol = make_policy("prefix-cache-aware", threshold=0.5)
+    assert pol.select(e, tokens) == "a"
+    # below threshold -> falls back to least-request
+    e["a"].prefix_tokens = 10
+    e["a"].m = EngineMetrics(num_running=9)
+    e["b"].m = EngineMetrics(num_running=0)
+    assert pol.select(e, tokens) == "b"
+
+
+def test_lora_affinity():
+    e = _engines(
+        a=StubEngine(EngineMetrics(num_running=5,
+                                   loaded_adapters=("sql",))),
+        b=StubEngine(EngineMetrics(num_running=0)))
+    pol = make_policy("lora-affinity")
+    assert pol.select(e, [], lora_adapter="sql") == "a"
+    assert pol.select(e, [], lora_adapter=None) == "b"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(sorted(POLICIES)),
+       st.lists(st.integers(0, 50), min_size=1, max_size=8),
+       st.lists(st.integers(0, 500), min_size=0, max_size=20))
+def test_policy_always_returns_registered_engine(policy_name, loads, tokens):
+    """Property: every policy returns a valid engine id for any metric
+    state (no crashes, no phantom targets)."""
+    engines = {f"e{i}": StubEngine(EngineMetrics(
+        num_running=n, tokens_per_sec=float(n), kv_utilization=n / 51.0,
+        avg_latency=float(n)))
+        for i, n in enumerate(loads)}
+    pol = make_policy(policy_name)
+    assert pol.select(engines, tokens) in engines
+
+
+# ------------------------------------------------------------------ gateway
+def test_gateway_rpm_limit():
+    t = [0.0]
+    gw = Gateway(policy="random", clock=lambda: t[0],
+                 default_limit=RateLimit(rpm=60, tpm=1e9))
+    gw.register_engine("e0", StubEngine())
+    # burst capacity rpm/6 = 10 requests
+    granted = sum(gw.route([1]) is not None for _ in range(40))
+    assert granted == 10
+    assert gw.stats.rejected_rpm == 30
+    t[0] = 60.0       # a minute later tokens refilled
+    assert gw.route([1]) is not None
+
+
+def test_gateway_tpm_limit_counts_tokens():
+    t = [0.0]
+    gw = Gateway(policy="random", clock=lambda: t[0],
+                 default_limit=RateLimit(rpm=1e9, tpm=600))
+    gw.register_engine("e0", StubEngine())
+    assert gw.route([0] * 50, est_output_tokens=50) is not None
+    assert gw.route([0] * 500, est_output_tokens=500) is None
+    assert gw.stats.rejected_tpm == 1
+
+
+def test_gateway_per_user_isolation():
+    t = [0.0]
+    gw = Gateway(policy="random", clock=lambda: t[0],
+                 default_limit=RateLimit(rpm=60, tpm=1e9))
+    gw.register_engine("e0", StubEngine())
+    for _ in range(10):
+        gw.route([1], user="greedy")
+    assert gw.route([1], user="greedy") is None      # exhausted
+    assert gw.route([1], user="other") is not None   # isolated
+
+
+def test_workload_histogram_feeds_load_monitor():
+    gw = Gateway(policy="random")
+    gw.register_engine("e0", StubEngine())
+    for n, out in ((50, 20), (150, 20), (3000, 200), (150, 30)):
+        gw.route([0] * n, est_output_tokens=out)
+    hist = gw.workload_histogram()
+    assert sum(hist.values()) == 4
+    assert hist[(0, 0)] == 3          # three small-ish requests

@@ -1,0 +1,180 @@
+"""Distributed KV cache pool + eviction policies: unit and property
+tests (hypothesis) for the paper's §3.2.5 mechanisms."""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core.kvcache.eviction import LRU, LRUK, S3FIFO
+from repro.core.kvcache.pool import DistributedKVPool
+from repro.engine.page_table import PageAllocator, chunk_hashes
+
+
+# ------------------------------------------------------------------ pool
+def _pool(cap_blocks=8, policy="s3fifo", lag=0.0):
+    return DistributedKVPool(capacity_bytes=cap_blocks * 1024,
+                             block_bytes=1024, policy=policy,
+                             metadata_lag=lag)
+
+
+def test_publish_fetch_roundtrip():
+    p = _pool()
+    p.attach_engine("e0", "node-0")
+    assert p.publish("h1", ("k", "v"), "e0", now=0.0)
+    p.tick(1.0)
+    assert p.fetch("h1", "e0", now=1.0) == ("k", "v")
+    assert p.stats.hits_local == 1
+
+
+def test_async_metadata_visibility_lag():
+    p = _pool(lag=0.5)
+    p.publish("h1", "x", "e0", now=0.0)
+    assert p.fetch("h1", "e0", now=0.1) is None      # not yet visible
+    assert p.fetch("h1", "e0", now=0.6) == "x"       # after the lag
+
+
+def test_duplicate_publish_dropped_before_transfer():
+    p = _pool()
+    assert p.publish("h1", "x", "e0", now=0.0)
+    p.tick(0.1)
+    assert not p.publish("h1", "x2", "e1", now=0.2)
+    assert p.stats.dup_puts_dropped == 1
+
+
+def test_colocated_vs_remote_hit_accounting():
+    p = _pool()
+    p.attach_engine("e0", "node-0")
+    p.attach_engine("e1", "node-1")
+    p.publish("h1", "x", "e0", now=0.0)
+    p.tick(0.1)
+    p.fetch("h1", "e0", now=0.2)
+    p.fetch("h1", "e1", now=0.3)
+    assert p.stats.hits_local == 1 and p.stats.hits_remote == 1
+    assert p.stats.bytes_transferred == 1024          # remote only
+    assert p.fetch_cost_s("h1", "e0") < p.fetch_cost_s("h1", "e1")
+
+
+def test_capacity_eviction():
+    p = _pool(cap_blocks=4)
+    for i in range(8):
+        p.publish(f"h{i}", i, "e0", now=float(i))
+        p.tick(float(i) + 0.1)
+    assert p.stats.bytes_stored <= p.capacity_bytes
+    assert p.stats.evictions >= 4
+
+
+def test_scan_resistance_s3fifo_beats_lru():
+    """A one-shot scan must not flush the hot working set: the paper's
+    scan-resistant eviction claim, demonstrated policy-vs-policy."""
+    def run(policy):
+        p = _pool(cap_blocks=16, policy=policy)
+        hot = [f"hot{i}" for i in range(8)]
+        for h in hot:
+            p.publish(h, h, "e0")
+            p.tick(1.0)
+        hits = 0
+        t = 2.0
+        for round_ in range(30):
+            for h in hot:                       # hot set re-referenced
+                if p.fetch(h, "e0", now=t):
+                    hits += 1
+                else:
+                    p.publish(h, h, "e0", now=t)
+                t += 0.01
+            # one-shot scan LARGER than capacity (the flush case)
+            for j in range(16):
+                p.publish(f"scan{round_}-{j}", j, "e0", now=t)
+                t += 0.01
+            p.tick(t)
+        return hits
+
+    assert run("s3fifo") > run("lru") * 3
+
+
+# ------------------------------------------------------------------ eviction property tests
+@st.composite
+def ops_seq(draw):
+    n = draw(st.integers(2, 60))
+    ops = []
+    for _ in range(n):
+        kind = draw(st.sampled_from(["insert", "access", "evict"]))
+        key = draw(st.integers(0, 12))
+        ops.append((kind, key))
+    return ops
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops_seq(), st.sampled_from(["lru", "s3fifo", "lru2"]))
+def test_eviction_policy_invariants(ops, policy_name):
+    policy = {"lru": LRU, "s3fifo": lambda: S3FIFO(16),
+              "lru2": LRUK}[policy_name]()
+    live = set()
+    for kind, key in ops:
+        if kind == "insert":
+            policy.on_insert(key)
+            live.add(key)
+        elif kind == "access":
+            policy.on_access(key)
+        else:
+            victim = policy.evict()
+            if victim is not None:
+                # victims must be live, and never resurrected silently
+                assert victim in live
+                live.discard(victim)
+            else:
+                assert not live or policy_name == "s3fifo"
+    # draining evicts every remaining key exactly once
+    drained = set()
+    for _ in range(len(live) + 5):
+        v = policy.evict()
+        if v is None:
+            break
+        assert v in live and v not in drained
+        drained.add(v)
+    assert drained == live
+
+
+# ------------------------------------------------------------------ allocator
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=30),
+       st.integers(8, 32))
+def test_page_allocator_never_leaks(sizes, num_pages):
+    """Property: allocate/release cycles conserve pages; refcounts never
+    go negative; utilization stays within [0, 1]."""
+    alloc = PageAllocator(num_pages, page_size=4)
+    held = []
+    t = 0.0
+    for n in sizes:
+        t += 1.0
+        pages = alloc.allocate(n, t)
+        if pages is not None:
+            held.append(pages)
+        assert 0.0 <= alloc.utilization <= 1.0
+        if len(held) > 3:
+            alloc.release(held.pop(0), t)
+    for pages in held:
+        alloc.release(pages, t)
+    assert alloc.num_free == num_pages
+
+
+def test_prefix_match_shares_pages():
+    alloc = PageAllocator(64, page_size=4)
+    tokens = list(range(20))
+    pages = alloc.allocate(5, 0.0)
+    for i, h in enumerate(chunk_hashes(tokens, 4)):
+        alloc.register_hash(pages[i], h)
+    matched, covered = alloc.match_prefix(tokens + [99, 98], 1.0)
+    assert covered == 20
+    assert matched == pages
+    # matching must never cover the whole prompt exactly
+    m2, c2 = alloc.match_prefix(tokens, 1.0)
+    assert c2 < len(tokens)
+    alloc.release(matched, 2.0)
+    alloc.release(m2, 2.0)
+
+
+def test_chunk_hashes_prefix_property():
+    a = chunk_hashes(list(range(32)), 8)
+    b = chunk_hashes(list(range(32)) + [7, 7, 7], 8)
+    assert b[:len(a)] == a                       # prefix-stable
+    c = chunk_hashes([1] + list(range(31)), 8)
+    assert c[0] != a[0]                          # content-addressed

@@ -1,0 +1,45 @@
+"""Sampler properties: greedy determinism, top-k/top-p support bounds."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.engine.sampling import sample
+
+
+def test_greedy_is_argmax():
+    logits = jnp.asarray([[0.1, 3.0, -1.0], [5.0, 0.0, 4.9]])
+    out = sample(logits, jax.random.PRNGKey(0),
+                 jnp.zeros(2))                  # temperature 0 => greedy
+    assert out.tolist() == [1, 0]
+
+
+def test_top_k_restricts_support():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 50)), jnp.float32)
+    top2 = jnp.argsort(logits, axis=-1)[:, -2:]
+    for seed in range(10):
+        out = sample(logits, jax.random.PRNGKey(seed),
+                     jnp.ones(4) * 1.5, top_k=2)
+        for b in range(4):
+            assert int(out[b]) in top2[b].tolist()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.05, 0.95))
+def test_top_p_never_picks_tail(seed, p):
+    """With one dominant logit carrying > p of the mass, top-p must
+    always return it."""
+    logits = jnp.asarray([[10.0] + [0.0] * 20])
+    out = sample(logits, jax.random.PRNGKey(seed), jnp.ones(1),
+                 top_p=jnp.asarray([p]))
+    assert int(out[0]) == 0
+
+
+def test_mixed_batch_greedy_and_sampled():
+    logits = jnp.asarray([[0.0, 9.0], [9.0, 0.0]])
+    out = sample(logits, jax.random.PRNGKey(1),
+                 jnp.asarray([0.0, 1.0]))       # row0 greedy, row1 temp 1
+    assert int(out[0]) == 1
+    assert int(out[1]) in (0, 1)

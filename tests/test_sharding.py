@@ -1,0 +1,83 @@
+"""Logical-axis sharding rules: divisibility fallback, axis-reuse
+guards, FSDP toggling, and the long-context rule variant."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding
+from repro.models.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
+                                   ShardingCtx)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by ShardingCtx."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _ctx(shape=None, rules=DEFAULT_RULES, **kw):
+    return ShardingCtx(FakeMesh(shape or {"data": 16, "model": 16}),
+                       rules, **kw)
+
+
+def test_batch_shards_over_data():
+    ctx = _ctx()
+    assert ctx.spec_for((256, 4096), ("batch", "seq")) == P("data", "model")
+
+
+def test_multipod_batch_uses_pod_and_data():
+    ctx = _ctx({"pod": 2, "data": 16, "model": 16})
+    spec = ctx.spec_for((256, 4096), ("batch", None))
+    assert spec == P(("pod", "data"))
+
+
+def test_divisibility_fallback_replicates():
+    ctx = _ctx()
+    # kv_heads=2 not divisible by model=16 -> cache_seq picks up model;
+    # batch=8 not divisible by data=16 -> replicated batch
+    spec = ctx.spec_for((8, 1024, 2, 64),
+                        ("batch", "cache_seq", "kv_heads", None))
+    assert tuple(spec) == (None, "model")
+    # kv_heads=32 divisible -> kv_heads wins (higher priority than seq)
+    spec2 = ctx.spec_for((32, 1024, 32, 64),
+                         ("batch", "cache_seq", "kv_heads", None))
+    assert spec2[0] == "data" and spec2[2] == "model"
+    assert spec2[1] is None
+
+
+def test_no_mesh_axis_used_twice():
+    ctx = _ctx()
+    # heads and mlp both want model: only one gets it
+    spec = ctx.spec_for((64, 4096), ("heads", "mlp"))
+    got = [s for s in spec if s is not None]
+    assert got.count("model") <= 1
+
+
+def test_fsdp_toggle():
+    on = _ctx()
+    off = _ctx(fsdp=False)
+    axes = ("embed", "mlp")
+    assert on.spec_for((4096, 11008), axes) == P("data", "model")
+    s_off = off.spec_for((4096, 11008), axes)
+    assert s_off == P(None, "model") or s_off == P("model")
+
+
+def test_long_context_rules_shard_cache_seq_wide():
+    ctx = ShardingCtx(FakeMesh({"pod": 2, "data": 16, "model": 16}),
+                      LONG_CONTEXT_RULES)
+    spec = ctx.spec_for((1, 524288, 8, 64),
+                        ("batch", "cache_seq", "kv_heads", None))
+    assert spec[1] == ("pod", "data")
+
+
+def test_constrain_noop_without_context():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert sharding.constrain(x, ("batch", None)) is x
+
+
+def test_data_shards_property():
+    assert _ctx().data_shards == 16
+    assert ShardingCtx(FakeMesh({"pod": 2, "data": 16, "model": 16}),
+                       DEFAULT_RULES).data_shards == 32
+    assert ShardingCtx(FakeMesh({}), DEFAULT_RULES).data_shards == 1
