@@ -17,13 +17,19 @@ from repro.kernels import ops
 from repro.kernels import ref as kref
 
 
-def _time(fn, *args, reps=3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+def _time(fn, *args, reps=3):
+    """(us_per_call, warm_result) — warms up (compiles) exactly once and
+    hands the warm result back so callers can diff kernel vs oracle
+    without re-executing either path."""
+    warm = fn(*args)
+    if isinstance(warm, tuple):
+        warm[0].block_until_ready()
+    else:
+        jax.block_until_ready(warm)
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6, warm
 
 
 def main(quick: bool = False):
@@ -39,12 +45,10 @@ def main(quick: bool = False):
         vp = jnp.asarray(rng.normal(size=(p, page, hkv, d)), jnp.float32)
         bt = jnp.asarray(rng.integers(0, p, (b, nb)), jnp.int32)
         ln = jnp.full((b,), nb * page, jnp.int32)
-        t_k = _time(lambda: ops.paged_attention(q, kp, vp, bt, ln))
-        t_r = _time(lambda: ops.paged_attention(q, kp, vp, bt, ln,
-                                                impl="ref"))
-        err = float(jnp.max(jnp.abs(
-            ops.paged_attention(q, kp, vp, bt, ln)
-            - ops.paged_attention(q, kp, vp, bt, ln, impl="ref"))))
+        t_k, out_k = _time(lambda: ops.paged_attention(q, kp, vp, bt, ln))
+        t_r, out_r = _time(lambda: ops.paged_attention(q, kp, vp, bt, ln,
+                                                       impl="ref"))
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
         name = f"paged_attn_b{b}h{h}d{d}"
         rows.append((name, t_k))
         print(f"{name},{t_k:.0f},ref_us={t_r:.0f};max_err={err:.1e}")
@@ -54,16 +58,42 @@ def main(quick: bool = False):
         k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
         v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
         ln = jnp.full((b,), s, jnp.int32)
-        t_k = _time(lambda: ops.flash_attention(q, k, v, ln))
-        t_r = _time(lambda: ops.flash_attention(q, k, v, ln, impl="ref"))
-        err = float(jnp.max(jnp.abs(
-            ops.flash_attention(q, k, v, ln)
-            - ops.flash_attention(q, k, v, ln, impl="ref"))))
+        t_k, out_k = _time(lambda: ops.flash_attention(q, k, v, ln))
+        t_r, out_r = _time(lambda: ops.flash_attention(q, k, v, ln,
+                                                       impl="ref"))
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
         name = f"flash_prefill_b{b}s{s}h{h}"
         rows.append((name, t_k))
         print(f"{name},{t_k:.0f},ref_us={t_r:.0f};max_err={err:.1e}")
+    # chunked prefill straight over the paged pool: the fused engine's
+    # prefill hot path (kernels/paged_prefill.py) vs the dense
+    # gather-the-block-table oracle it replaced
+    for (b, ctx, s, h, hkv, d, page) in (
+            [(1, 0, 256, 8, 2, 64, 16)] if quick else
+            [(1, 0, 1024, 8, 2, 128, 64), (1, 512, 512, 8, 2, 128, 64)]):
+        nb = (ctx + s) // page
+        p = nb + 2
+        q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(p, page, hkv, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(p, page, hkv, d)), jnp.float32)
+        bt = jnp.asarray(rng.permutation(p)[:b * nb].reshape(b, nb),
+                         jnp.int32)
+        cx = jnp.full((b,), ctx, jnp.int32)
+        cl = jnp.full((b,), s, jnp.int32)
+        t_k, out_k = _time(lambda: ops.paged_prefill(q, kp, vp, bt, cx, cl))
+        t_r, out_r = _time(lambda: ops.paged_prefill(q, kp, vp, bt, cx, cl,
+                                                     impl="ref"))
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
+        name = f"paged_prefill_b{b}ctx{ctx}s{s}h{h}d{d}"
+        rows.append((name, t_k))
+        print(f"{name},{t_k:.0f},ref_us={t_r:.0f};speedup={t_r/t_k:.2f}x"
+              f";max_err={err:.1e}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI smoke)")
+    main(quick=ap.parse_args().quick)

@@ -25,7 +25,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.kvcache.pool import DistributedKVPool
 from repro.core.optimizer.profiles import DEVICES, PerfModel
 from repro.core.sim.events import EventLoop
-from repro.engine.engine import EngineMetrics
+from repro.engine.engine import EngineMetrics, window_throughput
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
 from repro.models.config import ModelConfig
@@ -327,7 +327,7 @@ class SimEngine:
             self._tok_events.pop(0)
 
     def metrics(self) -> EngineMetrics:
-        tput = sum(n for _, n in self._tok_events) / 10.0
+        tput = window_throughput(self._tok_events, self.loop.clock.now)
         return EngineMetrics(
             num_running=len(self.running) + (1 if self.prefilling else 0),
             num_waiting=len(self.waiting),

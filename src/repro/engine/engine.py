@@ -5,6 +5,21 @@ cache + hash-indexed prefix cache, chunked prefill, batched decode,
 high-density multi-LoRA, and the metric surface the AIBrix control
 plane consumes (queue depth, KV utilization, token throughput, latency).
 
+Scheduling is a vLLM-style **fused mixed batch** under a per-step token
+budget: every ``step()`` packs up to ``max_batch`` decode tokens plus
+chunks from up to ``max_prefills`` concurrently-PREFILLING requests
+into one jitted forward pass (``paged_model.mixed_step``), so long
+prefills no longer stall decoding.  The budget
+(``token_budget``, default ``max_batch + max_prefills * chunk_size``)
+governs *prefill* work: decode tokens (at most ``max_batch``, never
+trimmed — decode latency has priority) are charged against it first
+and prefill chunks are trimmed to what remains, with a 1-token floor
+so an in-flight prefill always progresses.  Admission defers a request
+whose prompt shares its leading block hash with an in-flight prefill so
+it can reuse the prefix pages once they register (cache-aware
+admission).  ``mixed_batching=False`` restores the legacy two-phase
+scheduler (one prefill at a time, separate decode batches).
+
 The engine takes an injectable ``clock`` so it runs identically under
 wall-clock (CPU examples/tests) and under the discrete-event cluster
 simulator (repro.core.sim).  A ``kv_pool_client`` hook connects it to
@@ -42,6 +57,36 @@ class EngineConfig:
     dtype: str = "float32"
     lora_rank: int = 8
     max_adapters: int = 8
+    # -- fused mixed-batch scheduler --
+    mixed_batching: bool = True     # False => legacy two-phase scheduler
+    max_prefills: int = 2           # concurrent PREFILLING requests
+    token_budget: int = 0           # 0 => max_batch + max_prefills*chunk
+
+    @property
+    def step_token_budget(self) -> int:
+        """Per-step budget charged decode-first; it trims prefill chunks
+        only — the decode batch itself is bounded by ``max_batch``, not
+        the budget (a budget below ``max_batch`` + 1 cannot throttle
+        decode, it just starves prefill down to its 1-token floor)."""
+        return self.token_budget or (
+            self.max_batch + self.max_prefills * self.chunk_size)
+
+
+def window_throughput(events, now: float, horizon: float = 10.0) -> float:
+    """tokens/sec over the span actually observed within ``horizon``.
+
+    ``events`` is a list of (timestamp, token_count).  A fixed-horizon
+    divisor deflated early/low-traffic readings (skewing gateway routing
+    and autoscaler signals); the 1 s floor keeps a single post-idle
+    burst from reading as a huge rate spike when polled within the same
+    instant.  Shared by InferenceEngine, SlotEngine and SimEngine so
+    their tokens_per_sec semantics cannot drift apart.
+    """
+    window = [(t, c) for t, c in events if t >= now - horizon]
+    if not window:
+        return 0.0
+    span = max(now - window[0][0], 1.0)
+    return sum(c for _, c in window) / span
 
 
 @dataclass
@@ -86,7 +131,7 @@ class InferenceEngine:
         self._adapter_ids: Dict[str, int] = {}
         self._free_adapter_slots = list(range(1, ecfg.max_adapters))
         self.waiting: List[Request] = []
-        self.prefilling: Optional[Request] = None
+        self.prefills: List[Request] = []      # concurrent PREFILLING
         self.running: List[Request] = []
         self.finished: List[Request] = []
         self._key = jax.random.PRNGKey(seed + 1)
@@ -131,21 +176,58 @@ class InferenceEngine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self.prefilling)
+        return bool(self.waiting or self.running or self.prefills)
+
+    @property
+    def prefilling(self) -> Optional[Request]:
+        """Back-compat view of the (first) in-flight prefill."""
+        return self.prefills[0] if self.prefills else None
 
     # ------------------------------------------------------------- helpers
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.ecfg.page_size)
 
+    def _first_hash(self, req: Request) -> Optional[str]:
+        hs = chunk_hashes(req.prompt_tokens[:self.ecfg.page_size],
+                          self.ecfg.page_size)
+        return hs[0] if hs else None
+
     def _try_admit(self) -> Optional[Request]:
-        if not self.waiting or len(self.running) >= self.ecfg.max_batch:
+        if not self.waiting or (len(self.running) + len(self.prefills)
+                                >= self.ecfg.max_batch):
             return None
-        req = self.waiting[0]
+        inflight_hashes = set()
+        if self.ecfg.prefix_caching and self.prefills:
+            inflight_hashes = {self._first_hash(p) for p in self.prefills}
+            inflight_hashes.discard(None)
+        req = None
+        idx = 0
+        while idx < len(self.waiting):
+            cand = self.waiting[idx]
+            total = cand.prompt_len + cand.sampling.max_new_tokens
+            if self._pages_for(total) > self.ecfg.max_pages_per_seq:
+                cand.state = RequestState.FAILED
+                self.waiting.pop(idx)
+                continue
+            if (inflight_hashes
+                    and cand.prompt_len > self.ecfg.page_size
+                    and self._first_hash(cand) in inflight_hashes
+                    and self.alloc.match_len(cand.prompt_tokens) == 0):
+                # cache-aware admission: a prompt sharing its leading
+                # block with an in-flight prefill waits for those pages
+                # to register so it can reuse them instead of
+                # recomputing the prefix — but only THAT request waits
+                # (later waiters with distinct prefixes still get the
+                # slot), and only when the wait can pay off: not when a
+                # registered prefix already matches, nor when the prompt
+                # is too short for match_prefix to ever reuse the block.
+                idx += 1
+                continue
+            req = cand
+            break
+        if req is None:
+            return None
         total = req.prompt_len + req.sampling.max_new_tokens
-        if self._pages_for(total) > self.ecfg.max_pages_per_seq:
-            req.state = RequestState.FAILED
-            self.waiting.pop(0)
-            return None
         now = self.clock()
         matched_pages: List[int] = []
         matched_tokens = 0
@@ -161,7 +243,7 @@ class InferenceEngine:
         if fresh is None:
             self.alloc.release(matched_pages, now)
             return None     # no memory — stay queued
-        self.waiting.pop(0)
+        self.waiting.remove(req)
         req.page_ids = matched_pages + fresh
         req.cached_prefix_tokens = matched_tokens
         req.prefill_done_tokens = matched_tokens
@@ -207,9 +289,10 @@ class InferenceEngine:
         chunk_len = len(chunk)
         toks = np.zeros((1, s), np.int32)
         toks[0, :chunk_len] = chunk
-        nb = ecfg.max_pages_per_seq
+        nb = self._bt_width(self._pages_for(start + chunk_len))
         bt = np.full((1, nb), ecfg.num_pages, np.int32)  # OOB scratch page
-        bt[0, :len(req.page_ids)] = req.page_ids
+        n = min(len(req.page_ids), nb)
+        bt[0, :n] = req.page_ids[:n]
         aid = self._adapter_ids.get(req.lora_adapter or "", 0)
         logits, self.pool = PM.prefill_step(
             self.params, self.pool, jnp.asarray(toks), jnp.asarray(bt),
@@ -218,16 +301,20 @@ class InferenceEngine:
             cfg=self.cfg, page_size=ecfg.page_size, impl=ecfg.impl)
         req.prefill_done_tokens += chunk_len
         if req.prefill_done_tokens >= req.prompt_len:
-            # register full prompt pages for prefix reuse + publish
-            self._register_prompt_pages(req)
-            tok = self._sample(logits, [req])[0]
-            now = self.clock()
-            req.output_tokens.append(int(tok))
-            req.first_token_time = now
-            req.state = RequestState.RUNNING
-            self.running.append(req)
-            self._note_tokens(req.prompt_len + 1)
-            self._maybe_finish(req)
+            self._finish_prefill(req, logits)
+
+    def _finish_prefill(self, req: Request, logits) -> None:
+        """Prefill complete: register pages, sample the first token, move
+        the request to the decode batch."""
+        self._register_prompt_pages(req)
+        tok = self._sample(logits, [req])[0]
+        now = self.clock()
+        req.output_tokens.append(int(tok))
+        req.first_token_time = now
+        req.state = RequestState.RUNNING
+        self.running.append(req)
+        self._note_tokens(req.prompt_len + 1)
+        self._maybe_finish(req)
 
     def _register_prompt_pages(self, req: Request) -> None:
         if not self.ecfg.prefix_caching:
@@ -245,26 +332,45 @@ class InferenceEngine:
                         self.engine_id, self.clock())
 
     # ------------------------------------------------------------- decode
-    def _decode(self) -> None:
+    def _bt_width(self, pages_needed: int) -> int:
+        """Bucketed block-table width: bounds the decode kernel's page
+        grid by what the batch actually uses (multiples of 4 to limit
+        recompiles) instead of the full ``max_pages_per_seq``."""
+        cap = -(-max(pages_needed, 1) // 4) * 4
+        return min(cap, self.ecfg.max_pages_per_seq)
+
+    def _decode_inputs(self, reqs):
         ecfg = self.ecfg
         b = ecfg.max_batch
-        reqs = self.running[:b]
+        nb = self._bt_width(max((self._pages_for(
+            r.prompt_len + len(r.output_tokens)) for r in reqs),
+            default=1))
         toks = np.zeros(b, np.int32)
         pos = np.zeros(b, np.int32)
-        bts = np.full((b, ecfg.max_pages_per_seq), ecfg.num_pages, np.int32)
+        bts = np.full((b, nb), ecfg.num_pages, np.int32)
         active = np.zeros(b, bool)
         aids = np.zeros(b, np.int32)
         for i, r in enumerate(reqs):
             toks[i] = r.output_tokens[-1]
             pos[i] = r.prompt_len + len(r.output_tokens) - 1
-            bts[i, :len(r.page_ids)] = r.page_ids
+            n = min(len(r.page_ids), nb)
+            bts[i, :n] = r.page_ids[:n]
             active[i] = True
             aids[i] = self._adapter_ids.get(r.lora_adapter or "", 0)
+        return toks, pos, bts, active, aids
+
+    def _decode(self) -> None:
+        ecfg = self.ecfg
+        reqs = self.running[:ecfg.max_batch]
+        toks, pos, bts, active, aids = self._decode_inputs(reqs)
         logits, self.pool = PM.decode_batch(
             self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
             jnp.asarray(bts), jnp.asarray(active), self.lora,
             jnp.asarray(aids), cfg=self.cfg, page_size=ecfg.page_size,
             impl=ecfg.impl)
+        self._postprocess_decode(reqs, logits)
+
+    def _postprocess_decode(self, reqs, logits) -> None:
         new = self._sample(logits, reqs)
         now = self.clock()
         for i, r in enumerate(reqs):
@@ -323,20 +429,111 @@ class InferenceEngine:
 
     # ------------------------------------------------------------- step
     def step(self) -> int:
-        """One scheduler iteration.  Returns #tokens produced."""
-        if self.prefilling is None:
-            self.prefilling = self._try_admit()
-        if self.prefilling is not None:
-            req = self.prefilling
+        """One scheduler iteration.  Returns #tokens produced.
+
+        Mixed batching (default): admit up to ``max_prefills`` requests
+        into PREFILLING, then run ONE fused forward pass carrying every
+        decode token plus a budget-trimmed chunk per in-flight prefill.
+        Legacy (``mixed_batching=False``): one prefill at a time, decode
+        only when no prefill is in flight.
+        """
+        if not self.ecfg.mixed_batching:
+            return self._step_two_phase()
+        while (len(self.prefills) < self.ecfg.max_prefills
+               and len(self.prefills) * self.ecfg.chunk_size
+               + min(len(self.running), self.ecfg.max_batch)
+               < self.ecfg.step_token_budget):
+            req = self._try_admit()
+            if req is None:
+                break
+            self.prefills.append(req)
+        if not self.prefills:
+            if not self.running:
+                return 0
+            n = len(self.running[:self.ecfg.max_batch])
+            self._decode()
+            return n
+        return self._mixed_step()
+
+    def _step_two_phase(self) -> int:
+        if not self.prefills:
+            req = self._try_admit()
+            if req is not None:
+                self.prefills.append(req)
+        if self.prefills:
+            req = self.prefills[0]
             self._prefill_one(req)
             if req.state != RequestState.PREFILLING:
-                self.prefilling = None
+                self.prefills.remove(req)
             return 1
         if self.running:
             n = len(self.running[:self.ecfg.max_batch])
             self._decode()
             return n
         return 0
+
+    def _mixed_step(self) -> int:
+        """One fused decode+prefill pass under the step token budget."""
+        ecfg = self.ecfg
+        b = ecfg.max_batch
+        kk = ecfg.max_prefills
+        dec_reqs = self.running[:b]
+        # decode tokens spend the budget first; floor of 1 guarantees an
+        # in-flight prefill always progresses (liveness under a budget
+        # tighter than the decode batch).
+        budget = max(ecfg.step_token_budget - len(dec_reqs), 1)
+        if ecfg.chunked_prefill:
+            s = ecfg.chunk_size
+        else:
+            s = max(max(p.prompt_len - p.prefill_done_tokens
+                        for p in self.prefills), 1)
+        # trim each in-flight prefill's chunk to the remaining budget
+        # (whole-prompt prefill is budget-exempt by definition)
+        chunk_lens = []
+        for p in self.prefills:
+            c = min(s, p.prompt_len - p.prefill_done_tokens)
+            if ecfg.chunked_prefill:
+                c = min(c, budget)
+            chunk_lens.append(c)
+            budget -= c
+        pre_toks = np.zeros((kk, s), np.int32)
+        pre_ctx = np.zeros(kk, np.int32)
+        pre_chunk = np.zeros(kk, np.int32)
+        pre_aids = np.zeros(kk, np.int32)
+        nb_pre = self._bt_width(max((self._pages_for(
+            p.prefill_done_tokens + c) for p, c in
+            zip(self.prefills, chunk_lens)), default=1))
+        pre_bts = np.full((kk, nb_pre), ecfg.num_pages, np.int32)
+        for i, (p, c) in enumerate(zip(self.prefills, chunk_lens)):
+            start = p.prefill_done_tokens
+            pre_toks[i, :c] = p.prompt_tokens[start:start + c]
+            pre_ctx[i] = start
+            pre_chunk[i] = c
+            n = min(len(p.page_ids), nb_pre)
+            pre_bts[i, :n] = p.page_ids[:n]
+            pre_aids[i] = self._adapter_ids.get(p.lora_adapter or "", 0)
+        toks, pos, bts, active, aids = self._decode_inputs(dec_reqs)
+        dec_logits, pre_logits, self.pool = PM.mixed_step(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bts), jnp.asarray(active), jnp.asarray(pre_toks),
+            jnp.asarray(pre_bts), jnp.asarray(pre_ctx),
+            jnp.asarray(pre_chunk), self.lora, jnp.asarray(aids),
+            jnp.asarray(pre_aids), cfg=self.cfg,
+            page_size=ecfg.page_size, impl=ecfg.impl)
+        produced = 0
+        # prefill bookkeeping first (their chunks are already in the pool)
+        for i, (p, c) in enumerate(list(zip(self.prefills, chunk_lens))):
+            if c == 0:
+                continue            # budget-starved this step
+            p.prefill_done_tokens += c
+            if p.prefill_done_tokens >= p.prompt_len:
+                self.prefills.remove(p)
+                self._finish_prefill(p, pre_logits[i][None])
+                produced += 1
+        if dec_reqs:
+            self._postprocess_decode(dec_reqs, dec_logits[:len(dec_reqs)])
+            produced += len(dec_reqs)
+        return produced
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
@@ -353,10 +550,9 @@ class InferenceEngine:
                             if t >= cutoff]
 
     def metrics(self) -> EngineMetrics:
-        span = 10.0
-        tput = sum(c for _, c in self._tok_window) / span
+        tput = window_throughput(self._tok_window, self.clock())
         return EngineMetrics(
-            num_running=len(self.running),
+            num_running=len(self.running) + len(self.prefills),
             num_waiting=len(self.waiting),
             kv_utilization=self.alloc.utilization,
             tokens_per_sec=tput,

@@ -1,15 +1,31 @@
 """Jitted paged-KV forward passes for serving (uniform-attention archs).
 
-This is the engine's "vLLM model runner" role: prefill writes K/V into a
-global page pool through per-request block tables; decode batches one
-token per sequence through the Pallas paged-attention kernel.  Both are
+This is the engine's "vLLM model runner" role.  Three entry points, all
 ``lax.scan``s over the stacked layer parameters of a single-run config
-(DENSE or MOE pattern), reusing the substrate's MoE/MLP/norm code.
+(DENSE or MOE pattern), reusing the substrate's MoE/MLP/norm code:
+
+- ``prefill_step``: one (possibly chunked) prefill for one request.
+  The chunk's K/V are scattered into the global page pool and the chunk
+  attends *directly over the pages* via the paged flash-prefill Pallas
+  kernel (``kernels/paged_prefill.py``) — no per-layer
+  ``k_pages[block_table]`` materialization, no dense (S, NB*page) mask.
+- ``decode_batch``: one token per sequence through the Pallas
+  paged-attention decode kernel.
+- ``mixed_step``: the fused continuous-batching step.  B decode tokens
+  and K prefill chunks are flattened into ONE (1, B + K*S, d) token
+  batch: embedding, norms, QKV/out projections, LoRA and the MLP/MoE
+  all run over the unified token dim (so the MXU sees one big matmul
+  per op instead of two small ones), and only attention forks — decode
+  rows through the decode kernel, chunk rows through the paged-prefill
+  kernel.  This is the vLLM-style mixed batch the engine's token-budget
+  scheduler drives.
 
 High-density LoRA (paper §3.2.1) is applied in-batch: every request
 carries an adapter id into a gathered (adapter, d, r) x (adapter, r, out)
 pair on the q/v projections — adapter 0 is the zero (base-model) adapter,
-so mixed batches of base + N adapters run in one step.
+so mixed batches of base + N adapters run in one step.  ``mixed_step``
+gathers one adapter pair per decode row and per chunk, so decode and
+prefill rows of different adapters coexist in the same fused pass.
 """
 from __future__ import annotations
 
@@ -101,6 +117,35 @@ def _qkv_lora(p_attn, cfg, x, positions, lora, adapter_ids):
     return q, k, v
 
 
+def _qkv_lora_mixed(p_attn, cfg, x, positions, lora, dec_adapter_ids,
+                    pre_adapter_ids, n_dec, n_pre, s):
+    """Like ``_qkv_lora`` for the flattened (1, B + K*S, d) mixed batch.
+
+    The adapter pair is gathered once per *request* — (B, d, r) for the
+    decode rows and (K, d, r) for the chunks — not per token: all S rows
+    of a chunk share one adapter, so a per-token gather would stream S
+    duplicate copies of the same weights per projection per layer."""
+    q, k, v = layers.attn_qkv(p_attn, cfg, x, positions)
+    if lora is not None:
+        d_model = x.shape[-1]
+
+        def delta(which, heads):
+            d_dec = _lora_delta(lora, which, x[0, :n_dec, None],
+                                dec_adapter_ids)               # (B, 1, out)
+            d_pre = _lora_delta(lora, which,
+                                x[0, n_dec:].reshape(n_pre, s, d_model),
+                                pre_adapter_ids)               # (K, S, out)
+            return jnp.concatenate(
+                [d_dec.reshape(n_dec, heads, cfg.head_dim),
+                 d_pre.reshape(n_pre * s, heads, cfg.head_dim)])[None]
+        dq = delta("q", cfg.n_heads)
+        dv = delta("v", cfg.n_kv_heads)
+        sin, cos = layers.rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+        q = q + layers.apply_rope(dq, sin, cos)
+        v = v + dv
+    return q, k, v
+
+
 # ---------------------------------------------------------------- prefill
 @functools.partial(
     jax.jit,
@@ -121,10 +166,11 @@ def prefill_step(params, pool: PagePool, tokens: jax.Array,
     Returns (last-token logits (1, V), updated pool).
     """
     s = tokens.shape[1]
-    nb = block_table.shape[1]
     positions = ctx_len + jnp.arange(s)[None]                  # (1, s)
     x = M.embed(params, cfg, tokens)
     ltype = cfg.layer_runs[0][0]
+    ctx1 = jnp.reshape(ctx_len, (1,)).astype(jnp.int32)
+    chunk1 = jnp.reshape(chunk_len, (1,)).astype(jnp.int32)
 
     def body(x, xs):
         p_l, kp_l, vp_l = xs
@@ -139,12 +185,9 @@ def prefill_step(params, pool: PagePool, tokens: jax.Array,
         slot = tok_pos % page_size
         kp_l = kp_l.at[pidx, slot].set(k[0], mode="drop")
         vp_l = vp_l.at[pidx, slot].set(v[0], mode="drop")
-        # gather full context (ctx + chunk) for flash attention
-        k_all = kp_l[block_table[0]].reshape(1, nb * page_size,
-                                             cfg.n_kv_heads, cfg.head_dim)
-        v_all = vp_l[block_table[0]].reshape(1, nb * page_size,
-                                             cfg.n_kv_heads, cfg.head_dim)
-        o = _flash_dyn(q, k_all, v_all, ctx_len, chunk_len, impl)
+        # chunk attends directly over the pages (ctx + chunk), no gather
+        o = kops.paged_prefill(q, kp_l, vp_l, block_table, ctx1, chunk1,
+                               impl=impl)
         a = layers.attn_out(p_l["attn"], o)
         x = x + a
         h2 = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
@@ -161,35 +204,6 @@ def prefill_step(params, pool: PagePool, tokens: jax.Array,
     last = jnp.take(x, jnp.maximum(chunk_len - 1, 0), axis=1)[:, None]
     logits = M.unembed(params, cfg, last)[:, 0]
     return logits, PagePool(k_new, v_new)
-
-
-def _flash_dyn(q, k_all, v_all, ctx_len, chunk_len, impl):
-    """flash attention where q sits at dynamic offset ctx_len.
-
-    The kernel wants a static q_offset; we instead fold the offset into
-    per-token positions by passing lengths = ctx+chunk and masking via
-    the ref-style path: positions of q are [ctx, ctx+s) which equals a
-    causal mask over k < ctx + 1 + i.  We reuse the kernel with
-    q_offset=0 by shifting: causal over absolute positions requires
-    q_offset=ctx (dynamic).  Pallas grid params must be static, so we
-    use the oracle for dynamic offsets — on TPU the engine pads chunks
-    to fixed boundaries making ctx static per compiled shape.
-    """
-    from repro.kernels import ref as kref
-    s = q.shape[1]
-    qpos = ctx_len + jnp.arange(s)
-    kpos = jnp.arange(k_all.shape[1])
-    mask = (kpos[None, :] <= qpos[:, None])[None]
-    mask &= (kpos < ctx_len + chunk_len)[None, None]
-    b, sq, h, d = q.shape
-    hkv = k_all.shape[2]
-    g = h // hkv
-    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, sq, hkv, g, d)
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_all.astype(jnp.float32))
-    logits = jnp.where(mask[:, None, None], logits, kref.NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_all.astype(jnp.float32))
-    return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
 # ---------------------------------------------------------------- decode
@@ -242,3 +256,95 @@ def decode_batch(params, pool: PagePool, tokens: jax.Array,
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = M.unembed(params, cfg, x)[:, 0]
     return logits, PagePool(k_new, v_new)
+
+
+# ---------------------------------------------------------------- mixed step
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "page_size", "impl"),
+    donate_argnums=(1,))
+def mixed_step(params, pool: PagePool,
+               dec_tokens: jax.Array, dec_positions: jax.Array,
+               dec_block_tables: jax.Array, dec_active: jax.Array,
+               pre_tokens: jax.Array, pre_block_tables: jax.Array,
+               pre_ctx: jax.Array, pre_chunk: jax.Array,
+               lora=None, dec_adapter_ids: Optional[jax.Array] = None,
+               pre_adapter_ids: Optional[jax.Array] = None, *,
+               cfg: ModelConfig, page_size: int, impl: str = "pallas"
+               ) -> Tuple[jax.Array, jax.Array, PagePool]:
+    """One fused continuous-batching step: B decode tokens + K prefill
+    chunks in a single forward pass over one flattened token batch.
+
+    dec_tokens:       (B,) int32; dec_positions: (B,) next position
+    dec_block_tables: (B, NBd); dec_active: (B,) bool
+    pre_tokens:       (K, S) chunk tokens (padded; ``pre_chunk`` valid)
+    pre_block_tables: (K, NBp); pre_ctx/pre_chunk: (K,) int32
+                      (pre_chunk == 0 marks an idle prefill slot)
+    Returns (decode logits (B, V), prefill last-token logits (K, V),
+    updated pool).  The token budget of the pass is B + K*S.
+    """
+    b = dec_tokens.shape[0]
+    kk, s = pre_tokens.shape
+    h_, hkv = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.head_dim
+    ltype = cfg.layer_runs[0][0]
+
+    pre_positions = pre_ctx[:, None] + jnp.arange(s)[None]     # (K, S)
+    tokens_flat = jnp.concatenate([dec_tokens, pre_tokens.reshape(-1)])
+    positions_flat = jnp.concatenate(
+        [dec_positions, pre_positions.reshape(-1)])            # (T,)
+    x = M.embed(params, cfg, tokens_flat[None])                # (1, T, d)
+    dec_lengths = jnp.where(dec_active, dec_positions + 1, 0).astype(
+        jnp.int32)
+    bidx = jnp.arange(b)
+    kidx = jnp.arange(kk)
+    in_range = jnp.arange(s)[None] < pre_chunk[:, None]        # (K, S)
+
+    def body(x, xs):
+        p_l, kp_l, vp_l = xs
+        oob = kp_l.shape[0]
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _qkv_lora_mixed(p_l["attn"], cfg, h,
+                                  positions_flat[None], lora,
+                                  dec_adapter_ids, pre_adapter_ids,
+                                  b, kk, s)
+        # scatter all new K/V (decode tokens + prefill chunks) at once
+        pidx_d = jnp.where(dec_active,
+                           dec_block_tables[bidx,
+                                            dec_positions // page_size],
+                           oob)
+        pidx_p = jnp.where(
+            in_range,
+            pre_block_tables[kidx[:, None], pre_positions // page_size],
+            oob)
+        pidx = jnp.concatenate([pidx_d, pidx_p.reshape(-1)])
+        slot = jnp.concatenate([dec_positions % page_size,
+                                (pre_positions % page_size).reshape(-1)])
+        kp_l = kp_l.at[pidx, slot].set(k[0], mode="drop")
+        vp_l = vp_l.at[pidx, slot].set(v[0], mode="drop")
+        # attention forks: decode rows vs chunk rows, both over pages
+        o_dec = kops.paged_attention(q[0, :b], kp_l, vp_l,
+                                     dec_block_tables, dec_lengths,
+                                     impl=impl)                # (B, H, D)
+        o_pre = kops.paged_prefill(q[0, b:].reshape(kk, s, h_, hd),
+                                   kp_l, vp_l, pre_block_tables,
+                                   pre_ctx, pre_chunk, impl=impl)
+        o = jnp.concatenate([o_dec, o_pre.reshape(kk * s, h_, hd)])[None]
+        a = layers.attn_out(p_l["attn"], o)
+        x = x + a
+        h2 = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if ltype == MOE:
+            f, _aux = moe.moe_ffn(p_l["moe"], cfg.moe, h2, cfg.act)
+        else:
+            f = layers.mlp(p_l["mlp"], h2, cfg.act)
+        return x + f, (kp_l, vp_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["run_0"], pool.k,
+                                               pool.v))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # only unembed the rows that produce tokens: every decode row plus
+    # each chunk's last valid row
+    sel = jnp.concatenate(
+        [bidx, b + kidx * s + jnp.maximum(pre_chunk - 1, 0)])
+    logits = M.unembed(params, cfg, x[0, sel][None])[0]        # (B+K, V)
+    return logits[:b], logits[b:], PagePool(k_new, v_new)

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.engine import EngineMetrics
+from repro.engine.engine import EngineMetrics, window_throughput
 from repro.engine.request import Request, RequestState
 from repro.engine.sampling import sample
 from repro.models import model as M
@@ -196,6 +196,6 @@ class SlotEngine:
         return EngineMetrics(
             num_running=used, num_waiting=len(self.waiting),
             kv_utilization=used / max(self.ecfg.max_slots, 1),
-            tokens_per_sec=sum(c for _, c in self._tok_window) / 10.0,
+            tokens_per_sec=window_throughput(self._tok_window, now),
             avg_latency=self._lat_ewma,
             finished_requests=self._fin)

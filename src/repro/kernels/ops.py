@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_prefill import paged_prefill as _paged_pre
 
 
 def _on_tpu() -> bool:
@@ -29,6 +30,24 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                        lengths)
     return _paged(q, k_pages, v_pages, block_tables, lengths,
                   interpret=not _on_tpu())
+
+
+def paged_prefill(q, k_pages, v_pages, block_tables, ctx_lens, chunk_lens,
+                  *, block_q: int = 128, impl: str = "pallas"):
+    """Chunked-prefill attention directly over paged KV (chunk K/V must
+    already be scattered into the pages).  Pads the chunk dim to a
+    block_q multiple; see kernels/ref.py for shapes."""
+    if impl == "ref":
+        return ref.paged_prefill_ref(q, k_pages, v_pages, block_tables,
+                                     ctx_lens, chunk_lens)
+    b, s, h, d = q.shape
+    bq = min(block_q, _round_up(s, 8))
+    s_p = _round_up(s, bq)
+    if s_p != s:
+        q = jnp.pad(q, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+    out = _paged_pre(q, k_pages, v_pages, block_tables, ctx_lens,
+                     chunk_lens, block_q=bq, interpret=not _on_tpu())
+    return out[:, :s]
 
 
 def flash_attention(q, k, v, lengths, *, window: int = 0, q_offset: int = 0,

@@ -101,16 +101,21 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     g = h // hkv
     q4 = q.reshape(b, hkv, g, d)
 
+    def kv_map(b_, h_, i_, bt, ln):
+        # pages past the sequence length are masked out of compute; clamp
+        # their index to the last live page so the dead grid steps re-stage
+        # an already-resident page instead of DMA'ing padding entries.
+        last = jnp.maximum((ln[b_] + page_size - 1) // page_size - 1, 0)
+        return bt[b_, jnp.minimum(i_, last)], 0, h_, 0
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, nb),
         in_specs=[
             pl.BlockSpec((1, 1, g, d), lambda b_, h_, i_, bt, ln:
                          (b_, h_, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d), lambda b_, h_, i_, bt, ln:
-                         (bt[b_, i_], 0, h_, 0)),
-            pl.BlockSpec((1, page_size, 1, d), lambda b_, h_, i_, bt, ln:
-                         (bt[b_, i_], 0, h_, 0)),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, i_, bt, ln:
                                (b_, h_, 0, 0)),

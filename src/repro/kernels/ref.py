@@ -40,6 +40,43 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_prefill_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      block_tables: jax.Array, ctx_lens: jax.Array,
+                      chunk_lens: jax.Array) -> jax.Array:
+    """Chunked-prefill attention over a paged KV cache (dense oracle).
+
+    q:            (B, S, H, D)      one prefill chunk per request; row j
+                                    sits at absolute pos ctx_lens[b] + j
+    k_pages:      (P, page, Hkv, D) global page pool (chunk K/V already
+    v_pages:      (P, page, Hkv, D)  scattered in)
+    block_tables: (B, NB) int32     pages covering [0, ctx+chunk)
+    ctx_lens:     (B,) int32        tokens in pages before the chunk
+    chunk_lens:   (B,) int32        valid chunk tokens (rows beyond are
+                                    padding; their output rows are 0)
+    returns:      (B, S, H, D)
+    """
+    b, s, h, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    g = h // hkv
+    k = k_pages[block_tables].reshape(b, nb * page, hkv, d)
+    v = v_pages[block_tables].reshape(b, nb * page, hkv, d)
+    qpos = ctx_lens[:, None] + jnp.arange(s)[None]             # (B, S)
+    kpos = jnp.arange(nb * page)
+    total = (ctx_lens + chunk_lens)[:, None, None]
+    mask = (kpos[None, None, :] <= qpos[:, :, None]) \
+        & (kpos[None, None, :] < total) \
+        & (jnp.arange(s)[None, :, None] < chunk_lens[:, None, None])
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    any_valid = mask.any(-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
 def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                       lengths: jax.Array, *, window: int = 0,
                       q_offset: int = 0) -> jax.Array:

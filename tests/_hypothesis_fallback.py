@@ -1,0 +1,116 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite property-tests several control-plane components with
+hypothesis.  The container image does not ship it, so this module
+implements the tiny subset the tests use — ``given``/``settings``/
+``HealthCheck`` and the ``integers``/``floats``/``lists``/
+``sampled_from``/``composite`` strategies — as plain seeded random
+sampling (no shrinking, fixed example counts).  Test modules import it
+via::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+so installing the real hypothesis transparently upgrades the suite.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A strategy is just a callable drawing one example from an RNG."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def composite(fn):
+    """``@st.composite`` — fn(draw, *args) becomes a strategy factory."""
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_example(rng):
+            def draw(strategy):
+                return strategy.example(rng)
+            return fn(draw, *args, **kwargs)
+        return _Strategy(draw_example)
+    return factory
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             suppress_health_check=(), **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # settings() is applied OUTSIDE given() and stamps the count
+            # on this wrapper — read it at call time, not decoration time.
+            max_examples = getattr(wrapper, "_fallback_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(max_examples):
+                drawn = tuple(s.example(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # resolve the property arguments as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    composite = staticmethod(composite)
+
+
+st = _StrategiesModule()

@@ -1,7 +1,11 @@
 """Autoscaler policies + sliding-window metrics (paper §3.2.4)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.autoscaler import (APA, HPA, KPA, MetricStore,
                                    SlidingWindow, make_autoscaler)

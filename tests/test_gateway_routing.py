@@ -2,9 +2,13 @@
 from dataclasses import dataclass, field
 from typing import List
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.gateway import Gateway, RateLimit
 from repro.core.gateway.router import POLICIES, make_policy

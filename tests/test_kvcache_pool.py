@@ -1,7 +1,10 @@
 """Distributed KV cache pool + eviction policies: unit and property
 tests (hypothesis) for the paper's §3.2.5 mechanisms."""
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+except ImportError:                       # pragma: no cover
+    from _hypothesis_fallback import HealthCheck, given, settings, st
 
 from repro.core.kvcache.eviction import LRU, LRUK, S3FIFO
 from repro.core.kvcache.pool import DistributedKVPool

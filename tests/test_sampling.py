@@ -1,9 +1,13 @@
 """Sampler properties: greedy determinism, top-k/top-p support bounds."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
 
 from repro.engine.sampling import sample
 

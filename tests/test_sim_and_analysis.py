@@ -1,11 +1,15 @@
 """Simulator internals, workload generators, analytic roofline model,
 and the HLO collective parser."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.core.sim.events import EventLoop
