@@ -90,4 +90,8 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced request count (CI smoke)")
+    main(quick=ap.parse_args().quick)

@@ -71,9 +71,12 @@ class DistributedKVPool:
         self.clock = clock or (lambda: 0.0)
         self.blocks: Dict[str, KVBlock] = {}
         self.stats = PoolStats()
-        # async metadata queue: (visible_at, hash, block)
+        # async metadata queue: (visible_at, hash, block), plus an O(1)
+        # membership set (contains()/publish dedup sit on the engines'
+        # per-block prefill-completion hot path)
         self._pending: "collections.deque[Tuple[float, str, KVBlock]]" = \
             collections.deque()
+        self._pending_hashes: set = set()
         # engine node map (engine_id -> node id) for colocation checks
         self._engine_node: Dict[str, str] = {}
 
@@ -86,8 +89,7 @@ class DistributedKVPool:
                 now: Optional[float] = None, size_bytes: int = 0) -> bool:
         """Async publish; returns False when dropped as duplicate."""
         now = self.clock() if now is None else now
-        if block_hash in self.blocks or any(
-                h == block_hash for _, h, _ in self._pending):
+        if self.contains(block_hash):
             self.stats.dup_puts_dropped += 1
             return False
         blk = KVBlock(block_hash, payload,
@@ -95,6 +97,7 @@ class DistributedKVPool:
                       home_node=self._engine_node.get(engine_id, engine_id),
                       created_at=now)
         self._pending.append((now + self.metadata_lag, block_hash, blk))
+        self._pending_hashes.add(block_hash)
         self.stats.puts += 1
         self.stats.pending_metadata = len(self._pending)
         return True
@@ -105,11 +108,38 @@ class DistributedKVPool:
         n = 0
         while self._pending and self._pending[0][0] <= now:
             _, h, blk = self._pending.popleft()
+            self._pending_hashes.discard(h)
             if h in self.blocks:
                 self.stats.dup_puts_dropped += 1
                 continue
             self._insert(blk)
             n += 1
+        self.stats.pending_metadata = len(self._pending)
+        return n
+
+    def flush_hashes(self, hashes, now: Optional[float] = None) -> int:
+        """Synchronously make SPECIFIC pending records visible — a
+        handoff barrier for disaggregated prefill engines, which must
+        not hand a request off before its published blocks are
+        fetchable.  Other engines' pending records keep their
+        configured metadata lag.  Returns #flushed."""
+        wanted = set(hashes) & self._pending_hashes
+        if not wanted:
+            return 0
+        n = 0
+        keep: "collections.deque" = collections.deque()
+        while self._pending:
+            vis, h, blk = self._pending.popleft()
+            if h not in wanted:
+                keep.append((vis, h, blk))
+                continue
+            self._pending_hashes.discard(h)
+            if h in self.blocks:
+                self.stats.dup_puts_dropped += 1
+            else:
+                self._insert(blk)
+                n += 1
+        self._pending = keep
         self.stats.pending_metadata = len(self._pending)
         return n
 
@@ -129,7 +159,11 @@ class DistributedKVPool:
 
     # ------------------------------------------------------------ fetch
     def contains(self, block_hash: str) -> bool:
-        return block_hash in self.blocks
+        """Known to the pool: visible OR queued in the async metadata
+        path (fetchable after the lag; a publish would be dropped as a
+        duplicate) — so engines can skip materializing payloads for
+        blocks published moments ago."""
+        return block_hash in self.blocks or block_hash in self._pending_hashes
 
     def fetch(self, block_hash: str, engine_id: str,
               now: Optional[float] = None) -> Optional[Any]:

@@ -4,30 +4,40 @@
 ``InferenceEngine`` (submit / step-driven progress / metrics /
 match_prefix_len / adapter hooks) but advances on the discrete-event
 loop with a roofline cost model (repro.core.optimizer.profiles) instead
-of executing matmuls.  Crucially it reuses the *real* page allocator and
-content-hash prefix cache, and speaks to the *real* distributed KV pool
-— so cache hit/miss/eviction behaviour in benchmarks is produced by the
-actual pool code, only the FLOPs are analytic.
+of executing matmuls.  Crucially it reuses the *real* page allocator,
+content-hash prefix cache AND the *real* unified Scheduler
+(repro.engine.scheduler) — the exact admission / budget / role /
+finish code the JAX engine runs — and speaks to the *real* distributed
+KV pool.  Cache hit/miss/eviction behaviour and scheduling decisions
+in benchmarks are produced by the production code; only the FLOPs are
+analytic (the roofline cost model plays the ModelRunner's part).
 
-Iteration model (vLLM-style continuous batching):
+Iteration model (vLLM-style continuous batching, the scheduler's
+legacy two-phase mode):
   * each engine iteration is either a prefill chunk (compute-bound) or
     one decode step for the running batch (bandwidth-bound)
   * prefix-cache hits (local or distributed-pool) skip prefill compute
     for the covered tokens; pool fetches pay a transfer-time cost
   * faults (repro.core.diagnostics) scale iteration time via
     ``slowdown`` — a dead device stops making progress.
+
+P/D disaggregation (paper §3.2.5): ``role="prefill"`` engines publish
+KV to the pool and hand requests off after the pool's metadata lag;
+``role="decode"`` engines pull prefilled KV from the pool — the role
+semantics themselves live in the shared Scheduler.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 from repro.core.kvcache.pool import DistributedKVPool
 from repro.core.optimizer.profiles import DEVICES, PerfModel
 from repro.core.sim.events import EventLoop
-from repro.engine.engine import EngineMetrics, window_throughput
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
+from repro.engine.scheduler import (EngineMetrics, Scheduler,
+                                    SchedulerConfig)
 from repro.models.config import ModelConfig
 
 
@@ -48,6 +58,19 @@ class SimEngineConfig:
     #             off (never decodes)
     #   decode  — pulls prefilled KV from the pool, decodes only
     role: str = "mixed"
+
+    def scheduler_config(self) -> SchedulerConfig:
+        """The shared Scheduler in its legacy two-phase mode (one
+        prefill at a time — the simulator's iteration granularity)."""
+        return SchedulerConfig(
+            page_size=self.page_size, max_batch=self.max_batch,
+            max_pages_per_seq=0,            # sim: no per-seq page cap
+            chunk_size=self.chunk_size,
+            chunked_prefill=self.chunked_prefill,
+            prefix_caching=self.prefix_caching,
+            mixed_batching=False, max_prefills=1,
+            honor_stop_token=False,     # sim decode tokens are
+            role=self.role)             # synthetic zeros
 
 
 class SimEngine:
@@ -72,28 +95,21 @@ class SimEngine:
                         - self.perf.param_bytes, dev.hbm_bytes * 0.05)
         num_pages = int(kv_budget
                         / (self.perf.kv_bytes_per_token * self.sc.page_size))
-        self.alloc = PageAllocator(max(num_pages, 16), self.sc.page_size)
-        self.waiting: List[Request] = []
-        self.prefilling: Optional[Request] = None
-        self.running: List[Request] = []
-        self.finished: List[Request] = []
+        self.sched = Scheduler(
+            self.sc.scheduler_config(),
+            PageAllocator(max(num_pages, 16), self.sc.page_size),
+            kv_pool=kv_pool, engine_id=engine_id,
+            install_page=self._install_page,
+            publish_page=self._publish_page)
         self.slowdown_fn: Callable[[], float] = lambda: 1.0
-        self.handoff: Optional[Callable[[Request], None]] = None
-        self._pending_handoff = 0
         self._busy = False
         self._adapters: set = set()
-        self._m = dict(admitted=0, done=0, preempt=0, prefix_hit=0,
-                       remote_hit=0)
-        self._tok_events: List[tuple] = []
-        self._lat_ewma = 0.0
-        self._q_ewma = 0.0
+        self._m: dict = {}              # sim-only counters (migrations)
         self.alive = True
 
     # ---------------------------------------------------------- contract
     def submit(self, req: Request) -> None:
-        if req.arrival_time == 0.0:
-            req.arrival_time = self.loop.clock.now
-        self.waiting.append(req)
+        self.sched.enqueue(req, self.loop.clock.now)
         self._kick()
 
     def register_adapter(self, name: str, weights=None) -> None:
@@ -103,15 +119,43 @@ class SimEngine:
         self._adapters.discard(name)
 
     def match_prefix_len(self, tokens) -> int:
-        return self.alloc.match_len(tokens)
+        return self.sched.match_prefix_len(tokens)
 
     def healthy(self) -> bool:
         return self.alive and self.slowdown_fn() > 0.0
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self.prefilling
-                    or self._pending_handoff)
+        return self.sched.has_work
+
+    # back-compat views over the shared scheduler's queues
+    @property
+    def alloc(self) -> PageAllocator:
+        return self.sched.alloc
+
+    @property
+    def waiting(self) -> List[Request]:
+        return self.sched.waiting
+
+    @property
+    def running(self) -> List[Request]:
+        return self.sched.running
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.sched.finished
+
+    @property
+    def prefilling(self) -> Optional[Request]:
+        return self.sched.prefills[0] if self.sched.prefills else None
+
+    @property
+    def handoff(self):
+        return self.sched.handoff
+
+    @handoff.setter
+    def handoff(self, fn) -> None:
+        self.sched.handoff = fn
 
     # ---------------------------------------------------------- scheduling
     def _kick(self) -> None:
@@ -119,58 +163,24 @@ class SimEngine:
             self._busy = True
             self.loop.after(0.0, self._iterate)
 
-    def _pages_for(self, n: int) -> int:
-        return -(-n // self.sc.page_size)
+    def _install_page(self, pid: int, payload, req: Request,
+                      now: float) -> None:
+        """Payload hook for the shared Scheduler's pool walk: the sim
+        stores no arrays — each fetched page attributes a transfer-time
+        cost to the request (paid once at admit — pipelined
+        transfers)."""
+        req._remote_fetch_s = (               # type: ignore[attr-defined]
+            getattr(req, "_remote_fetch_s", 0.0)
+            + self.perf.kv_bytes_per_token * self.sc.page_size
+            / self.kv_pool.network_bw)
 
-    def _try_admit(self) -> Optional[Request]:
-        if not self.waiting or len(self.running) >= self.sc.max_batch:
-            return None
-        req = self.waiting[0]
-        now = self.loop.clock.now
-        total = req.prompt_len + req.sampling.max_new_tokens
-        matched_pages, matched = [], 0
-        if self.sc.prefix_caching:
-            matched_pages, matched = self.alloc.match_prefix(
-                req.prompt_tokens, now)
-        remote_pages = 0
-        # the distributed pool works even when engine-local prefix
-        # caching is off (the paper's "KV cache + Default" rows):
-        # cross-engine reuse is the pool's, not the engine's, feature
-        if self.kv_pool is not None:
-            hashes = chunk_hashes(req.prompt_tokens, self.sc.page_size)
-            i = matched // self.sc.page_size
-            while i < len(hashes) and \
-                    (i + 1) * self.sc.page_size < req.prompt_len:
-                if self.kv_pool.fetch(hashes[i], self.engine_id, now) is None:
-                    break
-                pids = self.alloc.allocate(1, now)
-                if not pids:
-                    break
-                self.alloc.register_hash(pids[0], hashes[i])
-                matched_pages += pids
-                matched += self.sc.page_size
-                remote_pages += 1
-                i += 1
-        need = self._pages_for(total) - len(matched_pages)
-        fresh = self.alloc.allocate(need, now)
-        if fresh is None:
-            self.alloc.release(matched_pages, now)
-            return None
-        self.waiting.pop(0)
-        req.page_ids = matched_pages + fresh
-        req.cached_prefix_tokens = matched
-        req.prefill_done_tokens = matched
-        req.state = RequestState.PREFILLING
-        req.schedule_time = now
-        # remote fetch cost is paid once at admit (pipelined transfers)
-        req._remote_fetch_s = remote_pages * (  # type: ignore[attr-defined]
-            self.perf.kv_bytes_per_token * self.sc.page_size
-            / self.kv_pool.network_bw) if remote_pages else 0.0
-        self._m["admitted"] += 1
-        self._m["prefix_hit"] += matched - remote_pages * self.sc.page_size
-        self._m["remote_hit"] += remote_pages * self.sc.page_size
-        self._q_ewma = 0.9 * self._q_ewma + 0.1 * req.queue_time
-        return req
+    def _publish_page(self, pid: int, block_hash: str, req: Request,
+                      now: float) -> None:
+        """Payload hook for the shared prompt-page registration: the
+        sim publishes a payload-less record sized by the cost model."""
+        self.kv_pool.publish(
+            block_hash, True, self.engine_id, now,
+            size_bytes=self.perf.kv_bytes_per_token * self.sc.page_size)
 
     def _iterate(self) -> None:
         now = self.loop.clock.now
@@ -178,114 +188,45 @@ class SimEngine:
         if not self.alive or slow <= 0.0:
             self._busy = False        # dead engine: progress stops
             return
-        if self.prefilling is None:
-            self.prefilling = self._try_admit()
+        out = self.sched.schedule(now)
         dt = self.sc.scheduler_overhead_s
-        if self.prefilling is not None:
-            req = self.prefilling
-            remaining = req.prompt_len - req.prefill_done_tokens
-            chunk = min(self.sc.chunk_size if self.sc.chunked_prefill
-                        else remaining, remaining)
-            dt += self.perf.prefill_time(chunk) / (self._speed * slow)
+        if out.prefills:
+            work = out.prefills[0]
+            req = work.req
+            dt += self.perf.prefill_time(work.chunk_len) \
+                / (self._speed * slow)
             dt += getattr(req, "_remote_fetch_s", 0.0)
             req._remote_fetch_s = 0.0       # type: ignore[attr-defined]
-            req.prefill_done_tokens += chunk
-            if req.prefill_done_tokens >= req.prompt_len:
+            if self.sched.note_prefill_progress(req, work.chunk_len):
                 self._finish_prefill(req, now + dt)
-        elif self.running:
-            batch = self.running[:self.sc.max_batch]
+        elif out.decode:
+            batch = out.decode
             ctx = sum(r.total_tokens for r in batch) / len(batch)
             dt += self.perf.decode_step_time(len(batch), ctx) \
                 / (self._speed * slow)
-            t_done = now + dt
-            for r in list(batch):
-                r.output_tokens.append(0)
-                r.token_times.append(t_done)
-                nxt = r.total_tokens
-                if self._pages_for(nxt + 1) > len(r.page_ids):
-                    pid = self.alloc.allocate(1, t_done)
-                    if pid is None:
-                        self._preempt(r)
-                        continue
-                    r.page_ids += pid
-                self._maybe_finish(r, t_done)
-            self._note_tokens(t_done, len(batch))
+            self.sched.on_decode_batch(batch, [0] * len(batch), now + dt)
         else:
             self._busy = False
             return
         self.loop.after(dt, self._iterate)
 
     def _finish_prefill(self, req: Request, t: float) -> None:
-        # register prompt pages for local reuse + publish to the pool
-        if self.sc.prefix_caching or self.kv_pool is not None:
-            hashes = chunk_hashes(req.prompt_tokens, self.sc.page_size)
-            for i, h in enumerate(hashes):
-                pid = req.page_ids[i]
-                if self.alloc.pages[pid].block_hash is None:
-                    if self.sc.prefix_caching:
-                        self.alloc.register_hash(pid, h)
-                    if self.kv_pool is not None:
-                        size = (self.perf.kv_bytes_per_token
-                                * self.sc.page_size)
-                        self.kv_pool.publish(h, True, self.engine_id, t,
-                                             size_bytes=size)
-        if self.sc.role == "prefill" and self.handoff is not None:
+        self.sched.register_prompt_pages(req, t)
+        if self.sched.wants_handoff:
             # disaggregated: KV is in the pool; hand the request to a
-            # decode engine and free this engine for the next prefill
-            self.alloc.release(req.page_ids, t)
-            req.page_ids = []
-            req.state = RequestState.QUEUED
-            req.prefill_done_tokens = 0
-            self.prefilling = None
-            self._note_tokens(t, req.prompt_len // self.sc.chunk_size + 1)
-            # hand off after the pool's metadata lag so the decode side
-            # sees the published blocks; track the in-flight request so
-            # drain predicates don't observe a momentarily idle pair
-            self._pending_handoff += 1
+            # decode engine and free this engine for the next prefill.
+            # Deliver after the pool's metadata lag so the decode side
+            # sees the published blocks (the scheduler tracks the
+            # in-flight request so drain predicates don't observe a
+            # momentarily idle pair).
+            self.sched.handoff_prefill(req, t)
             lag = self.kv_pool.metadata_lag if self.kv_pool else 0.0
-
-            def deliver(req=req):
-                self._pending_handoff -= 1
-                self.handoff(req)
-
             # schedule from the (forward-dated) prefill completion time
-            self.loop.schedule(t + lag * 1.01, deliver)
+            self.loop.schedule(t + lag * 1.01,
+                               lambda: self.sched.deliver_handoff(req))
             return
-        req.output_tokens.append(0)
-        if req.first_token_time:
-            req.token_times.append(t)        # migrated-in continuation
-        else:
-            req.first_token_time = t
-        req.state = RequestState.RUNNING
-        self.prefilling = None
-        self.running.append(req)
-        self._note_tokens(t, 1)
-        self._maybe_finish(req, t)
-
-    def _maybe_finish(self, req: Request, t: float) -> None:
-        if len(req.output_tokens) < req.sampling.max_new_tokens:
-            return
-        req.finish_time = t
-        req.state = RequestState.FINISHED
-        if req in self.running:
-            self.running.remove(req)
-        self.alloc.release(req.page_ids, t)
-        req.page_ids = []
-        self.finished.append(req)
-        self._m["done"] += 1
-        self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
-                          if self._lat_ewma else req.total_latency)
-
-    def _preempt(self, req: Request) -> None:
-        if req in self.running:
-            self.running.remove(req)
-        self.alloc.release(req.page_ids, self.loop.clock.now)
-        req.page_ids = []
-        req.output_tokens = []
-        req.prefill_done_tokens = 0
-        req.state = RequestState.QUEUED
-        self.waiting.insert(0, req)
-        self._m["preempt"] += 1
+        self.sched.finish_prefill(req, 0, t)
+        self.sched.note_tokens(t, 1)
 
     # ------------------------------------------------------- migration
     def migrate_out(self, req: Request, target: "SimEngine") -> bool:
@@ -294,7 +235,7 @@ class SimEngine:
         migration").  All of the sequence's KV blocks — prompt AND
         generated — are published; the target re-admits the request and
         pulls them by hash, so only the block tail is recomputed."""
-        if req not in self.running or self.kv_pool is None:
+        if req not in self.sched.running or self.kv_pool is None:
             return False
         now = self.loop.clock.now
         # publish every full block of (prompt + generated) tokens
@@ -304,9 +245,7 @@ class SimEngine:
         for h in hashes:
             self.kv_pool.publish(h, True, self.engine_id, now,
                                  size_bytes=size)
-        self.running.remove(req)
-        self.alloc.release(req.page_ids, now)
-        req.page_ids = []
+        self.sched.drop_running(req, now)
         # target treats the full sequence-so-far as its "prompt": the
         # generated tokens keep their identity via req.output_tokens
         req._migrated_prompt = seq            # type: ignore[attr-defined]
@@ -320,24 +259,7 @@ class SimEngine:
         return True
 
     # ---------------------------------------------------------- metrics
-    def _note_tokens(self, t: float, n: int) -> None:
-        self._tok_events.append((t, n))
-        cutoff = t - 10.0
-        while self._tok_events and self._tok_events[0][0] < cutoff:
-            self._tok_events.pop(0)
-
     def metrics(self) -> EngineMetrics:
-        tput = window_throughput(self._tok_events, self.loop.clock.now)
-        return EngineMetrics(
-            num_running=len(self.running) + (1 if self.prefilling else 0),
-            num_waiting=len(self.waiting),
-            kv_utilization=self.alloc.utilization,
-            tokens_per_sec=tput,
-            avg_latency=self._lat_ewma,
-            avg_queue_time=self._q_ewma,
-            admitted_requests=self._m["admitted"],
-            finished_requests=self._m["done"],
-            preemptions=self._m["preempt"],
-            prefix_hit_tokens=self._m["prefix_hit"],
-            remote_hit_tokens=self._m["remote_hit"],
+        return self.sched.metrics(
+            self.loop.clock.now,
             loaded_adapters=tuple(sorted(self._adapters)))

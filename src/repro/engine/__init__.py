@@ -1,3 +1,6 @@
 from repro.engine.engine import (EngineConfig, EngineMetrics,  # noqa: F401
                                  InferenceEngine)
 from repro.engine.request import Request, RequestState, SamplingParams  # noqa: F401
+from repro.engine.runner import ModelRunner  # noqa: F401
+from repro.engine.scheduler import (ScheduleOutput, Scheduler,  # noqa: F401
+                                    SchedulerConfig, SchedulerCore)

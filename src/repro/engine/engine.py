@@ -1,24 +1,33 @@
 """Continuous-batching inference engine (the "vLLM" role in the paper).
 
-One ``InferenceEngine`` = one serving pod's engine process: paged KV
-cache + hash-indexed prefix cache, chunked prefill, batched decode,
-high-density multi-LoRA, and the metric surface the AIBrix control
-plane consumes (queue depth, KV utilization, token throughput, latency).
+One ``InferenceEngine`` = one serving pod's engine process.  Since the
+scheduler-core refactor it is a thin composition of two layers behind
+the unchanged ``submit/step/metrics/match_prefix_len`` handle contract:
+
+- :class:`repro.engine.scheduler.Scheduler` — the pure-Python unified
+  scheduler (admission incl. cache-aware deferral, per-step token
+  budget with chunk trimming, preemption, finish/stop bookkeeping, and
+  P/D roles).  The SAME class drives the cluster simulator's SimEngine,
+  so scheduling semantics cannot drift between the real data plane and
+  the simulator.
+- :class:`repro.engine.runner.ModelRunner` — the JAX data plane: jitted
+  ``mixed_step``/``decode_batch``/``prefill_step`` calls over donated
+  ``PagePool`` state, persistent preallocated host input buffers, the
+  LoRA bank and the sampling PRNG stream.
 
 Scheduling is a vLLM-style **fused mixed batch** under a per-step token
 budget: every ``step()`` packs up to ``max_batch`` decode tokens plus
 chunks from up to ``max_prefills`` concurrently-PREFILLING requests
 into one jitted forward pass (``paged_model.mixed_step``), so long
-prefills no longer stall decoding.  The budget
-(``token_budget``, default ``max_batch + max_prefills * chunk_size``)
-governs *prefill* work: decode tokens (at most ``max_batch``, never
-trimmed — decode latency has priority) are charged against it first
-and prefill chunks are trimmed to what remains, with a 1-token floor
-so an in-flight prefill always progresses.  Admission defers a request
-whose prompt shares its leading block hash with an in-flight prefill so
-it can reuse the prefix pages once they register (cache-aware
-admission).  ``mixed_batching=False`` restores the legacy two-phase
-scheduler (one prefill at a time, separate decode batches).
+prefills no longer stall decoding.  ``mixed_batching=False`` restores
+the legacy two-phase scheduler.
+
+P/D disaggregation (paper §3.2.5): ``role="prefill"`` engines prefill,
+publish KV pages through the distributed pool and hand each request to
+a decode engine via the ``handoff`` callable; ``role="decode"`` engines
+pull the prefilled pages from the pool by block hash at admission and
+only recompute the tail block.  ``python -m repro.launch.serve --roles
+2P2D`` wires a real disaggregated pod group end-to-end.
 
 The engine takes an injectable ``clock`` so it runs identically under
 wall-clock (CPU examples/tests) and under the discrete-event cluster
@@ -29,18 +38,16 @@ consult the pool by block hash; newly filled pages are published back.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 from repro.engine import paged_model as PM
 from repro.engine.page_table import PageAllocator, chunk_hashes
-from repro.engine.request import Request, RequestState
-from repro.engine.sampling import sample
-from repro.models import model as M
+from repro.engine.request import Request
+from repro.engine.runner import ModelRunner
+from repro.engine.scheduler import (EngineMetrics, ScheduleOutput,  # noqa: F401
+                                    Scheduler, SchedulerConfig,
+                                    window_throughput)
 from repro.models.config import ModelConfig
 
 
@@ -61,49 +68,23 @@ class EngineConfig:
     mixed_batching: bool = True     # False => legacy two-phase scheduler
     max_prefills: int = 2           # concurrent PREFILLING requests
     token_budget: int = 0           # 0 => max_batch + max_prefills*chunk
+    # -- P/D disaggregation --
+    role: str = "mixed"             # mixed | prefill | decode
 
     @property
     def step_token_budget(self) -> int:
-        """Per-step budget charged decode-first; it trims prefill chunks
-        only — the decode batch itself is bounded by ``max_batch``, not
-        the budget (a budget below ``max_batch`` + 1 cannot throttle
-        decode, it just starves prefill down to its 1-token floor)."""
-        return self.token_budget or (
-            self.max_batch + self.max_prefills * self.chunk_size)
+        return self.scheduler_config().step_token_budget
 
-
-def window_throughput(events, now: float, horizon: float = 10.0) -> float:
-    """tokens/sec over the span actually observed within ``horizon``.
-
-    ``events`` is a list of (timestamp, token_count).  A fixed-horizon
-    divisor deflated early/low-traffic readings (skewing gateway routing
-    and autoscaler signals); the 1 s floor keeps a single post-idle
-    burst from reading as a huge rate spike when polled within the same
-    instant.  Shared by InferenceEngine, SlotEngine and SimEngine so
-    their tokens_per_sec semantics cannot drift apart.
-    """
-    window = [(t, c) for t, c in events if t >= now - horizon]
-    if not window:
-        return 0.0
-    span = max(now - window[0][0], 1.0)
-    return sum(c for _, c in window) / span
-
-
-@dataclass
-class EngineMetrics:
-    """Snapshot consumed by gateway routing + autoscaler."""
-    num_running: int = 0
-    num_waiting: int = 0
-    kv_utilization: float = 0.0
-    tokens_per_sec: float = 0.0
-    avg_latency: float = 0.0        # EWMA of per-request total latency
-    avg_queue_time: float = 0.0
-    admitted_requests: int = 0
-    finished_requests: int = 0
-    preemptions: int = 0
-    prefix_hit_tokens: int = 0
-    remote_hit_tokens: int = 0
-    loaded_adapters: tuple = ()
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(
+            page_size=self.page_size, max_batch=self.max_batch,
+            max_pages_per_seq=self.max_pages_per_seq,
+            chunk_size=self.chunk_size,
+            chunked_prefill=self.chunked_prefill,
+            prefix_caching=self.prefix_caching,
+            mixed_batching=self.mixed_batching,
+            max_prefills=self.max_prefills,
+            token_budget=self.token_budget, role=self.role)
 
 
 class InferenceEngine:
@@ -120,420 +101,155 @@ class InferenceEngine:
         self.engine_id = engine_id
         self.clock = clock
         self.kv_pool = kv_pool_client
-        dtype = jnp.dtype(ecfg.dtype)
-        self.params = params if params is not None else M.init(
-            cfg, jax.random.PRNGKey(seed), dtype)
-        self.pool = PM.init_pool(cfg, ecfg.num_pages + 1, ecfg.page_size,
-                                 dtype)  # +1: OOB scratch page for drops
-        self.alloc = PageAllocator(ecfg.num_pages, ecfg.page_size)
-        self.lora = PM.init_lora(cfg, ecfg.max_adapters, ecfg.lora_rank,
-                                 dtype)
-        self._adapter_ids: Dict[str, int] = {}
-        self._free_adapter_slots = list(range(1, ecfg.max_adapters))
-        self.waiting: List[Request] = []
-        self.prefills: List[Request] = []      # concurrent PREFILLING
-        self.running: List[Request] = []
-        self.finished: List[Request] = []
-        self._key = jax.random.PRNGKey(seed + 1)
-        self._m = EngineMetrics()
-        self._tok_window: List[tuple] = []      # (t, ntokens)
-        self._lat_ewma = 0.0
-        self._q_ewma = 0.0
+        self.runner = ModelRunner(cfg, ecfg, params=params, seed=seed)
+        self.sched = Scheduler(
+            ecfg.scheduler_config(),
+            PageAllocator(ecfg.num_pages, ecfg.page_size),
+            kv_pool=kv_pool_client, engine_id=engine_id,
+            install_page=self._install_page,
+            publish_page=self._publish_page)
 
-    # ------------------------------------------------------------- LoRA
-    def register_adapter(self, name: str, weights: dict = None) -> int:
-        """Dynamic high-density LoRA registration (paper §3.2.1)."""
-        if name in self._adapter_ids:
-            return self._adapter_ids[name]
-        if not self._free_adapter_slots:
-            raise RuntimeError("adapter slots exhausted")
-        idx = self._free_adapter_slots.pop(0)
-        if weights is None:
-            weights = PM.make_adapter(self.cfg, self.ecfg.lora_rank,
-                                      jax.random.fold_in(self._key, idx))
-        self.lora = {k: self.lora[k].at[idx].set(weights[k])
-                     for k in self.lora}
-        self._adapter_ids[name] = idx
-        return idx
-
-    def unregister_adapter(self, name: str) -> None:
-        idx = self._adapter_ids.pop(name, None)
-        if idx is not None:
-            self.lora = {k: self.lora[k].at[idx].set(0.0) for k in self.lora}
-            self._free_adapter_slots.append(idx)
+    # ----------------------------------------------------------- views
+    @property
+    def params(self):
+        return self.runner.params
 
     @property
-    def adapters(self) -> List[str]:
-        return sorted(self._adapter_ids)
-
-    # ------------------------------------------------------------- submit
-    def submit(self, req: Request) -> None:
-        if req.arrival_time == 0.0:
-            req.arrival_time = self.clock()
-        if req.lora_adapter and req.lora_adapter not in self._adapter_ids:
-            self.register_adapter(req.lora_adapter)
-        self.waiting.append(req)
+    def pool(self):
+        return self.runner.pool
 
     @property
-    def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self.prefills)
+    def alloc(self) -> PageAllocator:
+        return self.sched.alloc
+
+    @property
+    def waiting(self) -> List[Request]:
+        return self.sched.waiting
+
+    @property
+    def prefills(self) -> List[Request]:
+        return self.sched.prefills
+
+    @property
+    def running(self) -> List[Request]:
+        return self.sched.running
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.sched.finished
 
     @property
     def prefilling(self) -> Optional[Request]:
         """Back-compat view of the (first) in-flight prefill."""
-        return self.prefills[0] if self.prefills else None
+        return self.sched.prefills[0] if self.sched.prefills else None
 
-    # ------------------------------------------------------------- helpers
-    def _pages_for(self, n_tokens: int) -> int:
-        return -(-n_tokens // self.ecfg.page_size)
+    @property
+    def handoff(self) -> Optional[Callable[[Request], None]]:
+        return self.sched.handoff
 
-    def _first_hash(self, req: Request) -> Optional[str]:
-        hs = chunk_hashes(req.prompt_tokens[:self.ecfg.page_size],
-                          self.ecfg.page_size)
-        return hs[0] if hs else None
+    @handoff.setter
+    def handoff(self, fn) -> None:
+        self.sched.handoff = fn
 
-    def _try_admit(self) -> Optional[Request]:
-        if not self.waiting or (len(self.running) + len(self.prefills)
-                                >= self.ecfg.max_batch):
-            return None
-        inflight_hashes = set()
-        if self.ecfg.prefix_caching and self.prefills:
-            inflight_hashes = {self._first_hash(p) for p in self.prefills}
-            inflight_hashes.discard(None)
-        req = None
-        idx = 0
-        while idx < len(self.waiting):
-            cand = self.waiting[idx]
-            total = cand.prompt_len + cand.sampling.max_new_tokens
-            if self._pages_for(total) > self.ecfg.max_pages_per_seq:
-                cand.state = RequestState.FAILED
-                self.waiting.pop(idx)
-                continue
-            if (inflight_hashes
-                    and cand.prompt_len > self.ecfg.page_size
-                    and self._first_hash(cand) in inflight_hashes
-                    and self.alloc.match_len(cand.prompt_tokens) == 0):
-                # cache-aware admission: a prompt sharing its leading
-                # block with an in-flight prefill waits for those pages
-                # to register so it can reuse them instead of
-                # recomputing the prefix — but only THAT request waits
-                # (later waiters with distinct prefixes still get the
-                # slot), and only when the wait can pay off: not when a
-                # registered prefix already matches, nor when the prompt
-                # is too short for match_prefix to ever reuse the block.
-                idx += 1
-                continue
-            req = cand
-            break
-        if req is None:
-            return None
-        total = req.prompt_len + req.sampling.max_new_tokens
-        now = self.clock()
-        matched_pages: List[int] = []
-        matched_tokens = 0
-        if self.ecfg.prefix_caching:
-            matched_pages, matched_tokens = self.alloc.match_prefix(
-                req.prompt_tokens, now)
-            if self.kv_pool is not None:
-                rp, rt = self._pool_fetch(req, matched_tokens)
-                matched_pages += rp
-                matched_tokens += rt
-        need = self._pages_for(total) - len(matched_pages)
-        fresh = self.alloc.allocate(need, now)
-        if fresh is None:
-            self.alloc.release(matched_pages, now)
-            return None     # no memory — stay queued
-        self.waiting.remove(req)
-        req.page_ids = matched_pages + fresh
-        req.cached_prefix_tokens = matched_tokens
-        req.prefill_done_tokens = matched_tokens
-        req.state = RequestState.PREFILLING
-        req.schedule_time = now
-        self._m.admitted_requests += 1
-        self._m.prefix_hit_tokens += matched_tokens
-        self._q_ewma = 0.9 * self._q_ewma + 0.1 * req.queue_time
-        return req
+    # ------------------------------------------------------------- LoRA
+    def register_adapter(self, name: str, weights: dict = None) -> int:
+        return self.runner.register_adapter(name, weights)
 
-    def _pool_fetch(self, req: Request, have_tokens: int):
-        """Extend a local prefix hit with pages from the distributed pool."""
-        ps = self.ecfg.page_size
-        hashes = chunk_hashes(req.prompt_tokens, ps)
-        start = have_tokens // ps
-        pages, tokens = [], 0
-        for i in range(start, len(hashes)):
-            if (i + 1) * ps >= req.prompt_len:
-                break
-            payload = self.kv_pool.fetch(hashes[i], self.engine_id)
-            if payload is None:
-                break
-            pids = self.alloc.allocate(1, self.clock())
-            if not pids:
-                break
-            k_page, v_page = payload
-            self.pool = PM.PagePool(
-                self.pool.k.at[:, pids[0]].set(k_page),
-                self.pool.v.at[:, pids[0]].set(v_page))
-            self.alloc.register_hash(pids[0], hashes[i])
-            pages.append(pids[0])
-            tokens += ps
-            self._m.remote_hit_tokens += ps
-        return pages, tokens
+    def unregister_adapter(self, name: str) -> None:
+        self.runner.unregister_adapter(name)
 
-    # ------------------------------------------------------------- prefill
-    def _prefill_one(self, req: Request) -> None:
-        ecfg = self.ecfg
-        s = ecfg.chunk_size if ecfg.chunked_prefill else \
-            max(req.prompt_len, 1)
-        start = req.prefill_done_tokens
-        chunk = req.prompt_tokens[start:start + s]
-        chunk_len = len(chunk)
-        toks = np.zeros((1, s), np.int32)
-        toks[0, :chunk_len] = chunk
-        nb = self._bt_width(self._pages_for(start + chunk_len))
-        bt = np.full((1, nb), ecfg.num_pages, np.int32)  # OOB scratch page
-        n = min(len(req.page_ids), nb)
-        bt[0, :n] = req.page_ids[:n]
-        aid = self._adapter_ids.get(req.lora_adapter or "", 0)
-        logits, self.pool = PM.prefill_step(
-            self.params, self.pool, jnp.asarray(toks), jnp.asarray(bt),
-            jnp.int32(start), jnp.int32(chunk_len),
-            self.lora, jnp.asarray([aid], jnp.int32),
-            cfg=self.cfg, page_size=ecfg.page_size, impl=ecfg.impl)
-        req.prefill_done_tokens += chunk_len
-        if req.prefill_done_tokens >= req.prompt_len:
-            self._finish_prefill(req, logits)
+    @property
+    def adapters(self) -> List[str]:
+        return self.runner.adapters
 
-    def _finish_prefill(self, req: Request, logits) -> None:
-        """Prefill complete: register pages, sample the first token, move
-        the request to the decode batch."""
-        self._register_prompt_pages(req)
-        tok = self._sample(logits, [req])[0]
-        now = self.clock()
-        req.output_tokens.append(int(tok))
-        req.first_token_time = now
-        req.state = RequestState.RUNNING
-        self.running.append(req)
-        self._note_tokens(req.prompt_len + 1)
-        self._maybe_finish(req)
+    # ------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        if req.lora_adapter and \
+                req.lora_adapter not in self.runner.adapter_ids:
+            self.register_adapter(req.lora_adapter)
+        self.sched.enqueue(req, self.clock())
 
-    def _register_prompt_pages(self, req: Request) -> None:
-        if not self.ecfg.prefix_caching:
-            return
-        ps = self.ecfg.page_size
-        hashes = chunk_hashes(req.prompt_tokens, ps)
-        for i, h in enumerate(hashes):
-            pid = req.page_ids[i]
-            if self.alloc.pages[pid].block_hash is None:
-                self.alloc.register_hash(pid, h)
-                if self.kv_pool is not None:
-                    self.kv_pool.publish(
-                        h, (np.asarray(self.pool.k[:, pid]),
-                            np.asarray(self.pool.v[:, pid])),
-                        self.engine_id, self.clock())
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work
 
-    # ------------------------------------------------------------- decode
-    def _bt_width(self, pages_needed: int) -> int:
-        """Bucketed block-table width: bounds the decode kernel's page
-        grid by what the batch actually uses (multiples of 4 to limit
-        recompiles) instead of the full ``max_pages_per_seq``."""
-        cap = -(-max(pages_needed, 1) // 4) * 4
-        return min(cap, self.ecfg.max_pages_per_seq)
+    # ------------------------------------------------------------- pool
+    def _install_page(self, pid: int, payload, req: Request,
+                      now: float) -> None:
+        """Payload hook for the Scheduler's pool walk: write the
+        fetched (k_page, v_page) arrays into a local device page."""
+        self.runner.write_remote_page(pid, *payload)
 
-    def _decode_inputs(self, reqs):
-        ecfg = self.ecfg
-        b = ecfg.max_batch
-        nb = self._bt_width(max((self._pages_for(
-            r.prompt_len + len(r.output_tokens)) for r in reqs),
-            default=1))
-        toks = np.zeros(b, np.int32)
-        pos = np.zeros(b, np.int32)
-        bts = np.full((b, nb), ecfg.num_pages, np.int32)
-        active = np.zeros(b, bool)
-        aids = np.zeros(b, np.int32)
-        for i, r in enumerate(reqs):
-            toks[i] = r.output_tokens[-1]
-            pos[i] = r.prompt_len + len(r.output_tokens) - 1
-            n = min(len(r.page_ids), nb)
-            bts[i, :n] = r.page_ids[:n]
-            active[i] = True
-            aids[i] = self._adapter_ids.get(r.lora_adapter or "", 0)
-        return toks, pos, bts, active, aids
-
-    def _decode(self) -> None:
-        ecfg = self.ecfg
-        reqs = self.running[:ecfg.max_batch]
-        toks, pos, bts, active, aids = self._decode_inputs(reqs)
-        logits, self.pool = PM.decode_batch(
-            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(bts), jnp.asarray(active), self.lora,
-            jnp.asarray(aids), cfg=self.cfg, page_size=ecfg.page_size,
-            impl=ecfg.impl)
-        self._postprocess_decode(reqs, logits)
-
-    def _postprocess_decode(self, reqs, logits) -> None:
-        new = self._sample(logits, reqs)
-        now = self.clock()
-        for i, r in enumerate(reqs):
-            r.output_tokens.append(int(new[i]))
-            r.token_times.append(now)
-            # grow pages if the next token crosses a page boundary
-            nxt = r.prompt_len + len(r.output_tokens)
-            if self._pages_for(nxt + 1) > len(r.page_ids):
-                pid = self.alloc.allocate(1, now)
-                if pid is None:
-                    self._preempt(r)
-                    continue
-                r.page_ids += pid
-            self._maybe_finish(r)
-        self._note_tokens(len(reqs))
-
-    def _sample(self, logits, reqs) -> np.ndarray:
-        b = logits.shape[0]
-        temps = np.zeros(b, np.float32)
-        tops = np.ones(b, np.float32)
-        for i, r in enumerate(reqs[:b]):
-            temps[i] = r.sampling.temperature
-            tops[i] = r.sampling.top_p
-        self._key, sub = jax.random.split(self._key)
-        return np.asarray(sample(logits, sub, jnp.asarray(temps),
-                                 top_k=0, top_p=jnp.asarray(tops)))
-
-    def _maybe_finish(self, req: Request) -> None:
-        sp = req.sampling
-        done = len(req.output_tokens) >= sp.max_new_tokens or (
-            sp.stop_token is not None
-            and req.output_tokens[-1] == sp.stop_token)
-        if not done:
-            return
-        now = self.clock()
-        req.finish_time = now
-        req.state = RequestState.FINISHED
-        if req in self.running:
-            self.running.remove(req)
-        self.alloc.release(req.page_ids, now)
-        req.page_ids = []
-        self.finished.append(req)
-        self._m.finished_requests += 1
-        self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
-                          if self._lat_ewma else req.total_latency)
-
-    def _preempt(self, req: Request) -> None:
-        self.running.remove(req)
-        self.alloc.release(req.page_ids, self.clock())
-        req.page_ids = []
-        req.output_tokens = []
-        req.prefill_done_tokens = 0
-        req.state = RequestState.QUEUED
-        self.waiting.insert(0, req)
-        self._m.preemptions += 1
+    def _publish_page(self, pid: int, block_hash: str, req: Request,
+                      now: float) -> None:
+        """Payload hook for the Scheduler's prompt-page registration:
+        copy the page off-device and publish it under its block hash."""
+        self.kv_pool.publish(block_hash, self.runner.page_payload(pid),
+                             self.engine_id, now)
 
     # ------------------------------------------------------------- step
     def step(self) -> int:
-        """One scheduler iteration.  Returns #tokens produced.
-
-        Mixed batching (default): admit up to ``max_prefills`` requests
-        into PREFILLING, then run ONE fused forward pass carrying every
-        decode token plus a budget-trimmed chunk per in-flight prefill.
-        Legacy (``mixed_batching=False``): one prefill at a time, decode
-        only when no prefill is in flight.
-        """
-        if not self.ecfg.mixed_batching:
-            return self._step_two_phase()
-        while (len(self.prefills) < self.ecfg.max_prefills
-               and len(self.prefills) * self.ecfg.chunk_size
-               + min(len(self.running), self.ecfg.max_batch)
-               < self.ecfg.step_token_budget):
-            req = self._try_admit()
-            if req is None:
-                break
-            self.prefills.append(req)
-        if not self.prefills:
-            if not self.running:
-                return 0
-            n = len(self.running[:self.ecfg.max_batch])
-            self._decode()
-            return n
-        return self._mixed_step()
-
-    def _step_two_phase(self) -> int:
-        if not self.prefills:
-            req = self._try_admit()
-            if req is not None:
-                self.prefills.append(req)
-        if self.prefills:
-            req = self.prefills[0]
-            self._prefill_one(req)
-            if req.state != RequestState.PREFILLING:
-                self.prefills.remove(req)
-            return 1
-        if self.running:
-            n = len(self.running[:self.ecfg.max_batch])
-            self._decode()
-            return n
-        return 0
-
-    def _mixed_step(self) -> int:
-        """One fused decode+prefill pass under the step token budget."""
-        ecfg = self.ecfg
-        b = ecfg.max_batch
-        kk = ecfg.max_prefills
-        dec_reqs = self.running[:b]
-        # decode tokens spend the budget first; floor of 1 guarantees an
-        # in-flight prefill always progresses (liveness under a budget
-        # tighter than the decode batch).
-        budget = max(ecfg.step_token_budget - len(dec_reqs), 1)
-        if ecfg.chunked_prefill:
-            s = ecfg.chunk_size
-        else:
-            s = max(max(p.prompt_len - p.prefill_done_tokens
-                        for p in self.prefills), 1)
-        # trim each in-flight prefill's chunk to the remaining budget
-        # (whole-prompt prefill is budget-exempt by definition)
-        chunk_lens = []
-        for p in self.prefills:
-            c = min(s, p.prompt_len - p.prefill_done_tokens)
-            if ecfg.chunked_prefill:
-                c = min(c, budget)
-            chunk_lens.append(c)
-            budget -= c
-        pre_toks = np.zeros((kk, s), np.int32)
-        pre_ctx = np.zeros(kk, np.int32)
-        pre_chunk = np.zeros(kk, np.int32)
-        pre_aids = np.zeros(kk, np.int32)
-        nb_pre = self._bt_width(max((self._pages_for(
-            p.prefill_done_tokens + c) for p, c in
-            zip(self.prefills, chunk_lens)), default=1))
-        pre_bts = np.full((kk, nb_pre), ecfg.num_pages, np.int32)
-        for i, (p, c) in enumerate(zip(self.prefills, chunk_lens)):
-            start = p.prefill_done_tokens
-            pre_toks[i, :c] = p.prompt_tokens[start:start + c]
-            pre_ctx[i] = start
-            pre_chunk[i] = c
-            n = min(len(p.page_ids), nb_pre)
-            pre_bts[i, :n] = p.page_ids[:n]
-            pre_aids[i] = self._adapter_ids.get(p.lora_adapter or "", 0)
-        toks, pos, bts, active, aids = self._decode_inputs(dec_reqs)
-        dec_logits, pre_logits, self.pool = PM.mixed_step(
-            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(bts), jnp.asarray(active), jnp.asarray(pre_toks),
-            jnp.asarray(pre_bts), jnp.asarray(pre_ctx),
-            jnp.asarray(pre_chunk), self.lora, jnp.asarray(aids),
-            jnp.asarray(pre_aids), cfg=self.cfg,
-            page_size=ecfg.page_size, impl=ecfg.impl)
+        """One scheduler iteration.  Returns #tokens produced (sampled
+        output tokens: one per decode row, one per *completed* prefill —
+        an unfinished prefill chunk produces none)."""
+        out = self.sched.schedule(self.clock())
+        if out.mode == "idle":
+            return 0
+        if out.mode == "decode":
+            self._postprocess_decode(out.decode,
+                                     self.runner.run_decode(out.decode))
+            return len(out.decode)
+        if out.mode == "prefill":      # legacy two-phase chunk
+            work = out.prefills[0]
+            logits = self.runner.run_prefill(work)
+            return 1 if self._advance_prefill(work, logits) else 0
+        # mixed: one fused decode+prefill pass under the token budget
+        dec_logits, pre_logits = self.runner.run_mixed(out)
         produced = 0
         # prefill bookkeeping first (their chunks are already in the pool)
-        for i, (p, c) in enumerate(list(zip(self.prefills, chunk_lens))):
-            if c == 0:
+        for i, work in enumerate(out.prefills):
+            if work.chunk_len == 0:
                 continue            # budget-starved this step
-            p.prefill_done_tokens += c
-            if p.prefill_done_tokens >= p.prompt_len:
-                self.prefills.remove(p)
-                self._finish_prefill(p, pre_logits[i][None])
+            if self._advance_prefill(work, pre_logits[i][None]):
                 produced += 1
-        if dec_reqs:
-            self._postprocess_decode(dec_reqs, dec_logits[:len(dec_reqs)])
-            produced += len(dec_reqs)
+        if out.decode:
+            self._postprocess_decode(out.decode,
+                                     dec_logits[:len(out.decode)])
+            produced += len(out.decode)
         return produced
+
+    def _advance_prefill(self, work, logits) -> bool:
+        """Advance one prefill chunk; True when it produced a token
+        (prefill completed and its first token was sampled)."""
+        req = work.req
+        if not self.sched.note_prefill_progress(req, work.chunk_len):
+            return False
+        now = self.clock()
+        self.sched.register_prompt_pages(req, now)
+        if self.sched.wants_handoff:
+            # disaggregated: KV is in the pool; hand the request to a
+            # decode engine and free this engine for the next prefill.
+            # The handoff is a synchronization point: the simulator
+            # delays delivery past the pool's metadata lag, and the
+            # synchronous real data plane instead flushes exactly the
+            # records it just published (other engines' pending records
+            # keep their lag) so the decode engine's admission walk
+            # sees them rather than recomputing the whole prompt.
+            self.sched.handoff_prefill(req, now)
+            if self.kv_pool is not None:
+                self.kv_pool.flush_hashes(
+                    chunk_hashes(req.prompt_tokens, self.ecfg.page_size),
+                    now)
+            self.sched.deliver_handoff(req)
+            return False
+        tok = self.runner.sample(logits, [req])[0]
+        self.sched.finish_prefill(req, int(tok), now)
+        self.sched.note_tokens(now, req.prompt_len + 1)
+        return True
+
+    def _postprocess_decode(self, reqs, logits) -> None:
+        new = self.runner.sample(logits, reqs)
+        self.sched.on_decode_batch(reqs, new, self.clock())
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
@@ -543,28 +259,10 @@ class InferenceEngine:
         raise RuntimeError("engine did not drain")
 
     # ------------------------------------------------------------- metrics
-    def _note_tokens(self, n: int) -> None:
-        self._tok_window.append((self.clock(), n))
-        cutoff = self.clock() - 10.0
-        self._tok_window = [(t, c) for t, c in self._tok_window
-                            if t >= cutoff]
-
     def metrics(self) -> EngineMetrics:
-        tput = window_throughput(self._tok_window, self.clock())
-        return EngineMetrics(
-            num_running=len(self.running) + len(self.prefills),
-            num_waiting=len(self.waiting),
-            kv_utilization=self.alloc.utilization,
-            tokens_per_sec=tput,
-            avg_latency=self._lat_ewma,
-            avg_queue_time=self._q_ewma,
-            admitted_requests=self._m.admitted_requests,
-            finished_requests=self._m.finished_requests,
-            preemptions=self._m.preemptions,
-            prefix_hit_tokens=self._m.prefix_hit_tokens,
-            remote_hit_tokens=self._m.remote_hit_tokens,
-            loaded_adapters=tuple(self.adapters))
+        return self.sched.metrics(self.clock(),
+                                  loaded_adapters=tuple(self.adapters))
 
     def match_prefix_len(self, tokens) -> int:
         """Prefix-cache coverage for router scoring (non-mutating)."""
-        return self.alloc.match_len(tokens)
+        return self.sched.match_prefix_len(tokens)

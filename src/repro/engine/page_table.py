@@ -46,7 +46,10 @@ class PageAllocator:
         # block hash -> page id, for pages whose contents are a full,
         # content-addressed token block (prefix-cache index)
         self.hash_index: Dict[str, int] = {}
-        # evictable cached pages in LRU order (ref_count == 0, hash set)
+        # evictable cached pages (ref_count == 0, hash set), maintained
+        # in LRU order by insertion: release() re-inserts at the end
+        # (move-to-end), so eviction pops the front in O(1) instead of
+        # a min()-scan over timestamps
         self._cached_lru: Dict[int, float] = {}
         self.stats = {"allocated": 0, "cache_hits": 0, "cache_misses": 0,
                       "evictions": 0}
@@ -65,8 +68,8 @@ class PageAllocator:
     def _pop_free(self, now: float) -> Optional[int]:
         if self.free:
             return self.free.pop()
-        if self._cached_lru:            # evict LRU cached page
-            pid = min(self._cached_lru, key=self._cached_lru.get)
+        if self._cached_lru:            # evict LRU cached page: O(1)
+            pid = next(iter(self._cached_lru))
             del self._cached_lru[pid]
             info = self.pages[pid]
             if info.block_hash:
@@ -108,6 +111,8 @@ class PageAllocator:
             if info.ref_count == 0:
                 if info.block_hash:
                     info.last_used = now
+                    # move-to-end keeps dict order == LRU order
+                    self._cached_lru.pop(pid, None)
                     self._cached_lru[pid] = now
                 else:
                     self.free.append(pid)

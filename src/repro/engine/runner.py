@@ -1,0 +1,253 @@
+"""ModelRunner: executes a ``ScheduleOutput`` on the real JAX model.
+
+The runner is the data plane the unified :class:`repro.engine.scheduler.
+Scheduler` drives — it owns everything device-shaped: the model params,
+the paged KV ``PagePool`` (donated through every jitted call, so the
+pages are updated in place rather than copied), the high-density LoRA
+bank, the sampling PRNG stream, and the *persistent preallocated host
+input buffers* for step assembly.
+
+The buffer point matters for step overhead: the pre-refactor engine
+re-allocated ~6 numpy arrays (tokens / positions / block tables /
+active mask / adapter ids, plus the prefill-chunk set) on every
+``step()`` before uploading them.  The runner allocates them once at
+construction and re-fills the used slice per step; ``benchmarks/
+bench_kernels.py --quick`` ("step_inputs" rows) tracks the win.
+
+The runner also owns the page *payload* side of the distributed KV
+pool protocol: publishing freshly filled prompt pages (skipping the
+device→host copy when the pool already holds the hash) and writing
+fetched remote pages into local device pages.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import paged_model as PM
+from repro.engine.request import Request
+from repro.engine.sampling import sample
+from repro.engine.scheduler import PrefillWork, ScheduleOutput
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+class ModelRunner:
+    """Turns declarative schedules into jitted forward passes."""
+
+    def __init__(self, cfg: ModelConfig, ecfg, params=None, seed: int = 0):
+        self.cfg, self.ecfg = cfg, ecfg
+        dtype = jnp.dtype(ecfg.dtype)
+        self.params = params if params is not None else M.init(
+            cfg, jax.random.PRNGKey(seed), dtype)
+        self.pool = PM.init_pool(cfg, ecfg.num_pages + 1, ecfg.page_size,
+                                 dtype)  # +1: OOB scratch page for drops
+        self.lora = PM.init_lora(cfg, ecfg.max_adapters, ecfg.lora_rank,
+                                 dtype)
+        self._adapter_ids: Dict[str, int] = {}
+        self._free_adapter_slots = list(range(1, ecfg.max_adapters))
+        self._key = jax.random.PRNGKey(seed + 1)
+        # persistent host input buffers (allocated once, refilled per
+        # step; block tables are sliced to the bucketed width in use)
+        b, kk = ecfg.max_batch, ecfg.max_prefills
+        nbmax = ecfg.max_pages_per_seq
+        self._dec_toks = np.zeros(b, np.int32)
+        self._dec_pos = np.zeros(b, np.int32)
+        self._dec_bts = np.full((b, nbmax), ecfg.num_pages, np.int32)
+        self._dec_active = np.zeros(b, bool)
+        self._dec_aids = np.zeros(b, np.int32)
+        # floor of one row: two-phase prefill writes row 0 even when
+        # the mixed scheduler is configured with max_prefills=0
+        kk1 = max(kk, 1)
+        self._pre_toks = np.zeros((kk1, ecfg.chunk_size), np.int32)
+        self._pre_ctx = np.zeros(kk1, np.int32)
+        self._pre_chunk = np.zeros(kk1, np.int32)
+        self._pre_aids = np.zeros(kk1, np.int32)
+        self._pre_bts = np.full((kk1, nbmax), ecfg.num_pages, np.int32)
+        # outputs of the most recent jitted call.  jnp.asarray may
+        # zero-copy alias a host buffer on some backend/dtype combos
+        # (CPU float32 does), so before REFILLING the persistent
+        # buffers we block on the previous step's computation — it must
+        # not be able to read next-step data through an alias.
+        self._inflight = None
+
+    def _sync_inflight(self) -> None:
+        if self._inflight is not None:
+            jax.block_until_ready(self._inflight)
+            self._inflight = None
+
+    # ------------------------------------------------------------- LoRA
+    def register_adapter(self, name: str, weights: dict = None) -> int:
+        """Dynamic high-density LoRA registration (paper §3.2.1)."""
+        if name in self._adapter_ids:
+            return self._adapter_ids[name]
+        if not self._free_adapter_slots:
+            raise RuntimeError("adapter slots exhausted")
+        idx = self._free_adapter_slots.pop(0)
+        if weights is None:
+            weights = PM.make_adapter(self.cfg, self.ecfg.lora_rank,
+                                      jax.random.fold_in(self._key, idx))
+        self.lora = {k: self.lora[k].at[idx].set(weights[k])
+                     for k in self.lora}
+        self._adapter_ids[name] = idx
+        return idx
+
+    def unregister_adapter(self, name: str) -> None:
+        idx = self._adapter_ids.pop(name, None)
+        if idx is not None:
+            self.lora = {k: self.lora[k].at[idx].set(0.0) for k in self.lora}
+            self._free_adapter_slots.append(idx)
+
+    @property
+    def adapters(self) -> List[str]:
+        return sorted(self._adapter_ids)
+
+    @property
+    def adapter_ids(self) -> Dict[str, int]:
+        return self._adapter_ids
+
+    def _aid(self, req: Request) -> int:
+        return self._adapter_ids.get(req.lora_adapter or "", 0)
+
+    # ---------------------------------------------------------- sampling
+    def sample(self, logits, reqs) -> np.ndarray:
+        b = logits.shape[0]
+        temps = np.zeros(b, np.float32)
+        tops = np.ones(b, np.float32)
+        for i, r in enumerate(reqs[:b]):
+            temps[i] = r.sampling.temperature
+            tops[i] = r.sampling.top_p
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(sample(logits, sub, jnp.asarray(temps),
+                                 top_k=0, top_p=jnp.asarray(tops)))
+
+    # ------------------------------------------------------- input prep
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.ecfg.page_size)
+
+    def _bt_width(self, pages_needed: int) -> int:
+        """Bucketed block-table width: bounds the decode kernel's page
+        grid by what the batch actually uses (multiples of 4 to limit
+        recompiles) instead of the full ``max_pages_per_seq``."""
+        cap = -(-max(pages_needed, 1) // 4) * 4
+        return min(cap, self.ecfg.max_pages_per_seq)
+
+    def _decode_inputs(self, reqs):
+        self._sync_inflight()
+        ecfg = self.ecfg
+        nb = self._bt_width(max((self._pages_for(
+            r.prompt_len + len(r.output_tokens)) for r in reqs),
+            default=1))
+        toks, pos = self._dec_toks, self._dec_pos
+        active, aids = self._dec_active, self._dec_aids
+        bts = self._dec_bts[:, :nb]
+        toks[:] = 0
+        pos[:] = 0
+        bts[:] = ecfg.num_pages             # OOB scratch page
+        active[:] = False
+        aids[:] = 0
+        for i, r in enumerate(reqs):
+            toks[i] = r.output_tokens[-1]
+            pos[i] = r.prompt_len + len(r.output_tokens) - 1
+            n = min(len(r.page_ids), nb)
+            bts[i, :n] = r.page_ids[:n]
+            active[i] = True
+            aids[i] = self._aid(r)
+        return toks, pos, bts, active, aids
+
+    def _prefill_inputs(self, works: List[PrefillWork], s: int):
+        self._sync_inflight()
+        ecfg = self.ecfg
+        kk = ecfg.max_prefills
+        if s == ecfg.chunk_size:
+            pre_toks = self._pre_toks
+        else:                               # unchunked: dynamic width
+            pre_toks = np.zeros((kk, s), np.int32)
+        pre_ctx, pre_chunk = self._pre_ctx, self._pre_chunk
+        pre_aids = self._pre_aids
+        nb_pre = self._bt_width(max((self._pages_for(w.start + w.chunk_len)
+                                     for w in works), default=1))
+        pre_bts = self._pre_bts[:, :nb_pre]
+        pre_toks[:] = 0
+        pre_ctx[:] = 0
+        pre_chunk[:] = 0
+        pre_aids[:] = 0
+        pre_bts[:] = ecfg.num_pages
+        for i, w in enumerate(works):
+            p, c = w.req, w.chunk_len
+            pre_toks[i, :c] = p.prompt_tokens[w.start:w.start + c]
+            pre_ctx[i] = w.start
+            pre_chunk[i] = c
+            n = min(len(p.page_ids), nb_pre)
+            pre_bts[i, :n] = p.page_ids[:n]
+            pre_aids[i] = self._aid(p)
+        return pre_toks, pre_ctx, pre_chunk, pre_aids, pre_bts
+
+    # ---------------------------------------------------------- execute
+    def run_mixed(self, out: ScheduleOutput) -> Tuple[jax.Array, jax.Array]:
+        """One fused decode+prefill pass; returns (dec_logits, pre_logits)."""
+        ecfg = self.ecfg
+        pre_toks, pre_ctx, pre_chunk, pre_aids, pre_bts = \
+            self._prefill_inputs(out.prefills, out.pad_len)
+        toks, pos, bts, active, aids = self._decode_inputs(out.decode)
+        dec_logits, pre_logits, self.pool = PM.mixed_step(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bts), jnp.asarray(active), jnp.asarray(pre_toks),
+            jnp.asarray(pre_bts), jnp.asarray(pre_ctx),
+            jnp.asarray(pre_chunk), self.lora, jnp.asarray(aids),
+            jnp.asarray(pre_aids), cfg=self.cfg,
+            page_size=ecfg.page_size, impl=ecfg.impl)
+        self._inflight = (dec_logits, pre_logits)
+        return dec_logits, pre_logits
+
+    def run_decode(self, reqs: List[Request]) -> jax.Array:
+        ecfg = self.ecfg
+        toks, pos, bts, active, aids = self._decode_inputs(reqs)
+        logits, self.pool = PM.decode_batch(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bts), jnp.asarray(active), self.lora,
+            jnp.asarray(aids), cfg=self.cfg, page_size=ecfg.page_size,
+            impl=ecfg.impl)
+        self._inflight = logits
+        return logits
+
+    def run_prefill(self, work: PrefillWork) -> jax.Array:
+        """One (possibly chunked) prefill for ONE request (two-phase)."""
+        self._sync_inflight()
+        ecfg = self.ecfg
+        req, s, c = work.req, work.pad_len, work.chunk_len
+        if s == ecfg.chunk_size:
+            toks = self._pre_toks[:1]
+            toks[:] = 0
+        else:
+            toks = np.zeros((1, s), np.int32)
+        toks[0, :c] = req.prompt_tokens[work.start:work.start + c]
+        nb = self._bt_width(self._pages_for(work.start + c))
+        bt = self._pre_bts[:1, :nb]
+        bt[:] = ecfg.num_pages              # OOB scratch page
+        n = min(len(req.page_ids), nb)
+        bt[0, :n] = req.page_ids[:n]
+        logits, self.pool = PM.prefill_step(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.int32(work.start), jnp.int32(c),
+            self.lora, jnp.asarray([self._aid(req)], jnp.int32),
+            cfg=self.cfg, page_size=ecfg.page_size, impl=ecfg.impl)
+        self._inflight = logits
+        return logits
+
+    # ------------------------------------------------------- pool payloads
+    def page_payload(self, pid: int):
+        """Materialize one page's (k, v) arrays for a pool publish —
+        the device→host copy the Scheduler's contains() gate avoids for
+        blocks the pool already knows."""
+        return (np.asarray(self.pool.k[:, pid]),
+                np.asarray(self.pool.v[:, pid]))
+
+    def write_remote_page(self, pid: int, k_page, v_page) -> None:
+        """Install a page payload fetched from the distributed pool."""
+        self.pool = PM.PagePool(
+            self.pool.k.at[:, pid].set(k_page),
+            self.pool.v.at[:, pid].set(v_page))

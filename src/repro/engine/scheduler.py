@@ -1,0 +1,589 @@
+"""Unified scheduler core shared by every engine in the system.
+
+One scheduling semantics, written once: the real JAX ``InferenceEngine``
+(repro.engine.engine), the analytic cluster-simulator ``SimEngine``
+(repro.core.sim.sim_engine) and the ``SlotEngine`` all drive the classes
+in this module instead of carrying their own drifting copies of
+admission / budget / finish logic.
+
+Layers
+------
+``SchedulerCore``
+    The engine-shape-agnostic request bookkeeping: arrival queue,
+    admission accounting (queue-time EWMA, admitted counter), the
+    finish/stop predicate (max_new_tokens + stop_token), latency EWMA
+    and the sliding token-throughput window.  The slot engine builds
+    directly on this.
+
+``Scheduler``
+    The paged-KV scheduler: cache-aware admission (prefix match, pool
+    fetch, deferral of a prompt whose leading block hash matches an
+    in-flight prefill), per-step token budget with chunk trimming,
+    preemption, decode bookkeeping, and P/D roles.  ``schedule(now)``
+    is *declarative*: it returns a :class:`ScheduleOutput` naming the
+    decode rows and budget-trimmed prefill chunks for this iteration
+    and mutates nothing but admission state — the host's "runner"
+    (jitted forward passes for the real engine, the roofline cost model
+    for the simulator) executes it and reports back through the
+    ``note_* / finish_* / on_decode_batch`` bookkeeping calls.
+
+Roles (paper §3.2.5, DistServe-style P/D disaggregation)
+--------------------------------------------------------
+``role="mixed"`` is a normal colocated engine.  ``role="prefill"``
+prefills, publishes KV through the distributed pool, then hands the
+request off (``handoff_prefill`` releases the pages and re-queues the
+request for the decode side; the host delivers it via its ``handoff``
+callable — synchronously for real engines, after the pool's metadata
+lag for the simulator).  ``role="decode"`` engines admit handed-off
+requests whose KV they pull from the pool by block hash, so they only
+recompute the tail block before decoding.
+
+All bookkeeping methods take an explicit ``now`` so the same code runs
+under wall clock (real engines) and forward-dated discrete-event time
+(the simulator).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+from repro.engine.page_table import PageAllocator, chunk_hashes
+from repro.engine.request import Request, RequestState
+
+
+def window_throughput(events, now: float, horizon: float = 10.0) -> float:
+    """tokens/sec over the span actually observed within ``horizon``.
+
+    ``events`` is a list of (timestamp, token_count).  A fixed-horizon
+    divisor deflated early/low-traffic readings (skewing gateway routing
+    and autoscaler signals); the 1 s floor keeps a single post-idle
+    burst from reading as a huge rate spike when polled within the same
+    instant.  Shared by InferenceEngine, SlotEngine and SimEngine so
+    their tokens_per_sec semantics cannot drift apart.
+    """
+    window = [(t, c) for t, c in events if t >= now - horizon]
+    if not window:
+        return 0.0
+    span = max(now - window[0][0], 1.0)
+    return sum(c for _, c in window) / span
+
+
+@dataclass
+class EngineMetrics:
+    """Snapshot consumed by gateway routing + autoscaler."""
+    num_running: int = 0
+    num_waiting: int = 0
+    kv_utilization: float = 0.0
+    tokens_per_sec: float = 0.0
+    avg_latency: float = 0.0        # EWMA of per-request total latency
+    avg_queue_time: float = 0.0
+    admitted_requests: int = 0
+    finished_requests: int = 0
+    preemptions: int = 0
+    prefix_hit_tokens: int = 0
+    remote_hit_tokens: int = 0
+    loaded_adapters: tuple = ()
+
+
+@dataclass
+class SchedulerConfig:
+    page_size: int = 16
+    max_batch: int = 8              # decode slots / admission capacity
+    max_pages_per_seq: int = 0      # 0 => unlimited (the simulator)
+    chunk_size: int = 64            # chunked-prefill chunk
+    chunked_prefill: bool = True
+    prefix_caching: bool = True
+    # -- fused mixed-batch scheduler --
+    mixed_batching: bool = True     # False => legacy two-phase scheduler
+    max_prefills: int = 2           # concurrent PREFILLING requests
+    token_budget: int = 0           # 0 => max_batch + max_prefills*chunk
+    # False => finish on max_new_tokens only (the simulator's decode
+    # tokens are synthetic zeros, which a real EOS id could match)
+    honor_stop_token: bool = True
+    # -- P/D disaggregation --
+    role: str = "mixed"             # mixed | prefill | decode
+
+    @property
+    def step_token_budget(self) -> int:
+        """Per-step budget charged decode-first; it trims prefill chunks
+        only — the decode batch itself is bounded by ``max_batch``, not
+        the budget (a budget below ``max_batch`` + 1 cannot throttle
+        decode, it just starves prefill down to its 1-token floor)."""
+        return self.token_budget or (
+            self.max_batch + self.max_prefills * self.chunk_size)
+
+
+@dataclass
+class PrefillWork:
+    """One in-flight prefill's chunk for this step."""
+    req: Request
+    start: int          # prefill_done_tokens at schedule time
+    chunk_len: int      # budget-trimmed valid tokens (0 = starved)
+    pad_len: int        # padded chunk width the runner should build
+
+
+@dataclass
+class ScheduleOutput:
+    """Declarative description of one scheduler iteration."""
+    mode: str                                   # mixed|prefill|decode|idle
+    decode: List[Request] = field(default_factory=list)
+    prefills: List[PrefillWork] = field(default_factory=list)
+    pad_len: int = 0                            # chunk width (mixed)
+
+
+class SchedulerCore:
+    """Request bookkeeping shared by every engine shape (paged or slot):
+    arrival queue, admission/finish accounting, stop predicate, EWMAs
+    and the token-throughput window."""
+
+    def __init__(self, honor_stop_token: bool = True):
+        self.honor_stop_token = honor_stop_token
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self._m = dict(admitted=0, finished=0, preemptions=0,
+                       prefix_hit_tokens=0, remote_hit_tokens=0)
+        self._lat_ewma = 0.0
+        self._q_ewma = 0.0
+        self._tok_events: List[tuple] = []
+
+    # ---------------------------------------------------------- queue
+    def enqueue(self, req: Request, now: float) -> None:
+        if req.arrival_time == 0.0:
+            req.arrival_time = now
+        self.waiting.append(req)
+
+    def note_admitted(self, req: Request, now: float) -> None:
+        req.schedule_time = now
+        self._m["admitted"] += 1
+        self._q_ewma = 0.9 * self._q_ewma + 0.1 * req.queue_time
+
+    # ---------------------------------------------------------- finish
+    def request_done(self, req: Request) -> bool:
+        sp = req.sampling
+        if len(req.output_tokens) >= sp.max_new_tokens:
+            return True
+        return (self.honor_stop_token and sp.stop_token is not None
+                and bool(req.output_tokens)
+                and req.output_tokens[-1] == sp.stop_token)
+
+    def note_finished(self, req: Request, now: float) -> None:
+        req.finish_time = now
+        req.state = RequestState.FINISHED
+        self.finished.append(req)
+        self._m["finished"] += 1
+        self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
+                          if self._lat_ewma else req.total_latency)
+
+    # ---------------------------------------------------------- accessors
+    @property
+    def avg_latency(self) -> float:
+        return self._lat_ewma
+
+    @property
+    def avg_queue_time(self) -> float:
+        return self._q_ewma
+
+    @property
+    def admitted_count(self) -> int:
+        return self._m["admitted"]
+
+    @property
+    def finished_count(self) -> int:
+        return self._m["finished"]
+
+    # ---------------------------------------------------------- tokens
+    def note_tokens(self, now: float, n: int) -> None:
+        self._tok_events.append((now, n))
+        cutoff = now - 10.0
+        while self._tok_events and self._tok_events[0][0] < cutoff:
+            self._tok_events.pop(0)
+
+    def throughput(self, now: float) -> float:
+        return window_throughput(self._tok_events, now)
+
+
+class Scheduler(SchedulerCore):
+    """The paged-KV scheduler: one admission/budget/role implementation
+    for the real JAX engine AND the cluster simulator.
+
+    The distributed KV pool is consulted by the scheduler itself
+    (``kv_pool``/``engine_id``): the page walk — which blocks to ask
+    for, where to stop, allocation and hash registration — lives here,
+    once.  Only the payload handling differs per host, via
+    ``install_page(page_id, payload, req, now)``: the real engine
+    writes the fetched arrays into a device page, the simulator
+    attributes a transfer-time cost.
+    """
+
+    ROLES = ("mixed", "prefill", "decode")
+
+    def __init__(self, scfg: SchedulerConfig, alloc: PageAllocator,
+                 kv_pool=None, engine_id: str = "engine-0",
+                 install_page: Optional[Callable] = None,
+                 publish_page: Optional[Callable] = None):
+        super().__init__(honor_stop_token=scfg.honor_stop_token)
+        if scfg.role not in self.ROLES:
+            raise ValueError(f"unknown scheduler role {scfg.role!r}; "
+                             f"expected one of {self.ROLES}")
+        self.scfg = scfg
+        self.alloc = alloc
+        self.kv_pool = kv_pool
+        self.engine_id = engine_id
+        self.install_page = install_page
+        self.publish_page = publish_page
+        self.prefills: List[Request] = []      # concurrent PREFILLING
+        self.running: List[Request] = []
+        # P/D handoff: host-provided delivery callable (a decode engine's
+        # submit, or a load-balancing shim over several)
+        self.handoff: Optional[Callable[[Request], None]] = None
+        self._pending_handoff = 0
+
+    # ---------------------------------------------------------- views
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running or self.prefills
+                    or self._pending_handoff)
+
+    @property
+    def wants_handoff(self) -> bool:
+        return self.scfg.role == "prefill" and self.handoff is not None
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.scfg.page_size)
+
+    def _first_hash(self, req: Request) -> Optional[str]:
+        hs = chunk_hashes(req.prompt_tokens[:self.scfg.page_size],
+                          self.scfg.page_size)
+        return hs[0] if hs else None
+
+    # ------------------------------------------------------- admission
+    def try_admit(self, now: float) -> Optional[Request]:
+        scfg = self.scfg
+        if not self.waiting or (len(self.running) + len(self.prefills)
+                                >= scfg.max_batch):
+            return None
+        inflight_hashes = set()
+        if scfg.prefix_caching and self.prefills:
+            inflight_hashes = {self._first_hash(p) for p in self.prefills}
+            inflight_hashes.discard(None)
+        req = None
+        idx = 0
+        while idx < len(self.waiting):
+            cand = self.waiting[idx]
+            total = cand.prompt_len + cand.sampling.max_new_tokens
+            if (scfg.max_pages_per_seq
+                    and self.pages_for(total) > scfg.max_pages_per_seq):
+                cand.state = RequestState.FAILED
+                self.waiting.pop(idx)
+                continue
+            if (inflight_hashes
+                    and cand.prompt_len > scfg.page_size
+                    and self._first_hash(cand) in inflight_hashes
+                    and self.alloc.match_len(cand.prompt_tokens) == 0):
+                # cache-aware admission: a prompt sharing its leading
+                # block with an in-flight prefill waits for those pages
+                # to register so it can reuse them instead of
+                # recomputing the prefix — but only THAT request waits
+                # (later waiters with distinct prefixes still get the
+                # slot), and only when the wait can pay off: not when a
+                # registered prefix already matches, nor when the prompt
+                # is too short for match_prefix to ever reuse the block.
+                idx += 1
+                continue
+            req = cand
+            break
+        if req is None:
+            return None
+        # a handoff-bound prefill engine never decodes: reserving pages
+        # for the decode tokens would only shrink its prefill capacity
+        # (the decode side allocates them at re-admission)
+        total = req.prompt_len + (
+            0 if self.wants_handoff else req.sampling.max_new_tokens)
+        matched_pages: List[int] = []
+        matched_tokens = 0
+        if scfg.prefix_caching:
+            matched_pages, matched_tokens = self.alloc.match_prefix(
+                req.prompt_tokens, now)
+        local_tokens = matched_tokens
+        # the distributed pool works even when engine-local prefix
+        # caching is off (the paper's "KV cache + Default" rows):
+        # cross-engine reuse is the pool's, not the engine's, feature
+        fetched: List[tuple] = []
+        if self.kv_pool is not None:
+            rp, rt, fetched = self._pool_walk(req, matched_tokens, now)
+            matched_pages += rp
+            matched_tokens += rt
+        need = self.pages_for(total) - len(matched_pages)
+        fresh = self.alloc.allocate(need, now)
+        if fresh is None:
+            if scfg.prefix_caching and fetched:
+                # keep the paid-for transfers: install + register the
+                # fetched pages, then release them into the evictable
+                # cache so the retry hits them locally via match_prefix
+                # instead of re-fetching from the pool every step
+                self._apply_fetched(fetched, req, now)
+            self.alloc.release(matched_pages, now)
+            return None     # no memory — stay queued
+        # admission succeeded: only now install the fetched payloads
+        # and count the remote hits (a retry after memory pressure must
+        # not double-count them)
+        self._apply_fetched(fetched, req, now)
+        self.waiting.remove(req)
+        req.page_ids = matched_pages + fresh
+        req.cached_prefix_tokens = matched_tokens
+        req.prefill_done_tokens = matched_tokens
+        req.state = RequestState.PREFILLING
+        self.note_admitted(req, now)
+        self._m["prefix_hit_tokens"] += local_tokens
+        return req
+
+    def _pool_walk(self, req: Request, have_tokens: int, now: float
+                   ) -> Tuple[List[int], int, List[tuple]]:
+        """Extend a local prefix hit with pages from the distributed
+        pool: walk the prompt's block hashes past the locally covered
+        prefix, fetching and allocating a local page per hit.  The tail
+        block is never fetched (prefill must produce at least one new
+        token), and the walk stops at the first miss.
+
+        Payload installation and hash registration are DEFERRED — the
+        (page, hash, payload) triples are returned for the caller to
+        apply only once admission succeeds.  (Hash registration with
+        local prefix caching off would also let a re-fetch of the same
+        hash clobber hash_index while the stale page's eviction later
+        deletes the live entry, so it is additionally gated on
+        ``prefix_caching``.)"""
+        ps = self.scfg.page_size
+        hashes = chunk_hashes(req.prompt_tokens, ps)
+        pages, tokens, fetched = [], 0, []
+        for i in range(have_tokens // ps, len(hashes)):
+            if (i + 1) * ps >= req.prompt_len:
+                break
+            payload = self.kv_pool.fetch(hashes[i], self.engine_id, now)
+            if payload is None:
+                break
+            pids = self.alloc.allocate(1, now)
+            if not pids:
+                break
+            fetched.append((pids[0], hashes[i], payload))
+            pages.append(pids[0])
+            tokens += ps
+        return pages, tokens, fetched
+
+    def _apply_fetched(self, fetched: List[tuple], req: Request,
+                       now: float) -> None:
+        """Install the walk's deferred payloads, register their hashes
+        (when locally cacheable) and count the remote hits."""
+        for pid, h, payload in fetched:
+            if self.install_page is not None:
+                self.install_page(pid, payload, req, now)
+            if self.scfg.prefix_caching:
+                self.alloc.register_hash(pid, h)
+        self._m["remote_hit_tokens"] += len(fetched) * self.scfg.page_size
+
+    # ------------------------------------------------------- schedule
+    def schedule(self, now: float) -> ScheduleOutput:
+        """One scheduler iteration, declaratively.
+
+        Mixed batching (default): admit up to ``max_prefills`` requests
+        into PREFILLING, then emit ONE fused pass carrying every decode
+        token plus a budget-trimmed chunk per in-flight prefill.
+        Legacy (``mixed_batching=False``): one prefill at a time, decode
+        only when no prefill is in flight.
+        """
+        scfg = self.scfg
+        if not scfg.mixed_batching:
+            return self._schedule_two_phase(now)
+        while (len(self.prefills) < scfg.max_prefills
+               and len(self.prefills) * scfg.chunk_size
+               + min(len(self.running), scfg.max_batch)
+               < scfg.step_token_budget):
+            req = self.try_admit(now)
+            if req is None:
+                break
+            self.prefills.append(req)
+        if not self.prefills:
+            if not self.running:
+                return ScheduleOutput(mode="idle")
+            return ScheduleOutput(mode="decode",
+                                  decode=self.running[:scfg.max_batch])
+        dec = self.running[:scfg.max_batch]
+        # decode tokens spend the budget first; floor of 1 guarantees an
+        # in-flight prefill always progresses (liveness under a budget
+        # tighter than the decode batch).
+        budget = max(scfg.step_token_budget - len(dec), 1)
+        if scfg.chunked_prefill:
+            s = scfg.chunk_size
+        else:
+            s = max(max(p.prompt_len - p.prefill_done_tokens
+                        for p in self.prefills), 1)
+        # trim each in-flight prefill's chunk to the remaining budget
+        # (whole-prompt prefill is budget-exempt by definition)
+        works = []
+        for p in self.prefills:
+            c = min(s, p.prompt_len - p.prefill_done_tokens)
+            if scfg.chunked_prefill:
+                c = min(c, budget)
+            budget -= c
+            works.append(PrefillWork(p, p.prefill_done_tokens, c, s))
+        if not dec and len(works) == 1:
+            # a lone prefill with nothing decoding (a prefill-role pod,
+            # or an engine's first step) skips the fused pass — it
+            # would carry max_batch dummy decode lanes of compute
+            return ScheduleOutput(mode="prefill", prefills=works,
+                                  pad_len=s)
+        return ScheduleOutput(mode="mixed", decode=dec, prefills=works,
+                              pad_len=s)
+
+    def _schedule_two_phase(self, now: float) -> ScheduleOutput:
+        scfg = self.scfg
+        if not self.prefills:
+            req = self.try_admit(now)
+            if req is not None:
+                self.prefills.append(req)
+        if self.prefills:
+            req = self.prefills[0]
+            s = scfg.chunk_size if scfg.chunked_prefill else \
+                max(req.prompt_len, 1)
+            start = req.prefill_done_tokens
+            c = min(s, req.prompt_len - start)
+            return ScheduleOutput(mode="prefill",
+                                  prefills=[PrefillWork(req, start, c, s)],
+                                  pad_len=s)
+        if self.running:
+            return ScheduleOutput(mode="decode",
+                                  decode=self.running[:scfg.max_batch])
+        return ScheduleOutput(mode="idle")
+
+    # --------------------------------------------------- prefill bookkeeping
+    def register_prompt_pages(self, req: Request, now: float) -> None:
+        """Hash-register the finished prompt's pages for local reuse
+        and publish them to the distributed pool.  One walk for every
+        engine; only the payload differs, via the host's
+        ``publish_page(page_id, block_hash, req, now)`` hook.
+        Publishing happens even when engine-local prefix caching is off
+        — cross-engine reuse is the pool's feature, not the engine's —
+        and is skipped when the pool already knows the hash (a
+        duplicate would be dropped at the metadata layer anyway, after
+        the payload was materialized for nothing)."""
+        if not self.scfg.prefix_caching and self.kv_pool is None:
+            return
+        hashes = chunk_hashes(req.prompt_tokens, self.scfg.page_size)
+        for i, h in enumerate(hashes):
+            pid = req.page_ids[i]
+            if (self.scfg.prefix_caching
+                    and self.alloc.pages[pid].block_hash is None):
+                self.alloc.register_hash(pid, h)
+            # the pool check runs even for blocks already registered
+            # locally: the pool may have evicted them since their last
+            # publish, and a handoff needs them present again
+            if (self.kv_pool is not None and self.publish_page is not None
+                    and not self.kv_pool.contains(h)):
+                self.publish_page(pid, h, req, now)
+
+    def note_prefill_progress(self, req: Request, chunk_len: int) -> bool:
+        """Advance a prefill by ``chunk_len`` tokens; True when the whole
+        prompt is in the KV pages (the request leaves PREFILLING)."""
+        req.prefill_done_tokens += chunk_len
+        if req.prefill_done_tokens >= req.prompt_len:
+            if req in self.prefills:
+                self.prefills.remove(req)
+            return True
+        return False
+
+    def finish_prefill(self, req: Request, tok: int, now: float) -> None:
+        """Prefill complete on a mixed/decode engine: record the first
+        sampled token and move the request to the decode batch."""
+        req.output_tokens.append(int(tok))
+        if req.first_token_time:
+            req.token_times.append(now)      # migrated-in continuation
+        else:
+            req.first_token_time = now
+        req.state = RequestState.RUNNING
+        self.running.append(req)
+        self.maybe_finish(req, now)
+
+    def handoff_prefill(self, req: Request, now: float) -> None:
+        """Disaggregated prefill complete: KV lives in the pool, so free
+        this engine's pages and reset the request for re-admission on a
+        decode engine.  The host delivers it (``deliver_handoff``) —
+        synchronously for real engines, after the pool's metadata lag
+        for the simulator, tracked so drain predicates don't observe a
+        momentarily idle pair."""
+        self.alloc.release(req.page_ids, now)
+        req.page_ids = []
+        req.state = RequestState.QUEUED
+        req.prefill_done_tokens = 0
+        self._pending_handoff += 1
+        # a prefill pod's throughput IS prefilled prompt tokens — the
+        # same accounting on the real engine and the simulator
+        self.note_tokens(now, req.prompt_len)
+
+    def deliver_handoff(self, req: Request) -> None:
+        self._pending_handoff -= 1
+        self.handoff(req)
+
+    # ---------------------------------------------------- decode bookkeeping
+    def on_decode_batch(self, reqs: List[Request], toks, now: float) -> None:
+        """Record one decode token per request: grow pages across the
+        page boundary (preempting on allocation failure), finish/stop."""
+        for i, r in enumerate(reqs):
+            r.output_tokens.append(int(toks[i]))
+            r.token_times.append(now)
+            nxt = r.prompt_len + len(r.output_tokens)
+            if self.pages_for(nxt + 1) > len(r.page_ids):
+                pid = self.alloc.allocate(1, now)
+                if pid is None:
+                    self.preempt(r, now)
+                    continue
+                r.page_ids += pid
+            self.maybe_finish(r, now)
+        self.note_tokens(now, len(reqs))
+
+    def maybe_finish(self, req: Request, now: float) -> bool:
+        if not self.request_done(req):
+            return False
+        if req in self.running:
+            self.running.remove(req)
+        self.alloc.release(req.page_ids, now)
+        req.page_ids = []
+        self.note_finished(req, now)
+        return True
+
+    def preempt(self, req: Request, now: float) -> None:
+        if req in self.running:
+            self.running.remove(req)
+        self.alloc.release(req.page_ids, now)
+        req.page_ids = []
+        req.output_tokens = []
+        req.prefill_done_tokens = 0
+        req.state = RequestState.QUEUED
+        self.waiting.insert(0, req)
+        self._m["preemptions"] += 1
+
+    def drop_running(self, req: Request, now: float) -> None:
+        """Remove a RUNNING request without finishing it (migration)."""
+        if req in self.running:
+            self.running.remove(req)
+        self.alloc.release(req.page_ids, now)
+        req.page_ids = []
+
+    # ---------------------------------------------------------- metrics
+    def match_prefix_len(self, tokens) -> int:
+        """Prefix-cache coverage for router scoring (non-mutating)."""
+        return self.alloc.match_len(tokens)
+
+    def metrics(self, now: float,
+                loaded_adapters: tuple = ()) -> EngineMetrics:
+        return EngineMetrics(
+            num_running=len(self.running) + len(self.prefills),
+            num_waiting=len(self.waiting),
+            kv_utilization=self.alloc.utilization,
+            tokens_per_sec=self.throughput(now),
+            avg_latency=self.avg_latency,
+            avg_queue_time=self.avg_queue_time,
+            admitted_requests=self.admitted_count,
+            finished_requests=self.finished_count,
+            preemptions=self._m["preemptions"],
+            prefix_hit_tokens=self._m["prefix_hit_tokens"],
+            remote_hit_tokens=self._m["remote_hit_tokens"],
+            loaded_adapters=loaded_adapters)

@@ -8,10 +8,16 @@ substrate's contiguous per-slot caches (recurrent states double as the
 "KV cache" for SSM layers — constant-size, so slots never grow).
 
 Same handle contract as InferenceEngine (submit/step/metrics/
-match_prefix_len), so the gateway and control plane treat both alike.
-Prefix caching is not available here: an SSM has no token-addressable
-KV — the pool-equivalent is recurrent-state snapshotting at fixed
-strides (see DESIGN.md §4, noted as partial support).
+match_prefix_len), so the gateway and control plane treat both alike —
+and since the scheduler-core refactor the queue/admission/finish
+bookkeeping is the shared :class:`repro.engine.scheduler.SchedulerCore`
+(the same stop predicate, queue-time and latency EWMAs and throughput
+window the paged engines use), so ``admitted_requests`` and
+``avg_queue_time`` feed gateway least-latency routing with the same
+semantics as every other engine.  Prefix caching is not available
+here: an SSM has no token-addressable KV — the pool-equivalent is
+recurrent-state snapshotting at fixed strides (see DESIGN.md §4, noted
+as partial support).
 """
 from __future__ import annotations
 
@@ -23,9 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.engine import EngineMetrics, window_throughput
 from repro.engine.request import Request, RequestState
 from repro.engine.sampling import sample
+from repro.engine.scheduler import EngineMetrics, SchedulerCore
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -51,22 +57,24 @@ class SlotEngine:
         self.caches = M.init_cache(cfg, self.ecfg.max_slots,
                                    self.ecfg.max_len, dtype)
         self.slots: List[Optional[Request]] = [None] * self.ecfg.max_slots
-        self.waiting: List[Request] = []
-        self.finished: List[Request] = []
+        self.core = SchedulerCore()
         self._key = jax.random.PRNGKey(seed + 1)
-        self._fin = 0
-        self._lat_ewma = 0.0
-        self._tok_window: List[tuple] = []
 
     # ------------------------------------------------------------ contract
     def submit(self, req: Request) -> None:
-        if req.arrival_time == 0.0:
-            req.arrival_time = self.clock()
-        self.waiting.append(req)
+        self.core.enqueue(req, self.clock())
+
+    @property
+    def waiting(self) -> List[Request]:
+        return self.core.waiting
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.core.finished
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or any(self.slots))
+        return bool(self.core.waiting or any(self.slots))
 
     def match_prefix_len(self, tokens) -> int:
         return 0                     # no token-addressable KV (SSM note)
@@ -95,7 +103,7 @@ class SlotEngine:
         tok = tok.tolist() if self.cfg.num_codebooks else int(tok)
         self._push_token(req, tok, now, first=True)
         req.state = RequestState.RUNNING
-        req.schedule_time = now
+        self.core.note_admitted(req, now)
         req.slot = slot
         self.slots[slot] = req
 
@@ -108,7 +116,7 @@ class SlotEngine:
             req.first_token_time = now
         else:
             req.token_times.append(now)
-        self._tok_window.append((now, 1))
+        self.core.note_tokens(now, 1)
 
     def _sample(self, logits, reqs) -> np.ndarray:
         if self.cfg.num_codebooks:
@@ -123,15 +131,15 @@ class SlotEngine:
         return np.asarray(sample(logits, sub, jnp.asarray(temps)))
 
     def step(self) -> int:
-        # admit
-        while self.waiting and None in self.slots:
-            req = self.waiting[0]
+        # admit (shared admission scan: FIFO, failing oversized requests)
+        while self.core.waiting and None in self.slots:
+            req = self.core.waiting[0]
             total = req.prompt_len + req.sampling.max_new_tokens
             if total > self.ecfg.max_len:
                 req.state = RequestState.FAILED
-                self.waiting.pop(0)
+                self.core.waiting.pop(0)
                 continue
-            self.waiting.pop(0)
+            self.core.waiting.pop(0)
             self._prefill_into_slot(req, self.slots.index(None))
             self._maybe_finish(self.slots[req.slot])
             return 1
@@ -168,18 +176,12 @@ class SlotEngine:
         return len(active)
 
     def _maybe_finish(self, req: Request) -> None:
-        if req is None or \
-                len(req.output_tokens) < req.sampling.max_new_tokens:
+        if req is None or not self.core.request_done(req):
             return
-        req.finish_time = self.clock()
-        req.state = RequestState.FINISHED
         if req.slot >= 0:
             self.slots[req.slot] = None
             req.slot = -1
-        self.finished.append(req)
-        self._fin += 1
-        self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
-                          if self._lat_ewma else req.total_latency)
+        self.core.note_finished(req, self.clock())
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
@@ -190,12 +192,12 @@ class SlotEngine:
 
     def metrics(self) -> EngineMetrics:
         now = self.clock()
-        self._tok_window = [(t, c) for t, c in self._tok_window
-                            if t >= now - 10.0]
         used = sum(r is not None for r in self.slots)
         return EngineMetrics(
-            num_running=used, num_waiting=len(self.waiting),
+            num_running=used, num_waiting=len(self.core.waiting),
             kv_utilization=used / max(self.ecfg.max_slots, 1),
-            tokens_per_sec=window_throughput(self._tok_window, now),
-            avg_latency=self._lat_ewma,
-            finished_requests=self._fin)
+            tokens_per_sec=self.core.throughput(now),
+            avg_latency=self.core.avg_latency,
+            avg_queue_time=self.core.avg_queue_time,
+            admitted_requests=self.core.admitted_count,
+            finished_requests=self.core.finished_count)

@@ -4,43 +4,112 @@
 up N real JAX engines behind the AIBrix gateway (routing policy
 selectable), serves a synthetic batch of requests end-to-end, and prints
 the per-request latency metrics the paper's evaluations report.
+
+Prefill/decode disaggregation (paper §3.2.5) on the REAL data plane:
+``--roles 2P2D`` builds 2 prefill + 2 decode JAX engines around a
+shared :class:`DistributedKVPool`.  Prefill engines publish each
+finished prompt's KV pages into the pool (content-addressed by block
+hash) and hand the request to the least-loaded decode engine, which
+pulls the pages at admission and only recomputes the tail block before
+decoding — the DistServe-style handoff the cluster simulator's
+``benchmarks/bench_pd_disagg.py`` measures at scale, here executed by
+the actual jitted engines.
 """
 from __future__ import annotations
 
 import argparse
+import re
 import time
 
 import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.core.gateway import Gateway
+from repro.core.kvcache.pool import DistributedKVPool
 from repro.core.sim.workloads import summarize
 from repro.engine import EngineConfig, InferenceEngine, Request, \
     SamplingParams
 
 
+def parse_roles(spec: str, default_engines: int):
+    """'mixed' -> N mixed engines; '2P2D'/'1p3d' -> disaggregated."""
+    if not spec or spec == "mixed":
+        return ["mixed"] * default_engines
+    m = re.fullmatch(r"(\d+)[pP](\d+)[dD]", spec)
+    if m is None:
+        raise ValueError(
+            f"--roles {spec!r}: expected 'mixed' or '<n>P<m>D'")
+    n_p, n_d = int(m.group(1)), int(m.group(2))
+    if n_p == 0 or n_d == 0:
+        raise ValueError(
+            f"--roles {spec!r}: a disaggregated group needs at least "
+            "one prefill AND one decode engine")
+    return ["prefill"] * n_p + ["decode"] * n_d
+
+
+def build_engines(cfg, roles, clock, ecfg_kw=None):
+    """A pod group: engines (+ pool & handoff wiring when disaggregated).
+
+    Returns (engines dict, frontends dict, pool).  ``frontends`` are the
+    engines that accept NEW requests (prefill or mixed) — decode engines
+    only receive handed-off work.
+    """
+    kw = dict(page_size=8, num_pages=256, max_batch=4,
+              max_pages_per_seq=32, chunk_size=32)
+    kw.update(ecfg_kw or {})
+    disagg = any(r != "mixed" for r in roles)
+    pool = None
+    if disagg:
+        pool = DistributedKVPool(capacity_bytes=1 << 30,
+                                 metadata_lag=0.0, clock=clock)
+    engines = {}
+    for i, role in enumerate(roles):
+        eid = f"{role}-{i}" if disagg else f"engine-{i}"
+        engines[eid] = InferenceEngine(
+            cfg, EngineConfig(role=role, **kw), clock=clock,
+            kv_pool_client=pool, engine_id=eid, seed=0 if disagg else i)
+    if disagg:
+        decoders = [e for e in engines.values()
+                    if e.ecfg.role in ("decode", "mixed")]
+
+        def handoff(req):
+            tgt = min(decoders, key=lambda e: len(e.running)
+                      + len(e.waiting) + len(e.prefills))
+            tgt.submit(req)
+
+        for e in engines.values():
+            if e.ecfg.role == "prefill":
+                e.handoff = handoff
+    frontends = {eid: e for eid, e in engines.items()
+                 if e.ecfg.role in ("prefill", "mixed")}
+    return engines, frontends, pool
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--engines", type=int, default=None,
+                    help="pod count for --roles mixed (default 2)")
+    ap.add_argument("--roles", default="mixed",
+                    help="'mixed' (default, --engines colocated pods) or "
+                         "'2P2D'-style prefill/decode disaggregation")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--policy", default="prefix-cache-aware")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
 
+    if args.engines is not None and args.roles != "mixed":
+        ap.error("--engines only applies to --roles mixed; a "
+                 "'<n>P<m>D' spec fixes the pod count itself")
     cfg = get_reduced_config(args.arch)
     t0 = time.monotonic()
     clock = lambda: time.monotonic() - t0      # noqa: E731
+    roles = parse_roles(args.roles, args.engines or 2)
     gw = Gateway(policy=args.policy, clock=clock)
-    engines = {}
-    for i in range(args.engines):
-        eng = InferenceEngine(
-            cfg, EngineConfig(page_size=8, num_pages=256, max_batch=4,
-                              max_pages_per_seq=32, chunk_size=32),
-            clock=clock, engine_id=f"engine-{i}", seed=i)
-        engines[f"engine-{i}"] = eng
-        gw.register_engine(f"engine-{i}", eng)
+    engines, frontends, pool = build_engines(cfg, roles, clock)
+    for eid, eng in frontends.items():
+        gw.register_engine(eid, eng)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, 24).tolist()
@@ -72,7 +141,13 @@ def main() -> None:
         m = eng.metrics()
         print(f"  {eid}: finished={m.finished_requests} "
               f"prefix_hit_tokens={m.prefix_hit_tokens} "
+              f"remote_hit_tokens={m.remote_hit_tokens} "
               f"kv_util={m.kv_utilization:.2f}")
+    if pool is not None:
+        st = pool.stats
+        print(f"  pool: puts={st.puts} hits={st.hits_local + st.hits_remote}"
+              f" dup_drops={st.dup_puts_dropped}"
+              f" bytes_stored={st.bytes_stored}")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,19 @@ def test_duplicate_publish_dropped_before_transfer():
     assert p.stats.dup_puts_dropped == 1
 
 
+def test_contains_includes_pending_metadata():
+    """contains() answers 'does the pool know this hash' — including
+    blocks still in the async metadata queue, so engines skip
+    materializing payloads for blocks published moments ago."""
+    p = _pool(lag=0.5)
+    p.publish("h1", "x", "e0", now=0.0)
+    assert p.contains("h1")                          # pending counts
+    assert p.fetch("h1", "e0", now=0.1) is None      # but not fetchable
+    p.tick(1.0)
+    assert p.contains("h1") and p.fetch("h1", "e0", now=1.1) == "x"
+    assert not p.contains("nope")
+
+
 def test_colocated_vs_remote_hit_accounting():
     p = _pool()
     p.attach_engine("e0", "node-0")
