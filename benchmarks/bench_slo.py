@@ -1,0 +1,83 @@
+"""SLO-aware scheduling vs FIFO on the mixed-arrival sim scenario.
+
+The tentpole claim (ISSUE 3, paper §"SLO-driven GPU optimizer"):
+deadline-aware admission (strict priority rank, earliest-TTFT-slack
+within a class) plus bounded priority preemption lets an engine hold
+interactive TTFT while batch work rides in the same decode batch.
+Under FIFO a short interactive prompt queues behind multi-second batch
+prefills and decode residency; under SLO scheduling it jumps the
+admission queue, so interactive P99 TTFT drops sharply at the same
+total token throughput (the work is merely reordered, not shed —
+preemption is rate-limited so little decode progress is discarded).
+
+One SimEngine driving the SAME shared Scheduler as the real JAX engine
+(the scheduling decisions measured here are the production code's),
+identical ``slo_mixed`` workload for both modes.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.sim.events import EventLoop
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.core.sim.workloads import slo_mixed, summarize
+
+
+def _run(slo: bool, quick: bool = False) -> dict:
+    cfg = get_config("deepseek-coder-7b")
+    loop = EventLoop()
+    sc = SimEngineConfig(device_type="a10", max_batch=8, chunk_size=512,
+                         slo_aware=slo, slo_preempt_cooldown_s=5.0)
+    eng = SimEngine(cfg, loop, sc, engine_id="eng-0")
+    # ~85% utilization: queueing is transient (total throughput equals
+    # offered load in both modes, so the comparison isolates TTFT),
+    # but a 1.8k-token batch prefill ahead of an interactive arrival
+    # still costs FIFO seconds of queue time
+    wl = slo_mixed(rate_rps=0.8, duration_s=(120.0 if quick else 300.0),
+                   seed=11)
+    for tr in wl:
+        loop.schedule(tr.arrival, lambda tr=tr: eng.submit(tr.request))
+    loop.run(until=wl[-1].arrival + 3600.0,
+             stop_when=lambda: loop.clock.now > wl[-1].arrival
+             and not eng.has_work)
+    reqs = [tr.request for tr in wl]
+    out = {"all": summarize(reqs)}
+    for cls in ("interactive", "batch"):
+        out[cls] = summarize([r for r in reqs
+                              if r.priority_class == cls])
+    out["engine"] = eng.metrics()
+    return out
+
+
+def main(quick: bool = False):
+    cols = ("ttft_avg_ms", "ttft_p99_ms", "itl_p99_ms", "finished")
+    print("mode,class," + ",".join(cols) + ",total_tput_tok_s")
+    rows = []
+    for name, slo in (("fifo", False), ("slo", True)):
+        s = _run(slo, quick)
+        rows.append((name, s))
+        for cls in ("interactive", "batch"):
+            print(f"{name},{cls},"
+                  + ",".join(f"{s[cls].get(c, 0):.1f}" for c in cols)
+                  + f",{s['all']['total_tput_tok_s']:.1f}")
+        m = s["engine"]
+        att = {c: f"{a:.2f}" for c, a, _i, _n in m.slo_by_class}
+        print(f"{name},attainment,ttft_by_class={att},"
+              f"preemptions={m.preemptions}")
+    fifo, slo_r = rows[0][1], rows[1][1]
+    imp = 100 * (1 - slo_r["interactive"]["ttft_p99_ms"]
+                 / max(fifo["interactive"]["ttft_p99_ms"], 1e-9))
+    tput = (slo_r["all"]["total_tput_tok_s"]
+            / max(fifo["all"]["total_tput_tok_s"], 1e-9))
+    print(f"derived,interactive_ttft_p99_improvement_pct={imp:.1f}"
+          f",interactive_ttft_avg_reduction_pct="
+          f"{100*(1-slo_r['interactive']['ttft_avg_ms']/max(fifo['interactive']['ttft_avg_ms'],1e-9)):.1f}"
+          f",tput_ratio={tput:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced duration (CI smoke)")
+    main(quick=ap.parse_args().quick)

@@ -15,6 +15,20 @@ All return a desired replica count; actuation (pod cold start etc.) is
 the orchestrator's job, so policy quality and actuation latency can be
 measured separately — this mirrors the paper's claim structure
 (latency/throughput/oscillation vs native HPA).
+
+Config knobs shared by every policy: ``metric`` (the MetricStore key
+to scale on — load metrics such as ``concurrency`` / ``kv_cache_
+utilization``, or the *inverted* ``slo_attainment`` signal the shared
+scheduler core emits), ``target`` (per-replica target value for load
+metrics; desired attainment fraction, e.g. 0.95, for slo_attainment),
+``min_replicas``/``max_replicas`` bounds, and ``invert`` (force the
+higher-is-better interpretation; auto-detected for metrics in
+``INVERTED_METRICS``).  Inverted pressure is the miss-rate ratio
+(1-measured)/(1-target), so all three policies scale UP when the
+measured value drops below target — e.g. KPA targeting
+``slo_attainment`` at 0.95 adds replicas while interactive TTFT
+misses pile up — and back DOWN once attainment holds above it (the
+SLO path from scheduler to autoscaler).
 """
 from __future__ import annotations
 
@@ -23,6 +37,10 @@ from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.core.autoscaler.metrics import MetricStore
+
+# metrics where HIGHER is better (pressure = target / measured):
+# scaling must react to the value falling below target, not above it
+INVERTED_METRICS = frozenset({"slo_attainment"})
 
 
 @dataclass
@@ -36,15 +54,33 @@ class Autoscaler:
     name = "base"
 
     def __init__(self, metric: str = "concurrency", target: float = 4.0,
-                 min_replicas: int = 1, max_replicas: int = 64):
+                 min_replicas: int = 1, max_replicas: int = 64,
+                 invert: Optional[bool] = None):
         self.metric = metric
         self.target = target
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
+        self.invert = (metric in INVERTED_METRICS) if invert is None \
+            else invert
 
     def _clamp(self, n: float) -> int:
         return int(min(max(math.ceil(n), self.min_replicas),
                        self.max_replicas))
+
+    def _pressure(self, m: float) -> float:
+        """Scaling pressure: > 1 means underprovisioned.  Load metrics:
+        measured/target.  Inverted metrics (higher-is-better, e.g.
+        slo_attainment): the miss-rate ratio (1-measured)/(1-target) —
+        "SLO misses as a multiple of the allowed miss budget".  Unlike
+        target/measured (which is floored at ``target`` because
+        attainment cannot exceed 1.0, leaving scale-down unreachable
+        and replica counts ratcheting up after every dip), the miss
+        ratio spans the full range: attainment at target -> 1.0,
+        perfect attainment -> 0.0 (scale down toward min_replicas),
+        heavy misses -> >> 1."""
+        if self.invert:
+            return (1.0 - m) / max(1.0 - self.target, 1e-6)
+        return m / self.target
 
     def desired(self, now: float, store: MetricStore, current: int
                 ) -> ScaleDecision:
@@ -52,7 +88,12 @@ class Autoscaler:
 
 
 class HPA(Autoscaler):
-    """Native Kubernetes HPA semantics (the paper's baseline)."""
+    """Native Kubernetes HPA semantics (the paper's baseline).
+
+    Knobs: ``sync_period_s`` (reconcile interval), ``tolerance``
+    (dead-band around pressure 1.0), ``scale_down_stabilization_s``
+    (hold the max desired over this window before shrinking).
+    """
     name = "hpa"
 
     def __init__(self, *a, sync_period_s: float = 15.0, tolerance: float = 0.1,
@@ -73,7 +114,7 @@ class HPA(Autoscaler):
         if m is None:
             self._last = ScaleDecision(current, "no metric")
             return self._last
-        ratio = m / self.target
+        ratio = self._pressure(m)
         if abs(ratio - 1.0) <= self.tolerance:
             desired = current
         else:
@@ -91,7 +132,12 @@ class HPA(Autoscaler):
 
 class KPA(Autoscaler):
     """Knative Pod Autoscaler: stable/panic windows (paper: one of the
-    'advanced autoscaling algorithms' AIBrix leverages)."""
+    'advanced autoscaling algorithms' AIBrix leverages).
+
+    Knobs: ``panic_threshold`` (burst ratio entering panic mode),
+    ``max_scale_up_rate``/``max_scale_down_rate`` (per-decision rate
+    limits).  Panic mode scales on the 6s window and holds the peak.
+    """
     name = "kpa"
 
     def __init__(self, *a, panic_threshold: float = 2.0,
@@ -104,23 +150,36 @@ class KPA(Autoscaler):
         self._panic_until = -1.0
         self._panic_peak = 0
 
+    def _replicas_needed(self, m: float, current: int) -> float:
+        """Window aggregate -> replica demand.  Load metrics: aggregate
+        load over per-replica target.  Inverted metrics: scale the
+        current fleet by the attainment shortfall."""
+        if self.invert:
+            return max(current, 1) * self._pressure(m)
+        return m / self.target
+
     def desired(self, now, store, current) -> ScaleDecision:
         stable = store.stable(now, self.metric)
         panic = store.panic(now, self.metric)
         if stable is None:
             return ScaleDecision(current, "no metric")
-        want_stable = stable / self.target * 1.0
+        want_stable = self._replicas_needed(stable, current)
         desired = want_stable
         in_panic = False
         if panic is not None and current > 0:
-            capacity = current * self.target
-            if panic / max(capacity, 1e-9) >= self.panic_threshold / 2.0 \
-                    and panic / self.target > current:
+            need_panic = self._replicas_needed(panic, current)
+            if self.invert:
+                burst = self._pressure(panic) >= self.panic_threshold
+            else:
+                capacity = current * self.target
+                burst = (panic / max(capacity, 1e-9)
+                         >= self.panic_threshold / 2.0)
+            if burst and need_panic > current:
                 # enter/extend panic mode for 60s; scale on panic window
                 self._panic_until = max(self._panic_until, now + 60.0)
             if now <= self._panic_until:
                 in_panic = True
-                desired = max(want_stable, panic / self.target,
+                desired = max(want_stable, need_panic,
                               self._panic_peak)
                 self._panic_peak = max(self._panic_peak,
                                        math.ceil(desired))
@@ -137,7 +196,12 @@ class KPA(Autoscaler):
 
 class APA(Autoscaler):
     """AIBrix Pod Autoscaler: symmetric fluctuation tolerance on
-    real-time (zero-delay) inference metrics."""
+    real-time (zero-delay) inference metrics.
+
+    Knobs: ``up_fluctuation``/``down_fluctuation`` — the tolerance
+    band (as a fraction of capacity, or of pressure 1.0 for inverted
+    metrics) that must be exceeded before any scaling move.
+    """
     name = "apa"
 
     def __init__(self, *a, up_fluctuation: float = 0.1,
@@ -151,6 +215,18 @@ class APA(Autoscaler):
         stable = store.stable(now, self.metric)
         if m is None or stable is None:
             return ScaleDecision(current, "no metric")
+        if self.invert:
+            # attainment-style metric: pressure >1 = SLO misses piling
+            # up on the fresh window -> scale the fleet by the shortfall
+            pm, ps = self._pressure(m), self._pressure(stable)
+            if pm > 1 + self.up_f:
+                desired = math.ceil(max(current, 1) * pm)
+            elif ps < 1 - self.down_f:
+                desired = math.ceil(max(current, 1) * ps)
+            else:
+                desired = current
+            return ScaleDecision(self._clamp(desired),
+                                 f"m={m:.2f} pressure={pm:.2f}")
         capacity = max(current, 1) * self.target
         if m > capacity * (1 + self.up_f):
             desired = math.ceil(m / self.target)

@@ -83,9 +83,13 @@ class Gateway:
 
     def route(self, tokens: Sequence[int], user: str = "default",
               lora_adapter: Optional[str] = None,
-              est_output_tokens: int = 64) -> Optional[str]:
+              est_output_tokens: int = 64,
+              priority_class: str = "standard") -> Optional[str]:
         """Admission + routing.  Returns engine id, or None if rejected
-        (token-based rate limit) / no engine registered."""
+        (token-based rate limit) / no engine registered.
+        ``priority_class`` is the request's SLO class — the slo-aware
+        policy routes by its per-class attainment/slack; other
+        policies ignore it."""
         now = self.clock()
         if not self.engines:
             return None
@@ -96,7 +100,8 @@ class Gateway:
         if not tpm.allow(len(tokens) + est_output_tokens, now):
             self.stats.rejected_tpm += 1
             return None
-        eid = self.policy.select(self.engines, tokens, lora_adapter)
+        eid = self.policy.select(self.engines, tokens, lora_adapter,
+                                 priority_class=priority_class)
         self.stats.routed += 1
         self.stats.per_engine[eid] = self.stats.per_engine.get(eid, 0) + 1
         self.request_log.append(

@@ -5,13 +5,25 @@ Implements exactly the paper's six policies over live engine metrics:
   random | throughput | least-request | least-kv-cache | least-latency |
   prefix-cache-aware
 
-plus a composite ``prefix-load`` (beyond-paper: prefix affinity scored
-jointly with load, the direction the gateway-api-inference-extension
-work took) — used in benchmarks as the "optimized" router.
+plus two beyond-paper composites:
 
-Engines are anything exposing ``metrics() -> EngineMetrics`` and
-``match_prefix_len(tokens) -> int`` — the real JAX engine and the
-cluster simulator's analytic engine both qualify.
+  * ``prefix-load`` — prefix affinity scored jointly with load (the
+    direction the gateway-api-inference-extension work took); used in
+    benchmarks as the "optimized" router.  Knob: ``load_weight``.
+  * ``slo-aware`` — routes by per-priority-class SLO slack/attainment
+    instead of raw latency: engines report per-class TTFT attainment
+    (``EngineMetrics.slo_by_class``, produced by the shared scheduler
+    core) and the policy sends a request where its class's SLO has the
+    most headroom.  Knobs: ``load_weight`` (queue-depth penalty),
+    ``classes`` (TTFT/ITL target table, defaults to the scheduler's
+    ``DEFAULT_SLO_CLASSES``).
+
+Every ``select`` takes the request's ``priority_class`` keyword (the
+gateway forwards it); policies that don't differentiate classes simply
+ignore it.  Engines are anything exposing ``metrics() ->
+EngineMetrics`` and ``match_prefix_len(tokens) -> int`` — the real JAX
+engine, the slot engine and the cluster simulator's analytic engine
+all qualify.
 """
 from __future__ import annotations
 
@@ -19,13 +31,15 @@ import random as _random
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.engine.engine import EngineMetrics  # metric surface contract
+from repro.engine.scheduler import DEFAULT_SLO_CLASSES
 
 
 class RoutingPolicy:
     name = "base"
 
     def select(self, engines: Dict[str, object], tokens: Sequence[int],
-               lora_adapter: Optional[str] = None) -> str:
+               lora_adapter: Optional[str] = None,
+               priority_class: str = "standard") -> str:
         raise NotImplementedError
 
 
@@ -35,14 +49,16 @@ class RandomPolicy(RoutingPolicy):
     def __init__(self, seed: int = 0):
         self.rng = _random.Random(seed)
 
-    def select(self, engines, tokens, lora_adapter=None):
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard"):
         return self.rng.choice(sorted(engines))
 
 
 class _MetricArgmin(RoutingPolicy):
     metric: Callable = None
 
-    def select(self, engines, tokens, lora_adapter=None):
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard"):
         scored = {eid: self.metric(e.metrics())
                   for eid, e in engines.items()}
         lo = min(scored.values())
@@ -83,7 +99,8 @@ class PrefixCacheAwarePolicy(RoutingPolicy):
         self.threshold = threshold
         self._fallback = LeastRequestPolicy()
 
-    def select(self, engines, tokens, lora_adapter=None):
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard"):
         n = max(len(tokens), 1)
         best_eid, best_cov = None, 0.0
         for eid in sorted(engines):
@@ -106,7 +123,8 @@ class PrefixLoadPolicy(RoutingPolicy):
     def __init__(self, load_weight: float = 0.02):
         self.load_weight = load_weight
 
-    def select(self, engines, tokens, lora_adapter=None):
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard"):
         n = max(len(tokens), 1)
         best, best_score = None, -1e18
         for eid in sorted(engines):
@@ -120,6 +138,47 @@ class PrefixLoadPolicy(RoutingPolicy):
         return best
 
 
+class SLOAwarePolicy(RoutingPolicy):
+    """SLO-aware routing: pick the engine with the most SLO headroom
+    for the request's priority class, instead of raw latency.
+
+    Score per engine = the class's recent TTFT attainment (how well
+    this engine is currently holding that class's SLO — falling back
+    to the engine-wide ``slo_attainment`` before the class has any
+    finishes there) minus the engine's queue-time pressure normalized
+    by the class TTFT target (an engine whose queue already eats most
+    of an interactive budget is hopeless for interactive work but fine
+    for batch) minus ``load_weight`` × queue depth (tie-break toward
+    emptier engines).  Works against any engine whose metrics come
+    from the shared scheduler core (real, sim and slot engines).
+    """
+    name = "slo-aware"
+
+    def __init__(self, load_weight: float = 0.02, classes: dict = None):
+        self.load_weight = load_weight
+        self.classes = dict(classes or DEFAULT_SLO_CLASSES)
+
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard"):
+        cls = self.classes.get(priority_class) \
+            or self.classes.get("standard") \
+            or DEFAULT_SLO_CLASSES["standard"]
+        best, best_score = None, -1e18
+        for eid in sorted(engines):
+            m = engines[eid].metrics()
+            att = m.slo_attainment
+            for name, ttft_att, _itl_att, _n in m.slo_by_class:
+                if name == priority_class:
+                    att = ttft_att
+                    break
+            slack_pressure = m.avg_queue_time / max(cls.ttft_s, 1e-9)
+            load = m.num_running + m.num_waiting
+            score = att - slack_pressure - self.load_weight * load
+            if score > best_score:
+                best, best_score = eid, score
+        return best
+
+
 class LoRAAffinityPolicy(RoutingPolicy):
     """LoRA-aware routing (paper §3.2.1): prefer engines that already
     have the adapter loaded; tie-break least-request."""
@@ -128,7 +187,8 @@ class LoRAAffinityPolicy(RoutingPolicy):
     def __init__(self):
         self._fallback = LeastRequestPolicy()
 
-    def select(self, engines, tokens, lora_adapter=None):
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard"):
         if lora_adapter:
             having = {eid: e for eid, e in engines.items()
                       if lora_adapter in e.metrics().loaded_adapters}
@@ -140,7 +200,7 @@ class LoRAAffinityPolicy(RoutingPolicy):
 POLICIES = {p.name: p for p in (
     RandomPolicy, ThroughputPolicy, LeastRequestPolicy, LeastKVCachePolicy,
     LeastLatencyPolicy, PrefixCacheAwarePolicy, PrefixLoadPolicy,
-    LoRAAffinityPolicy)}
+    SLOAwarePolicy, LoRAAffinityPolicy)}
 
 
 def make_policy(name: str, **kw) -> RoutingPolicy:

@@ -105,6 +105,9 @@ class AIRuntime:
             "avg_latency_s": float(m.avg_latency),
             "queue_time_s": float(m.avg_queue_time),
             "preemptions": float(m.preemptions),
+            # windowed TTFT-SLO attainment from the shared scheduler
+            # core — the inverted metric the autoscalers can target
+            "slo_attainment": float(m.slo_attainment),
         }
 
     # ------------------------------------------------- engine management

@@ -187,7 +187,8 @@ class ServingCluster:
             eid = self.gateway.route(
                 tr.request.prompt_tokens, user=tr.request.user,
                 lora_adapter=tr.request.lora_adapter,
-                est_output_tokens=tr.request.sampling.max_new_tokens)
+                est_output_tokens=tr.request.sampling.max_new_tokens,
+                priority_class=tr.request.priority_class)
             if eid is None:
                 self.rejected += 1
                 return

@@ -58,10 +58,20 @@ class SimEngineConfig:
     #             off (never decodes)
     #   decode  — pulls prefilled KV from the pool, decodes only
     role: str = "mixed"
+    # SLO-aware scheduling — the SAME policy knobs as the real engine,
+    # handled by the shared Scheduler (deadline-aware admission order,
+    # priority preemption, per-class attainment accounting)
+    slo_aware: bool = False
+    slo_classes: Optional[dict] = None      # None => scheduler defaults
+    slo_preempt_headroom: float = 0.25
+    slo_preempt_cooldown_s: float = 1.0
 
     def scheduler_config(self) -> SchedulerConfig:
         """The shared Scheduler in its legacy two-phase mode (one
         prefill at a time — the simulator's iteration granularity)."""
+        kw = {}
+        if self.slo_classes is not None:
+            kw["slo_classes"] = dict(self.slo_classes)
         return SchedulerConfig(
             page_size=self.page_size, max_batch=self.max_batch,
             max_pages_per_seq=0,            # sim: no per-seq page cap
@@ -70,7 +80,10 @@ class SimEngineConfig:
             prefix_caching=self.prefix_caching,
             mixed_batching=False, max_prefills=1,
             honor_stop_token=False,     # sim decode tokens are
-            role=self.role)             # synthetic zeros
+            role=self.role,             # synthetic zeros
+            slo_aware=self.slo_aware,
+            slo_preempt_headroom=self.slo_preempt_headroom,
+            slo_preempt_cooldown_s=self.slo_preempt_cooldown_s, **kw)
 
 
 class SimEngine:

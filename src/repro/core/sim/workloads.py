@@ -12,6 +12,9 @@ Statistically matched stand-ins for the paper's datasets:
   * ``multiturn_chat`` — growing shared-prefix conversations (the
     KV-reuse-friendly case motivating the distributed pool).
   * ``burst``          — step/burst arrival pattern for autoscaler tests.
+  * ``slo_mixed``      — interleaved interactive (short, latency-bound)
+    and batch (long, throughput-bound) arrivals with priority classes
+    set — the SLO-aware-scheduling testbed (bench_slo).
 """
 from __future__ import annotations
 
@@ -121,6 +124,35 @@ def burst(base_rps: float, burst_rps: float, duration_s: float,
         req = Request(prompt_tokens=_toks(rng, plen),
                       sampling=SamplingParams(max_new_tokens=olen),
                       arrival_time=t)
+        out.append(TimedRequest(t, req))
+    return out
+
+
+def slo_mixed(rate_rps: float, duration_s: float, seed: int = 0,
+              interactive_frac: float = 0.5,
+              interactive_prompt: float = 128.0,
+              interactive_output: float = 48.0,
+              batch_prompt: float = 1800.0,
+              batch_output: float = 200.0) -> List[TimedRequest]:
+    """Mixed-class arrivals for SLO-aware scheduling benchmarks:
+    interactive chat turns (short prompt/output, tight TTFT target)
+    Poisson-interleaved with batch jobs (long prompts, long outputs,
+    loose TTFT).  Each request carries its ``priority_class`` so the
+    scheduler/gateway/autoscaler SLO path sees real class labels."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    while t < duration_s:
+        t += rng.exponential(1.0 / rate_rps)
+        if rng.random() < interactive_frac:
+            cls, mp, mo = "interactive", interactive_prompt, \
+                interactive_output
+        else:
+            cls, mp, mo = "batch", batch_prompt, batch_output
+        plen = _lognormal_len(rng, mp, 0.5, 8, 4096)
+        olen = _lognormal_len(rng, mo, 0.5, 4, 1024)
+        req = Request(prompt_tokens=_toks(rng, plen),
+                      sampling=SamplingParams(max_new_tokens=olen),
+                      arrival_time=t, priority_class=cls)
         out.append(TimedRequest(t, req))
     return out
 

@@ -2,5 +2,6 @@ from repro.engine.engine import (EngineConfig, EngineMetrics,  # noqa: F401
                                  InferenceEngine)
 from repro.engine.request import Request, RequestState, SamplingParams  # noqa: F401
 from repro.engine.runner import ModelRunner  # noqa: F401
-from repro.engine.scheduler import (ScheduleOutput, Scheduler,  # noqa: F401
+from repro.engine.scheduler import (DEFAULT_SLO_CLASSES,  # noqa: F401
+                                    ClassSLO, ScheduleOutput, Scheduler,
                                     SchedulerConfig, SchedulerCore)

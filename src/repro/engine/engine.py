@@ -70,12 +70,20 @@ class EngineConfig:
     token_budget: int = 0           # 0 => max_batch + max_prefills*chunk
     # -- P/D disaggregation --
     role: str = "mixed"             # mixed | prefill | decode
+    # -- SLO-aware scheduling (scheduler.DEFAULT_SLO_CLASSES targets) --
+    slo_aware: bool = False         # deadline-aware admission/preemption
+    slo_classes: Optional[dict] = None      # None => scheduler defaults
+    slo_preempt_headroom: float = 0.25
+    slo_preempt_cooldown_s: float = 1.0
 
     @property
     def step_token_budget(self) -> int:
         return self.scheduler_config().step_token_budget
 
     def scheduler_config(self) -> SchedulerConfig:
+        kw = {}
+        if self.slo_classes is not None:
+            kw["slo_classes"] = dict(self.slo_classes)
         return SchedulerConfig(
             page_size=self.page_size, max_batch=self.max_batch,
             max_pages_per_seq=self.max_pages_per_seq,
@@ -84,7 +92,10 @@ class EngineConfig:
             prefix_caching=self.prefix_caching,
             mixed_batching=self.mixed_batching,
             max_prefills=self.max_prefills,
-            token_budget=self.token_budget, role=self.role)
+            token_budget=self.token_budget, role=self.role,
+            slo_aware=self.slo_aware,
+            slo_preempt_headroom=self.slo_preempt_headroom,
+            slo_preempt_cooldown_s=self.slo_preempt_cooldown_s, **kw)
 
 
 class InferenceEngine:

@@ -41,6 +41,10 @@ class Request:
     lora_adapter: Optional[str] = None
     user: str = "default"
     arrival_time: float = 0.0
+    # SLO priority class (scheduler.DEFAULT_SLO_CLASSES keys):
+    # interactive | standard | batch — picks the TTFT/ITL targets the
+    # SLO-aware scheduler and gateway hold for this request
+    priority_class: str = "standard"
     request_id: int = field(default_factory=lambda: next(_ids))
 
     # runtime state

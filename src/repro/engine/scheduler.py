@@ -38,6 +38,22 @@ lag for the simulator).  ``role="decode"`` engines admit handed-off
 requests whose KV they pull from the pool by block hash, so they only
 recompute the tail block before decoding.
 
+SLO-aware scheduling (paper §"SLO-driven GPU optimizer")
+---------------------------------------------------------
+Requests carry a ``priority_class`` (interactive | standard | batch);
+:data:`DEFAULT_SLO_CLASSES` maps each class to TTFT/ITL targets and a
+preemption rank.  With ``SchedulerConfig.slo_aware=True`` admission is
+deadline-aware — strict priority rank across classes, earliest TTFT
+slack first within a class — and an interactive prefill about to miss
+its TTFT target (slack below ``slo_preempt_headroom`` of the target)
+may preempt one strictly-lower-priority decode (rate-limited by
+``slo_preempt_cooldown_s``).  Per-class TTFT/ITL attainment is
+accounted in :class:`SchedulerCore` regardless of mode, so the gateway
+(``slo-aware`` routing policy) and the autoscaler (``slo_attainment``
+metric) can consume it even from FIFO engines.  Because all of this
+lives in the one shared Scheduler, the same SLO policy drives the real
+JAX engine, the simulator and the P/D role split with no duplication.
+
 All bookkeeping methods take an explicit ``now`` so the same code runs
 under wall clock (real engines) and forward-dated discrete-event time
 (the simulator).
@@ -45,7 +61,7 @@ under wall clock (real engines) and forward-dated discrete-event time
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
@@ -68,6 +84,31 @@ def window_throughput(events, now: float, horizon: float = 10.0) -> float:
     return sum(c for _, c in window) / span
 
 
+@dataclass(frozen=True)
+class ClassSLO:
+    """Per-priority-class service-level objective.
+
+    ``ttft_s``/``itl_s`` are the attainment targets (a request attains
+    its TTFT SLO when ``req.ttft <= ttft_s``; each inter-token gap is
+    checked against ``itl_s``).  ``rank`` orders preemption: lower rank
+    preempts strictly higher rank, never the reverse.
+    """
+    ttft_s: float
+    itl_s: float
+    rank: int
+
+
+DEFAULT_SLO_CLASSES: Dict[str, ClassSLO] = {
+    "interactive": ClassSLO(ttft_s=0.5, itl_s=0.05, rank=0),
+    "standard": ClassSLO(ttft_s=2.0, itl_s=0.2, rank=1),
+    "batch": ClassSLO(ttft_s=30.0, itl_s=1.0, rank=2),
+}
+
+
+def default_slo_classes() -> Dict[str, ClassSLO]:
+    return dict(DEFAULT_SLO_CLASSES)
+
+
 @dataclass
 class EngineMetrics:
     """Snapshot consumed by gateway routing + autoscaler."""
@@ -83,6 +124,11 @@ class EngineMetrics:
     prefix_hit_tokens: int = 0
     remote_hit_tokens: int = 0
     loaded_adapters: tuple = ()
+    # SLO attainment: recent-window TTFT attainment fraction (1.0 when
+    # nothing finished yet) + cumulative per-class rows of
+    # (class, ttft_attainment, itl_attainment, finished)
+    slo_attainment: float = 1.0
+    slo_by_class: tuple = ()
 
 
 @dataclass
@@ -102,6 +148,20 @@ class SchedulerConfig:
     honor_stop_token: bool = True
     # -- P/D disaggregation --
     role: str = "mixed"             # mixed | prefill | decode
+    # -- SLO-aware scheduling --
+    # False => FIFO admission (legacy).  True => deadline-aware
+    # admission: strict priority rank across classes, earliest TTFT
+    # slack first within a class, priority preemption of lower-rank
+    # decodes when a higher-rank prefill is about to miss TTFT.
+    slo_aware: bool = False
+    slo_classes: Dict[str, ClassSLO] = field(
+        default_factory=default_slo_classes)
+    # preempt when remaining slack < headroom * ttft target (0 still
+    # preempts once the deadline has actually passed)
+    slo_preempt_headroom: float = 0.25
+    # minimum spacing between preemptions: bounds the decode work a
+    # burst of urgent prefills can throw away
+    slo_preempt_cooldown_s: float = 1.0
 
     @property
     def step_token_budget(self) -> int:
@@ -136,8 +196,12 @@ class SchedulerCore:
     arrival queue, admission/finish accounting, stop predicate, EWMAs
     and the token-throughput window."""
 
-    def __init__(self, honor_stop_token: bool = True):
+    SLO_WINDOW_S = 60.0      # recent-window for the scalar attainment
+
+    def __init__(self, honor_stop_token: bool = True,
+                 slo_classes: Optional[Dict[str, ClassSLO]] = None):
         self.honor_stop_token = honor_stop_token
+        self.slo_classes = slo_classes or default_slo_classes()
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self._m = dict(admitted=0, finished=0, preemptions=0,
@@ -145,6 +209,10 @@ class SchedulerCore:
         self._lat_ewma = 0.0
         self._q_ewma = 0.0
         self._tok_events: List[tuple] = []
+        # per-class cumulative SLO accounting + recent TTFT-attainment
+        # events (for the autoscaler's windowed slo_attainment signal)
+        self._slo_stats: Dict[str, dict] = {}
+        self._slo_events: List[tuple] = []
 
     # ---------------------------------------------------------- queue
     def enqueue(self, req: Request, now: float) -> None:
@@ -173,6 +241,69 @@ class SchedulerCore:
         self._m["finished"] += 1
         self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
                           if self._lat_ewma else req.total_latency)
+        self._note_slo(req, now)
+
+    # ---------------------------------------------------------- SLO
+    def slo_class(self, req: Request) -> ClassSLO:
+        """The request's SLO targets; unknown classes fall back to
+        'standard' so a typo'd class cannot crash the scheduler."""
+        cls = self.slo_classes.get(req.priority_class)
+        if cls is None:
+            cls = self.slo_classes.get("standard",
+                                       DEFAULT_SLO_CLASSES["standard"])
+        return cls
+
+    def _note_slo(self, req: Request, now: float) -> None:
+        cls = self.slo_class(req)
+        rec = self._slo_stats.setdefault(
+            req.priority_class,
+            dict(finished=0, ttft_ok=0, itl_total=0, itl_ok=0))
+        ttft_ok = req.ttft <= cls.ttft_s
+        rec["finished"] += 1
+        rec["ttft_ok"] += int(ttft_ok)
+        gaps = req.itl
+        rec["itl_total"] += len(gaps)
+        rec["itl_ok"] += sum(1 for g in gaps if g <= cls.itl_s)
+        self._slo_events.append((now, req.priority_class,
+                                 1.0 if ttft_ok else 0.0))
+        cutoff = now - self.SLO_WINDOW_S
+        while self._slo_events and self._slo_events[0][0] < cutoff:
+            self._slo_events.pop(0)
+
+    def slo_attainment(self, now: float) -> float:
+        """TTFT attainment over the recent window; falls back to the
+        cumulative fraction after a drain, 1.0 before any finish."""
+        window = [ok for t, _c, ok in self._slo_events
+                  if t >= now - self.SLO_WINDOW_S]
+        if window:
+            return sum(window) / len(window)
+        fin = sum(r["finished"] for r in self._slo_stats.values())
+        if fin:
+            return (sum(r["ttft_ok"] for r in self._slo_stats.values())
+                    / fin)
+        return 1.0
+
+    def slo_class_stats(self, now: Optional[float] = None) -> tuple:
+        """(class, ttft_attainment, itl_attainment, finished) rows.
+        With ``now``, TTFT attainment is computed over the recent
+        window (what the slo-aware router should react to — an engine
+        must not be penalized forever for a warm-up burst of misses),
+        falling back to cumulative once the window is empty; without
+        ``now`` (and for ITL/finished) the figures are cumulative."""
+        rows = []
+        for name in sorted(self._slo_stats):
+            r = self._slo_stats[name]
+            ttft_att = r["ttft_ok"] / max(r["finished"], 1)
+            if now is not None:
+                window = [ok for t, c, ok in self._slo_events
+                          if c == name and t >= now - self.SLO_WINDOW_S]
+                if window:
+                    ttft_att = sum(window) / len(window)
+            rows.append((name, ttft_att,
+                         (r["itl_ok"] / r["itl_total"]
+                          if r["itl_total"] else 1.0),
+                         r["finished"]))
+        return tuple(rows)
 
     # ---------------------------------------------------------- accessors
     @property
@@ -221,7 +352,8 @@ class Scheduler(SchedulerCore):
                  kv_pool=None, engine_id: str = "engine-0",
                  install_page: Optional[Callable] = None,
                  publish_page: Optional[Callable] = None):
-        super().__init__(honor_stop_token=scfg.honor_stop_token)
+        super().__init__(honor_stop_token=scfg.honor_stop_token,
+                         slo_classes=scfg.slo_classes)
         if scfg.role not in self.ROLES:
             raise ValueError(f"unknown scheduler role {scfg.role!r}; "
                              f"expected one of {self.ROLES}")
@@ -237,6 +369,7 @@ class Scheduler(SchedulerCore):
         # submit, or a load-balancing shim over several)
         self.handoff: Optional[Callable[[Request], None]] = None
         self._pending_handoff = 0
+        self._last_preempt = -1e18      # SLO preemption cooldown clock
 
     # ---------------------------------------------------------- views
     @property
@@ -256,6 +389,19 @@ class Scheduler(SchedulerCore):
                           self.scfg.page_size)
         return hs[0] if hs else None
 
+    # ------------------------------------------------------- SLO ordering
+    def slack(self, req: Request, now: float) -> float:
+        """Seconds of TTFT headroom left (negative = deadline missed)."""
+        return self.slo_class(req).ttft_s - (now - req.arrival_time)
+
+    def _admission_key(self, now: float):
+        """Deadline-aware admission order: strict priority rank across
+        classes (livelock-free — a preempted batch request can never
+        leapfrog a waiting interactive one), earliest TTFT slack first
+        within a class, then arrival order."""
+        return lambda r: (self.slo_class(r).rank, self.slack(r, now),
+                          r.arrival_time, r.request_id)
+
     # ------------------------------------------------------- admission
     def try_admit(self, now: float) -> Optional[Request]:
         scfg = self.scfg
@@ -266,15 +412,16 @@ class Scheduler(SchedulerCore):
         if scfg.prefix_caching and self.prefills:
             inflight_hashes = {self._first_hash(p) for p in self.prefills}
             inflight_hashes.discard(None)
+        candidates = list(self.waiting)
+        if scfg.slo_aware:
+            candidates.sort(key=self._admission_key(now))
         req = None
-        idx = 0
-        while idx < len(self.waiting):
-            cand = self.waiting[idx]
+        for cand in candidates:
             total = cand.prompt_len + cand.sampling.max_new_tokens
             if (scfg.max_pages_per_seq
                     and self.pages_for(total) > scfg.max_pages_per_seq):
                 cand.state = RequestState.FAILED
-                self.waiting.pop(idx)
+                self.waiting.remove(cand)
                 continue
             if (inflight_hashes
                     and cand.prompt_len > scfg.page_size
@@ -288,7 +435,6 @@ class Scheduler(SchedulerCore):
                 # slot), and only when the wait can pay off: not when a
                 # registered prefix already matches, nor when the prompt
                 # is too short for match_prefix to ever reuse the block.
-                idx += 1
                 continue
             req = cand
             break
@@ -393,14 +539,10 @@ class Scheduler(SchedulerCore):
         scfg = self.scfg
         if not scfg.mixed_batching:
             return self._schedule_two_phase(now)
-        while (len(self.prefills) < scfg.max_prefills
-               and len(self.prefills) * scfg.chunk_size
-               + min(len(self.running), scfg.max_batch)
-               < scfg.step_token_budget):
-            req = self.try_admit(now)
-            if req is None:
-                break
-            self.prefills.append(req)
+        self._admit_prefills(now)
+        if scfg.slo_aware and self.waiting and self._slo_preempt(now):
+            self._admit_prefills(now)   # the freed slot admits the
+            # urgent request in the same iteration, not the next one
         if not self.prefills:
             if not self.running:
                 return ScheduleOutput(mode="idle")
@@ -434,10 +576,61 @@ class Scheduler(SchedulerCore):
         return ScheduleOutput(mode="mixed", decode=dec, prefills=works,
                               pad_len=s)
 
+    def _admit_prefills(self, now: float) -> None:
+        scfg = self.scfg
+        while (len(self.prefills) < scfg.max_prefills
+               and len(self.prefills) * scfg.chunk_size
+               + min(len(self.running), scfg.max_batch)
+               < scfg.step_token_budget):
+            req = self.try_admit(now)
+            if req is None:
+                break
+            self.prefills.append(req)
+
+    def _slo_preempt(self, now: float) -> bool:
+        """Priority-aware preemption: when the most urgent waiting
+        request could not be admitted and its TTFT slack has shrunk
+        below ``slo_preempt_headroom`` of its target, evict ONE
+        strictly-lower-priority decode (highest rank first, then the
+        one with the least generated work to throw away).  Rate-limited
+        by ``slo_preempt_cooldown_s``; preemption only ever crosses
+        class ranks downward, so it cannot livelock with the strict-
+        priority admission order."""
+        scfg = self.scfg
+        if (not self.waiting or not self.running
+                or now - self._last_preempt < scfg.slo_preempt_cooldown_s):
+            return False
+        if scfg.mixed_batching and len(self.prefills) >= scfg.max_prefills:
+            return False    # a freed decode slot cannot admit anyway
+        cand = min(self.waiting, key=self._admission_key(now))
+        need = self.pages_for(cand.prompt_len + (
+            0 if self.wants_handoff else cand.sampling.max_new_tokens))
+        if (len(self.running) + len(self.prefills) < scfg.max_batch
+                and self.alloc.num_free >= need):
+            return False    # not capacity-blocked (a slot is open and
+            # pages suffice even ignoring prefix hits, so the stall is
+            # e.g. cache-aware deferral) — evicting a decode won't help
+        ccls = self.slo_class(cand)
+        if self.slack(cand, now) > scfg.slo_preempt_headroom * ccls.ttft_s:
+            return False
+        victims = [r for r in self.running
+                   if self.slo_class(r).rank > ccls.rank]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: (self.slo_class(r).rank,
+                                             -len(r.output_tokens),
+                                             r.arrival_time))
+        self.preempt(victim, now)
+        self._last_preempt = now
+        return True
+
     def _schedule_two_phase(self, now: float) -> ScheduleOutput:
         scfg = self.scfg
         if not self.prefills:
             req = self.try_admit(now)
+            if (req is None and scfg.slo_aware and self.waiting
+                    and self._slo_preempt(now)):
+                req = self.try_admit(now)
             if req is not None:
                 self.prefills.append(req)
         if self.prefills:
@@ -555,6 +748,10 @@ class Scheduler(SchedulerCore):
         self.alloc.release(req.page_ids, now)
         req.page_ids = []
         req.output_tokens = []
+        # the discarded tokens' timestamps go with them — ITL is then
+        # measured over the re-run (plus the one real requeue stall
+        # from first_token_time, which stays: TTFT already happened)
+        req.token_times = []
         req.prefill_done_tokens = 0
         req.state = RequestState.QUEUED
         self.waiting.insert(0, req)
@@ -586,4 +783,6 @@ class Scheduler(SchedulerCore):
             preemptions=self._m["preemptions"],
             prefix_hit_tokens=self._m["prefix_hit_tokens"],
             remote_hit_tokens=self._m["remote_hit_tokens"],
-            loaded_adapters=loaded_adapters)
+            loaded_adapters=loaded_adapters,
+            slo_attainment=self.slo_attainment(now),
+            slo_by_class=self.slo_class_stats(now))

@@ -11,13 +11,13 @@ Same handle contract as InferenceEngine (submit/step/metrics/
 match_prefix_len), so the gateway and control plane treat both alike —
 and since the scheduler-core refactor the queue/admission/finish
 bookkeeping is the shared :class:`repro.engine.scheduler.SchedulerCore`
-(the same stop predicate, queue-time and latency EWMAs and throughput
-window the paged engines use), so ``admitted_requests`` and
-``avg_queue_time`` feed gateway least-latency routing with the same
-semantics as every other engine.  Prefix caching is not available
-here: an SSM has no token-addressable KV — the pool-equivalent is
-recurrent-state snapshotting at fixed strides (see DESIGN.md §4, noted
-as partial support).
+(the same stop predicate, queue-time and latency EWMAs, throughput
+window and per-class SLO attainment accounting the paged engines use),
+so ``admitted_requests``, ``avg_queue_time`` and ``slo_attainment``
+feed gateway routing with the same semantics as every other engine.
+Prefix caching is not available here: an SSM has no token-addressable
+KV — the pool-equivalent is recurrent-state snapshotting at fixed
+strides (see docs/ARCHITECTURE.md "SlotEngine note", partial support).
 """
 from __future__ import annotations
 
@@ -200,4 +200,6 @@ class SlotEngine:
             avg_latency=self.core.avg_latency,
             avg_queue_time=self.core.avg_queue_time,
             admitted_requests=self.core.admitted_count,
-            finished_requests=self.core.finished_count)
+            finished_requests=self.core.finished_count,
+            slo_attainment=self.core.slo_attainment(now),
+            slo_by_class=self.core.slo_class_stats(now))

@@ -14,6 +14,14 @@ pulls the pages at admission and only recomputes the tail block before
 decoding — the DistServe-style handoff the cluster simulator's
 ``benchmarks/bench_pd_disagg.py`` measures at scale, here executed by
 the actual jitted engines.
+
+SLO-aware serving: ``--slo`` turns on deadline-aware scheduling in
+every engine (priority classes with TTFT/ITL targets, earliest-slack
+admission, bounded priority preemption); ``--interactive-frac`` sets
+the interactive/batch request mix and ``--policy slo-aware`` routes by
+per-class attainment instead of raw latency.  Per-class attainment is
+printed per engine (``benchmarks/bench_slo.py`` measures the same
+policy on the simulator).
 """
 from __future__ import annotations
 
@@ -97,6 +105,13 @@ def main() -> None:
     ap.add_argument("--policy", default="prefix-cache-aware")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO-aware scheduling (priority classes, "
+                         "earliest-slack admission, preemption); pair "
+                         "with --policy slo-aware for SLO routing")
+    ap.add_argument("--interactive-frac", type=float, default=0.5,
+                    help="fraction of requests tagged priority class "
+                         "'interactive' (the rest are 'batch')")
     args = ap.parse_args()
 
     if args.engines is not None and args.roles != "mixed":
@@ -107,7 +122,8 @@ def main() -> None:
     clock = lambda: time.monotonic() - t0      # noqa: E731
     roles = parse_roles(args.roles, args.engines or 2)
     gw = Gateway(policy=args.policy, clock=clock)
-    engines, frontends, pool = build_engines(cfg, roles, clock)
+    engines, frontends, pool = build_engines(
+        cfg, roles, clock, ecfg_kw=dict(slo_aware=args.slo))
     for eid, eng in frontends.items():
         gw.register_engine(eid, eng)
 
@@ -117,10 +133,13 @@ def main() -> None:
     for i in range(args.requests):
         prompt = shared + rng.integers(
             0, cfg.vocab_size, max(args.prompt_len - 24, 4)).tolist()
+        pclass = ("interactive" if rng.random() < args.interactive_frac
+                  else "batch")
         r = Request(prompt_tokens=prompt,
                     sampling=SamplingParams(max_new_tokens=args.max_new),
-                    arrival_time=clock())
-        eid = gw.route(prompt, est_output_tokens=args.max_new)
+                    arrival_time=clock(), priority_class=pclass)
+        eid = gw.route(prompt, est_output_tokens=args.max_new,
+                       priority_class=pclass)
         engines[eid].submit(r)
         reqs.append((eid, r))
         # interleave a bit of serving with arrivals
@@ -143,6 +162,11 @@ def main() -> None:
               f"prefix_hit_tokens={m.prefix_hit_tokens} "
               f"remote_hit_tokens={m.remote_hit_tokens} "
               f"kv_util={m.kv_utilization:.2f}")
+        if m.slo_by_class:
+            rows = " ".join(
+                f"{c}: ttft={ta:.2f} itl={ia:.2f} n={n}"
+                for c, ta, ia, n in m.slo_by_class)
+            print(f"    slo_attainment={m.slo_attainment:.2f} [{rows}]")
     if pool is not None:
         st = pool.stats
         print(f"  pool: puts={st.puts} hits={st.hits_local + st.hits_remote}"

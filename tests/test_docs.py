@@ -1,0 +1,31 @@
+"""Docs integrity: README/ARCHITECTURE exist and every relative link
+in the markdown docs resolves (the CI docs-check step runs the same
+checker standalone)."""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_docs_links import broken_links  # noqa: E402
+
+
+def _doc_files():
+    return [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+def test_required_docs_exist():
+    assert (REPO / "README.md").exists()
+    assert (REPO / "docs" / "ARCHITECTURE.md").exists()
+
+
+def test_no_broken_relative_links():
+    bad = [b for p in _doc_files() for b in broken_links(p)]
+    assert bad == [], f"broken relative links: {bad}"
+
+
+def test_roadmap_references_architecture_doc():
+    """ROADMAP must not reference the never-written DESIGN.md."""
+    text = (REPO / "ROADMAP.md").read_text()
+    assert "DESIGN.md" not in text
+    assert "ARCHITECTURE.md" in text

@@ -1,0 +1,314 @@
+"""SLO-aware scheduling (ISSUE 3 tentpole): deadline-aware admission
+ordering, priority preemption, per-class TTFT/ITL attainment under the
+sim clock, sim/real parity of the SLO admission order, greedy-output
+equivalence with SLO mode on vs off, SLO routing and the autoscaler's
+inverted slo_attainment metric."""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.autoscaler import MetricStore, make_autoscaler
+from repro.core.gateway.router import make_policy
+from repro.core.sim.events import EventLoop
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.engine import (EngineConfig, InferenceEngine, Request,
+                          RequestState, SamplingParams, Scheduler,
+                          SchedulerConfig)
+from repro.engine.engine import EngineMetrics
+from repro.engine.page_table import PageAllocator
+from repro.engine.scheduler import DEFAULT_SLO_CLASSES, ClassSLO
+
+ENGINE_KW = dict(page_size=8, num_pages=64, max_batch=4,
+                 max_pages_per_seq=16, chunk_size=16)
+
+
+def _req(cls, prompt_len=8, max_new=4, arrival=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return Request(prompt_tokens=rng.integers(0, 100, prompt_len).tolist(),
+                   sampling=SamplingParams(max_new_tokens=max_new),
+                   arrival_time=arrival, priority_class=cls)
+
+
+# ---------------------------------------------------- admission order
+def test_slo_admission_order_priority_then_slack():
+    """slo_aware admission is strict-priority across classes and
+    earliest-slack (FIFO) within a class, regardless of submit order."""
+    scfg = SchedulerConfig(page_size=4, max_batch=4, chunk_size=64,
+                           max_prefills=4, slo_aware=True,
+                           honor_stop_token=False)
+    sched = Scheduler(scfg, PageAllocator(256, 4))
+    b = _req("batch", arrival=0.0, seed=1)
+    s = _req("standard", arrival=0.0, seed=2)
+    i = _req("interactive", arrival=0.0, seed=3)
+    for r in (b, s, i):            # FIFO would admit b first
+        sched.enqueue(r, 0.0)
+    sched.schedule(0.1)
+    assert sched.prefills == [i, s, b]
+
+
+def test_fifo_admission_unchanged_when_slo_off():
+    scfg = SchedulerConfig(page_size=4, max_batch=4, chunk_size=64,
+                           max_prefills=4, slo_aware=False,
+                           honor_stop_token=False)
+    sched = Scheduler(scfg, PageAllocator(256, 4))
+    b, i = _req("batch", seed=1), _req("interactive", seed=3)
+    sched.enqueue(b, 0.0)
+    sched.enqueue(i, 0.0)
+    sched.schedule(0.1)
+    assert sched.prefills == [b, i]
+
+
+# ------------------------------------------------------- preemption
+def _drive_to_running(sched, req, now):
+    """Fake-runner bookkeeping: complete the prefill in one chunk."""
+    out = sched.schedule(now)
+    assert any(w.req is req for w in out.prefills)
+    work = [w for w in out.prefills if w.req is req][0]
+    assert sched.note_prefill_progress(req, work.chunk_len)
+    sched.finish_prefill(req, 1, now)
+
+
+def test_priority_preemption_ordering():
+    """An interactive prefill past its slack headroom preempts the
+    lowest-priority decode with the least generated work; higher-rank
+    requests never preempt equals or betters."""
+    scfg = SchedulerConfig(page_size=4, max_batch=2, chunk_size=16,
+                           mixed_batching=False, slo_aware=True,
+                           honor_stop_token=False,
+                           slo_preempt_cooldown_s=0.0)
+    sched = Scheduler(scfg, PageAllocator(256, 4))
+    b1 = _req("batch", max_new=50, arrival=0.0, seed=1)
+    b2 = _req("batch", max_new=50, arrival=0.0, seed=2)
+    sched.enqueue(b1, 0.0)
+    sched.enqueue(b2, 0.0)
+    _drive_to_running(sched, b1, 0.01)
+    _drive_to_running(sched, b2, 0.02)
+    # b1 has MORE decode progress than b2
+    sched.on_decode_batch([b1, b2], [5, 5], 0.1)
+    sched.on_decode_batch([b1], [5], 0.2)
+    assert len(b1.output_tokens) > len(b2.output_tokens)
+    # interactive request whose TTFT deadline (0.5s) has passed by the
+    # time the next iteration is scheduled
+    urgent = _req("interactive", arrival=0.0, seed=3)
+    sched.enqueue(urgent, 1.0)     # arrival stamped 1.0
+    out = sched.schedule(2.0)      # slack = 0.5 - 1.0 < headroom
+    # b2 (least work to discard) was evicted, b1 survives, urgent admitted
+    assert b2.state == RequestState.QUEUED and b2 in sched.waiting
+    assert b1 in sched.running
+    assert sched.prefills == [urgent]
+    assert sched.metrics(2.0).preemptions == 1
+    assert out.prefills[0].req is urgent
+
+
+def test_no_preemption_within_same_class():
+    """A batch request can never preempt another batch decode."""
+    scfg = SchedulerConfig(page_size=4, max_batch=1, chunk_size=16,
+                           mixed_batching=False, slo_aware=True,
+                           honor_stop_token=False,
+                           slo_preempt_cooldown_s=0.0)
+    sched = Scheduler(scfg, PageAllocator(256, 4))
+    b1 = _req("batch", max_new=50, arrival=0.0, seed=1)
+    sched.enqueue(b1, 0.0)
+    _drive_to_running(sched, b1, 0.01)
+    late = _req("batch", arrival=0.0, seed=2)
+    sched.enqueue(late, 100.0)
+    sched.schedule(200.0)          # far past even the batch deadline
+    assert b1 in sched.running
+    assert sched.metrics(200.0).preemptions == 0
+
+
+# ------------------------------------------ per-class attainment (sim)
+def test_per_class_ttft_attainment_under_sim_clock():
+    """SchedulerCore's per-class attainment accounting must match the
+    attainment recomputed from the raw per-request timestamps."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    loop = EventLoop()
+    sim = SimEngine(cfg, loop, SimEngineConfig(
+        device_type="a10", max_batch=4, slo_aware=True))
+    rng = np.random.default_rng(40)
+    reqs = []
+    for k in range(12):
+        cls = "interactive" if k % 2 == 0 else "batch"
+        r = Request(
+            prompt_tokens=rng.integers(0, cfg.vocab_size, 600).tolist(),
+            sampling=SamplingParams(max_new_tokens=16),
+            arrival_time=0.0, priority_class=cls)
+        reqs.append(r)
+        sim.submit(r)
+    loop.run(until=1e6, stop_when=lambda: not sim.has_work)
+    m = sim.metrics()
+    by_class = {c: (ta, ia, n) for c, ta, ia, n in m.slo_by_class}
+    for cls in ("interactive", "batch"):
+        sub = [r for r in reqs if r.priority_class == cls]
+        tgt = DEFAULT_SLO_CLASSES[cls]
+        expect_ttft = np.mean([r.ttft <= tgt.ttft_s for r in sub])
+        ta, ia, n = by_class[cls]
+        assert n == len(sub)
+        assert ta == pytest.approx(expect_ttft)
+        assert 0.0 <= ia <= 1.0
+    assert 0.0 <= m.slo_attainment <= 1.0
+
+
+# ------------------------------------------------- sim/real parity
+def test_sim_real_slo_admission_parity():
+    """The SLO admission order is produced by the one shared Scheduler:
+    identical mixed-class workloads admit in the same order on the real
+    JAX engine and the simulator — and that order is NOT FIFO."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    rng = np.random.default_rng(41)
+    classes = ["batch", "interactive", "standard",
+               "batch", "interactive", "standard"]
+    prompts = [rng.integers(0, cfg.vocab_size, 12 + 4 * i).tolist()
+               for i in range(len(classes))]
+
+    def mk():
+        return [Request(prompt_tokens=list(p),
+                        sampling=SamplingParams(max_new_tokens=2),
+                        priority_class=c)
+                for p, c in zip(prompts, classes)]
+
+    eng = InferenceEngine(
+        cfg, EngineConfig(mixed_batching=False, slo_aware=True,
+                          max_batch=2, **{k: v for k, v in ENGINE_KW.items()
+                                          if k != "max_batch"}), seed=0)
+    real = mk()
+    for r in real:
+        eng.submit(r)
+    eng.run_until_idle()
+
+    loop = EventLoop()
+    sim = SimEngine(cfg, loop, SimEngineConfig(
+        device_type="a10", max_batch=2, slo_aware=True))
+    simr = mk()
+    for r in simr:
+        r.arrival_time = 0.0
+        sim.submit(r)
+    loop.run(until=1e6, stop_when=lambda: not sim.has_work)
+
+    def admit_order(reqs):
+        return sorted(range(len(reqs)),
+                      key=lambda i: reqs[i].schedule_time)
+
+    assert all(r.state == RequestState.FINISHED for r in real + simr)
+    assert admit_order(real) == admit_order(simr)
+    # interactive (1, 4) first, then standard (2, 5), then batch (0, 3)
+    assert admit_order(real) == [1, 4, 2, 5, 0, 3]
+
+
+# ------------------------------------------------- greedy equivalence
+def test_greedy_outputs_identical_slo_on_vs_off():
+    """SLO mode reorders admission; it must not change the data plane:
+    every request's greedy tokens are identical with SLO on and off."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size, 16 + 8 * i).tolist()
+               for i in range(3)]
+    classes = ["batch", "interactive", "standard"]
+    outs = []
+    for slo in (False, True):
+        eng = InferenceEngine(cfg, EngineConfig(slo_aware=slo,
+                                                **ENGINE_KW), seed=0)
+        reqs = [Request(prompt_tokens=list(p),
+                        sampling=SamplingParams(max_new_tokens=5),
+                        priority_class=c)
+                for p, c in zip(prompts, classes)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_idle()
+        outs.append([r.output_tokens for r in reqs])
+    assert outs[0] == outs[1]
+
+
+# ------------------------------------------------------- gateway
+class _Stub:
+    def __init__(self, m):
+        self.m = m
+
+    def metrics(self):
+        return self.m
+
+    def match_prefix_len(self, tokens):
+        return 0
+
+
+def test_slo_aware_routing_by_class_attainment():
+    """slo-aware routing prefers the engine holding THIS class's SLO,
+    not the one with the best overall latency."""
+    good = _Stub(EngineMetrics(
+        avg_queue_time=0.05,
+        slo_by_class=(("interactive", 0.95, 0.9, 20),)))
+    bad = _Stub(EngineMetrics(
+        avg_queue_time=0.05,
+        slo_by_class=(("interactive", 0.20, 0.9, 20),)))
+    pol = make_policy("slo-aware")
+    engines = {"a": bad, "b": good}
+    assert pol.select(engines, [1, 2], priority_class="interactive") == "b"
+    # queue pressure is weighed against the class TTFT budget: a queue
+    # that eats an interactive budget is fine for batch
+    slow = _Stub(EngineMetrics(avg_queue_time=0.45, slo_attainment=1.0))
+    empty = _Stub(EngineMetrics(avg_queue_time=0.0, slo_attainment=0.9))
+    engines = {"slow": slow, "empty": empty}
+    assert pol.select(engines, [1], priority_class="interactive") == "empty"
+    assert pol.select(engines, [1], priority_class="batch") == "slow"
+
+
+def test_all_policies_accept_priority_class():
+    from repro.core.gateway.router import POLICIES
+    engines = {"a": _Stub(EngineMetrics()), "b": _Stub(EngineMetrics())}
+    for name in POLICIES:
+        pol = make_policy(name)
+        assert pol.select(engines, [1, 2, 3],
+                          priority_class="interactive") in engines
+
+
+# ------------------------------------------------------- autoscaler
+def _attainment_store(value, n=70):
+    s = MetricStore()
+    for t in range(n):
+        s.record(float(t), "slo_attainment", value)
+    return s
+
+
+@pytest.mark.parametrize("name", ["hpa", "kpa", "apa"])
+def test_autoscalers_scale_up_on_slo_misses(name):
+    """slo_attainment is inverted: a drop BELOW target adds replicas."""
+    asc = make_autoscaler(name, metric="slo_attainment", target=0.95,
+                          max_replicas=32)
+    d = asc.desired(69.5, _attainment_store(0.4), current=2)
+    assert d.desired > 2
+
+
+def test_autoscaler_holds_when_slo_met():
+    for name in ("hpa", "kpa", "apa"):
+        asc = make_autoscaler(name, metric="slo_attainment", target=0.95)
+        d = asc.desired(69.5, _attainment_store(0.99), current=4)
+        assert d.desired <= 4
+
+
+def test_autoscaler_scales_back_down_after_slo_recovery():
+    """Perfect attainment must shed the replicas a miss burst added
+    (miss-ratio pressure, not the ratcheting target/measured form)."""
+    for name in ("kpa", "apa"):
+        asc = make_autoscaler(name, metric="slo_attainment", target=0.95,
+                              min_replicas=1, max_replicas=32)
+        d = asc.desired(69.5, _attainment_store(1.0), current=16)
+        assert d.desired < 16, name
+
+
+def test_preemption_fires_when_page_starved():
+    """Capacity-blocked includes page starvation with open slots: an
+    urgent interactive prefill evicts a batch decode for its pages."""
+    scfg = SchedulerConfig(page_size=4, max_batch=8, chunk_size=64,
+                           mixed_batching=False, slo_aware=True,
+                           honor_stop_token=False,
+                           slo_preempt_cooldown_s=0.0)
+    sched = Scheduler(scfg, PageAllocator(16, 4))    # 64 tokens of KV
+    b1 = _req("batch", prompt_len=24, max_new=30, arrival=0.0, seed=1)
+    sched.enqueue(b1, 0.0)
+    _drive_to_running(sched, b1, 0.01)       # holds 14 of 16 pages
+    urgent = _req("interactive", prompt_len=24, max_new=8, seed=3)
+    sched.enqueue(urgent, 1.0)
+    sched.schedule(2.0)     # slot free, pages not: must preempt b1
+    assert b1.state == RequestState.QUEUED
+    assert sched.prefills == [urgent]
+    assert sched.metrics(2.0).preemptions == 1

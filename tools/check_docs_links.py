@@ -1,0 +1,51 @@
+"""Docs link checker (CI docs step + tests/test_docs.py).
+
+Fails when a markdown file contains a relative link whose target does
+not exist on disk.  External links (http/https/mailto) and pure
+in-page anchors are skipped — this is a repo-integrity check, not a
+web crawler.
+
+Usage: ``python tools/check_docs_links.py README.md docs/*.md``
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and [text](target#anchor); skips images' alt text
+# distinction (same syntax) and reference-style links (unused here)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+EXTERNAL = re.compile(r"^(?:[a-z][a-z0-9+.-]*:)//|^mailto:")
+
+
+def broken_links(md_path: Path) -> list:
+    """(source, target) pairs whose relative target doesn't exist."""
+    bad = []
+    for m in LINK_RE.finditer(md_path.read_text()):
+        target = m.group(1)
+        if EXTERNAL.match(target):
+            continue
+        resolved = (md_path.parent / target).resolve()
+        if not resolved.exists():
+            bad.append((str(md_path), target))
+    return bad
+
+
+def main(paths) -> int:
+    files = [Path(p) for p in paths]
+    missing = [p for p in files if not p.exists()]
+    if missing:
+        print(f"docs check: missing file(s): {[str(p) for p in missing]}")
+        return 1
+    bad = [b for p in files for b in broken_links(p)]
+    for src, target in bad:
+        print(f"docs check: broken link in {src}: ({target})")
+    if bad:
+        return 1
+    print(f"docs check: {len(files)} file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["README.md"]))
