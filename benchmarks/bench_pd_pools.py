@@ -1,0 +1,125 @@
+"""Static P/D splits vs attainment-driven auto-rebalancing role pools.
+
+The role-aware control plane claim (ISSUE 4): a phase-shifting
+workload — a prefill-heavy half (high-rate long prompts, short
+outputs) followed by a decode-heavy half (long generations over short
+prompts) — mis-sizes EVERY static prefill:decode split for one of its
+phases: too few prefill members and prompts queue past the interactive
+TTFT target; too few decode members and handed-off requests block on
+decode slots while over-packed batches breach the ITL target.  The
+RolePoolManager's attainment-driven rebalancer (one inverted-metric
+autoscaler per pool: fleet TTFT attainment sizes the prefill pool,
+fleet ITL attainment the decode pool, waiting-queue location
+disambiguating TTFT deficits) migrates members live instead — same
+engine count, better interactive SLO attainment across the shift.
+
+Setup: 4x A10 SimEngines over the distributed pool, identical
+``phase_shift`` workload for every mode; static 3P1D / 2P2D / 1P3D
+vs ``--roles auto`` (even start + rebalancer).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.gateway.gateway import RateLimit
+from repro.core.orchestration.pools import RebalanceConfig
+from repro.core.sim.cluster_sim import ClusterConfig, ServingCluster
+from repro.core.sim.sim_engine import SimEngineConfig
+from repro.core.sim.workloads import phase_shift
+from repro.engine.scheduler import DEFAULT_SLO_CLASSES
+
+
+def interactive_attainment(requests) -> dict:
+    """Per-request interactive SLO attainment: TTFT within target, ITL
+    as the per-request fraction of inter-token gaps within target, and
+    ``slo`` = fraction of requests meeting TTFT with at least 90% of
+    their gaps within ITL.  A request still unserved at the drain
+    deadline counts as a full miss — a mode must not score better by
+    starving its worst-served requests out of the denominator."""
+    cls = DEFAULT_SLO_CLASSES["interactive"]
+    mine = [r for r in requests if r.priority_class == "interactive"]
+    if not mine:
+        return dict(ttft=1.0, itl=1.0, slo=1.0, finished=0)
+    ttft_ok, itl_frac, good = [], [], []
+    finished = 0
+    for r in mine:
+        if r.finish_time <= 0:
+            ttft_ok.append(False)
+            itl_frac.append(0.0)
+            good.append(False)
+            continue
+        finished += 1
+        t_ok = r.ttft <= cls.ttft_s
+        gaps = r.itl
+        frac = (sum(g <= cls.itl_s for g in gaps) / len(gaps)
+                if gaps else 1.0)
+        ttft_ok.append(t_ok)
+        itl_frac.append(frac)
+        good.append(t_ok and frac >= 0.9)
+    n = len(mine)
+    return dict(ttft=sum(ttft_ok) / n, itl=sum(itl_frac) / n,
+                slo=sum(good) / n, finished=finished)
+
+
+def _run(roles: str, rebalance, quick: bool = False) -> dict:
+    cfg = get_config("deepseek-coder-7b")
+    dur = 240.0 if quick else 600.0
+    ccfg = ClusterConfig(
+        routing_policy="least-request", num_engines=4,
+        engine=SimEngineConfig(device_type="a10", max_batch=32,
+                               chunk_size=512, mixed_batching=True,
+                               max_prefills=2),
+        roles=roles, rebalance=rebalance, kv_pool_bw=100e9,
+        # the experiment measures pool sizing, not admission control
+        rate_limit=RateLimit(rpm=1e8, tpm=1e12))
+    cluster = ServingCluster(cfg, ccfg)
+    wl = phase_shift(duration_s=dur, seed=5)
+    s = cluster.run(wl, drain_s=300.0)
+    reqs = [tr.request for tr in wl]
+    half = dur / 2
+    pa = interactive_attainment(
+        [tr.request for tr in wl if tr.arrival < half])
+    pb = interactive_attainment(
+        [tr.request for tr in wl if tr.arrival >= half])
+    att = interactive_attainment(reqs)
+    # the headline: mean of per-phase attainment — robustness across
+    # the regime shift, not swamped by the higher-rate phase's count
+    att["slo_balanced"] = (pa["slo"] + pb["slo"]) / 2
+    att["slo_prefill_phase"] = pa["slo"]
+    att["slo_decode_phase"] = pb["slo"]
+    att["total_tput_tok_s"] = s.get("total_tput_tok_s", 0.0)
+    att["migrations"] = s.get("migrations", 0)
+    att["pool_counts"] = s.get("pool_counts", {})
+    att["submitted"] = len(wl)
+    return att
+
+
+def main(quick: bool = False):
+    reb = RebalanceConfig(period_s=5.0, cooldown_s=60.0, warmup_s=30.0,
+                          signal_class="interactive")
+    modes = [("static-3P1D", "3P1D", None), ("static-2P2D", "2P2D", None),
+             ("static-1P3D", "1P3D", None), ("auto", "auto", reb)]
+    cols = ("slo_balanced", "slo_prefill_phase", "slo_decode_phase",
+            "ttft", "itl", "total_tput_tok_s", "finished", "migrations")
+    print("mode," + ",".join(cols) + ",final_pools")
+    rows = []
+    for name, roles, rb in modes:
+        r = _run(roles, rb, quick)
+        rows.append((name, r))
+        print(name + "," + ",".join(
+            f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+            for c in cols) + f",{r['pool_counts']}")
+    auto = rows[-1][1]
+    best_static = max(rows[:-1], key=lambda x: x[1]["slo_balanced"])
+    imp = 100 * (auto["slo_balanced"]
+                 / max(best_static[1]["slo_balanced"], 1e-9) - 1)
+    print(f"derived,auto_vs_best_static({best_static[0]}),"
+          f"slo_attainment_improvement_pct={imp:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced duration (CI smoke)")
+    main(quick=ap.parse_args().quick)

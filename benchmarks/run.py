@@ -16,8 +16,8 @@ import traceback
 
 from benchmarks import (bench_autoscaling, bench_coldstart, bench_hetero,
                         bench_kernels, bench_kvcache, bench_lora,
-                        bench_pd_disagg, bench_routing, bench_slo,
-                        roofline)
+                        bench_pd_disagg, bench_pd_pools, bench_routing,
+                        bench_slo, roofline)
 
 SUITES = [
     ("table1_distributed_kvcache", bench_kvcache.main),
@@ -27,6 +27,7 @@ SUITES = [
     ("coldstart_streaming_loader", bench_coldstart.main),
     ("high_density_lora", bench_lora.main),
     ("pd_disaggregation_via_pool", bench_pd_disagg.main),
+    ("pd_role_pools_rebalancing", bench_pd_pools.main),
     ("slo_aware_scheduling", bench_slo.main),
     ("pallas_kernels", bench_kernels.main),
     ("roofline_from_dryrun", lambda quick=False: roofline.main("", quick)),

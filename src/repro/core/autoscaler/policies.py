@@ -39,8 +39,13 @@ from typing import Dict, Optional
 from repro.core.autoscaler.metrics import MetricStore
 
 # metrics where HIGHER is better (pressure = target / measured):
-# scaling must react to the value falling below target, not above it
-INVERTED_METRICS = frozenset({"slo_attainment"})
+# scaling must react to the value falling below target, not above it.
+# The pool_* keys are the per-role signals the RolePoolManager
+# rebalancer records (fleet TTFT attainment sizes the prefill pool,
+# fleet ITL attainment the decode pool).
+INVERTED_METRICS = frozenset({"slo_attainment", "slo_itl_attainment",
+                              "pool_ttft_attainment",
+                              "pool_itl_attainment"})
 
 
 @dataclass

@@ -5,6 +5,16 @@ based rate limiting (TPM/RPM per user — the thing the paper notes
 Knative-style circuit breakers cannot express), then the configured
 routing policy picks a serving engine.  The gateway is engine-agnostic:
 targets are handles registered by the orchestration layer.
+
+Role-pool awareness: engines may be registered with a ``pool`` tag
+(``prefill`` / ``decode`` / ``mixed`` / ``draining``, maintained by
+``repro.core.orchestration.pools.RolePoolManager`` as it rebalances).
+NEW requests only route to frontend pools (prefill/mixed) — decode
+members receive work exclusively through the prefill handoff path, and
+a draining member receives nothing at all.  ``deregister_engine`` and
+``set_engine_pool`` also purge the engine from per-policy routing
+state (attainment EWMAs, prefix-affinity maps) so a drained or
+migrated pod can never be picked from stale state.
 """
 from __future__ import annotations
 
@@ -13,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gateway.router import RoutingPolicy, make_policy
+from repro.engine.scheduler import FRONTEND_ROLES
 
 
 @dataclass
@@ -46,6 +57,8 @@ class GatewayStats:
 
 
 class Gateway:
+    FRONTEND_POOLS = FRONTEND_ROLES    # shared role taxonomy
+
     def __init__(self, policy: str = "least-request",
                  default_limit: RateLimit = None,
                  clock: Callable[[], float] = None, **policy_kw):
@@ -53,6 +66,7 @@ class Gateway:
         self.default_limit = default_limit or RateLimit()
         self.clock = clock or (lambda: 0.0)
         self.engines: Dict[str, object] = {}
+        self.engine_pool: Dict[str, str] = {}     # engine_id -> pool tag
         self.user_limits: Dict[str, RateLimit] = {}
         self._rpm: Dict[str, TokenBucket] = {}
         self._tpm: Dict[str, TokenBucket] = {}
@@ -61,11 +75,37 @@ class Gateway:
         self.request_log: collections.deque = collections.deque(maxlen=4096)
 
     # -------------------------------------------------------------- admin
-    def register_engine(self, engine_id: str, handle) -> None:
+    def register_engine(self, engine_id: str, handle,
+                        pool: Optional[str] = None) -> None:
+        """Register a target.  ``pool`` tags the serving role; untagged
+        engines route like 'mixed' (the pre-pool contract)."""
         self.engines[engine_id] = handle
+        if pool is not None:
+            self.engine_pool[engine_id] = pool
 
     def deregister_engine(self, engine_id: str) -> None:
+        """Scale-down/remediation: the engine must become unroutable
+        IMMEDIATELY, including from any per-policy state (attainment
+        EWMAs, prefix-affinity maps) that could still name it."""
         self.engines.pop(engine_id, None)
+        self.engine_pool.pop(engine_id, None)
+        self.policy.forget(engine_id)
+
+    def set_engine_pool(self, engine_id: str, pool: str) -> None:
+        """Role migration: retag without a deregister/register cycle.
+        Policy state is purged — affinity earned as a prefill member
+        must not leak routing onto the same pod as a decode member."""
+        self.engine_pool[engine_id] = pool
+        self.policy.forget(engine_id)
+
+    def routable_engines(self) -> Dict[str, object]:
+        """NEW requests go to frontend pools only (prefill/mixed);
+        untagged engines (no pool manager) keep the legacy behavior."""
+        if not self.engine_pool:
+            return self.engines
+        return {eid: h for eid, h in self.engines.items()
+                if self.engine_pool.get(eid, "mixed")
+                in self.FRONTEND_POOLS}
 
     def set_user_limit(self, user: str, limit: RateLimit) -> None:
         self.user_limits[user] = limit
@@ -91,7 +131,8 @@ class Gateway:
         policy routes by its per-class attainment/slack; other
         policies ignore it."""
         now = self.clock()
-        if not self.engines:
+        targets = self.routable_engines()
+        if not targets:
             return None
         rpm, tpm = self._buckets(user)
         if not rpm.allow(1.0, now):
@@ -100,7 +141,7 @@ class Gateway:
         if not tpm.allow(len(tokens) + est_output_tokens, now):
             self.stats.rejected_tpm += 1
             return None
-        eid = self.policy.select(self.engines, tokens, lora_adapter,
+        eid = self.policy.select(targets, tokens, lora_adapter,
                                  priority_class=priority_class)
         self.stats.routed += 1
         self.stats.per_engine[eid] = self.stats.per_engine.get(eid, 0) + 1

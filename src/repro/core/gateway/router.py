@@ -42,6 +42,12 @@ class RoutingPolicy:
                priority_class: str = "standard") -> str:
         raise NotImplementedError
 
+    def forget(self, engine_id: str) -> None:
+        """Purge any per-engine policy state.  The gateway calls this
+        on deregistration AND on role migration so a drained/retagged
+        pod can never be picked from stale EWMAs or affinity maps.
+        Stateless policies inherit the no-op."""
+
 
 class RandomPolicy(RoutingPolicy):
     name = "random"
@@ -117,15 +123,30 @@ class PrefixLoadPolicy(RoutingPolicy):
 
     Captures the failure mode of pure prefix affinity (hot prefix
     hot-spots one engine) by trading coverage against queue depth.
+    Keeps a bounded prefix-affinity map (leading block -> last engine
+    chosen) as a deterministic TIE-BREAK: when scores are otherwise
+    equal (fresh engines, prefix not yet registered anywhere) a
+    repeated prefix sticks to the engine already picked for it instead
+    of drifting to the lowest id — the epsilon bonus is far below one
+    unit of load or coverage, so it can never override either.
+    ``forget`` purges an engine from the map on scale-down/migration.
     """
     name = "prefix-load"
 
-    def __init__(self, load_weight: float = 0.02):
+    AFFINITY_BLOCK = 16          # leading tokens keying the affinity map
+    MAX_AFFINITY = 4096
+
+    def __init__(self, load_weight: float = 0.02,
+                 affinity_bonus: float = 1e-6):
         self.load_weight = load_weight
+        self.affinity_bonus = affinity_bonus
+        self._affinity: Dict[tuple, str] = {}
 
     def select(self, engines, tokens, lora_adapter=None,
                priority_class="standard"):
         n = max(len(tokens), 1)
+        key = tuple(tokens[:self.AFFINITY_BLOCK])
+        hint = self._affinity.get(key)
         best, best_score = None, -1e18
         for eid in sorted(engines):
             e = engines[eid]
@@ -133,9 +154,19 @@ class PrefixLoadPolicy(RoutingPolicy):
             cov = e.match_prefix_len(tokens) / n
             load = m.num_running + m.num_waiting
             score = cov - self.load_weight * load
+            if eid == hint:
+                score += self.affinity_bonus
             if score > best_score:
                 best, best_score = eid, score
+        if (key not in self._affinity
+                and len(self._affinity) >= self.MAX_AFFINITY):
+            self._affinity.pop(next(iter(self._affinity)))
+        self._affinity[key] = best
         return best
+
+    def forget(self, engine_id: str) -> None:
+        self._affinity = {k: v for k, v in self._affinity.items()
+                          if v != engine_id}
 
 
 class SLOAwarePolicy(RoutingPolicy):
@@ -154,9 +185,15 @@ class SLOAwarePolicy(RoutingPolicy):
     """
     name = "slo-aware"
 
-    def __init__(self, load_weight: float = 0.02, classes: dict = None):
+    def __init__(self, load_weight: float = 0.02, classes: dict = None,
+                 ewma_alpha: float = 0.3):
         self.load_weight = load_weight
         self.classes = dict(classes or DEFAULT_SLO_CLASSES)
+        # per-(engine, class) attainment EWMA: smooths the windowed
+        # reading so one noisy scrape can't flip-flop routing; purged
+        # by ``forget`` when the engine leaves or changes role
+        self.ewma_alpha = ewma_alpha
+        self._att_ewma: Dict[tuple, float] = {}
 
     def select(self, engines, tokens, lora_adapter=None,
                priority_class="standard"):
@@ -171,12 +208,21 @@ class SLOAwarePolicy(RoutingPolicy):
                 if name == priority_class:
                     att = ttft_att
                     break
+            key = (eid, priority_class)
+            prev = self._att_ewma.get(key)
+            if prev is not None:
+                att = (1 - self.ewma_alpha) * prev + self.ewma_alpha * att
+            self._att_ewma[key] = att
             slack_pressure = m.avg_queue_time / max(cls.ttft_s, 1e-9)
             load = m.num_running + m.num_waiting
             score = att - slack_pressure - self.load_weight * load
             if score > best_score:
                 best, best_score = eid, score
         return best
+
+    def forget(self, engine_id: str) -> None:
+        self._att_ewma = {k: v for k, v in self._att_ewma.items()
+                          if k[0] != engine_id}
 
 
 class LoRAAffinityPolicy(RoutingPolicy):

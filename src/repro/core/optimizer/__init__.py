@@ -1,4 +1,5 @@
 from repro.core.optimizer.gpu_optimizer import (GPUOptimizer, LoadMonitor,  # noqa: F401
-                                                homogeneous_cost)
+                                                RoleSplit, homogeneous_cost,
+                                                split_roles)
 from repro.core.optimizer.profiles import (DEVICES, PerfModel,  # noqa: F401
                                            ProfileTable, WorkloadBucket)

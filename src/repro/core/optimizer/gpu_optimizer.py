@@ -11,6 +11,12 @@ Three components, matching the paper's architecture figure:
   * External metric source — desired counts are exposed in the format
     the Pod Autoscaler consumes (one desired-replicas value per
     deployment), closing the paper's optimizer -> autoscaler loop.
+
+Plus the role planner for P/D disaggregation: :func:`split_roles`
+proposes the initial prefill:decode engine ratio from the roofline
+profile and the SLO targets (prefill engine-seconds vs decode
+engine-seconds per offered request); the RolePoolManager's
+attainment-driven rebalancer then adapts that ratio live.
 """
 from __future__ import annotations
 
@@ -19,8 +25,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.optimizer.profiles import (DEVICES, ProfileTable,
-                                           WorkloadBucket)
+from repro.core.optimizer.profiles import (DEVICES, PerfModel,
+                                           ProfileTable, WorkloadBucket)
 
 
 @dataclass
@@ -192,6 +198,89 @@ class GPUOptimizer:
         MetricSource' the Pod Autoscaler reads (paper Figure 8)."""
         alloc = self.optimize(demand)
         return {f"deploy-{g}": n for g, n in alloc.counts.items()}
+
+    # ----------------------------------------------- P/D role planner
+    def split_roles(self, demand: List[DemandBucket], device: str,
+                    total_engines: Optional[int] = None,
+                    slo_ttft_s: Optional[float] = None,
+                    slo_itl_s: Optional[float] = None,
+                    headroom: float = 1.2) -> "RoleSplit":
+        """Propose the initial P:D engine ratio for a disaggregated
+        fleet (see module-level :func:`split_roles`)."""
+        return split_roles(self.table, demand, device,
+                           total_engines=total_engines,
+                           slo_ttft_s=slo_ttft_s, slo_itl_s=slo_itl_s,
+                           headroom=headroom)
+
+
+@dataclass
+class RoleSplit:
+    """A proposed prefill:decode split with its load accounting."""
+    n_prefill: int
+    n_decode: int
+    prefill_load: float       # prefill engine-equivalents demanded
+    decode_load: float        # decode engine-equivalents demanded
+    note: str = ""
+
+    @property
+    def spec(self) -> str:
+        """The '<n>P<m>D' role spec the launcher / sim parse."""
+        return f"{self.n_prefill}P{self.n_decode}D"
+
+
+def split_roles(table: ProfileTable, demand: List[DemandBucket],
+                device: str, total_engines: Optional[int] = None,
+                slo_ttft_s: Optional[float] = None,
+                slo_itl_s: Optional[float] = None,
+                headroom: float = 1.2, max_batch: int = 32) -> RoleSplit:
+    """SLO-aware P:D planner over the roofline profile.
+
+    Prefill demand is compute-bound engine-seconds per second
+    (``rps * prefill_time(in_len)``); decode demand is bandwidth-bound
+    engine-seconds (``rps * out_len * step_time(b)/b`` at the largest
+    batch whose ITL still meets the SLO target — the target CAPS
+    batching, which is exactly why decode pods multiply under tight
+    ITL).  Unconstrained, each side gets ``ceil(load*headroom)``
+    engines; with ``total_engines`` the ratio is apportioned at a
+    minimum of one engine per role.  The returned split seeds the
+    RolePoolManager; live attainment then corrects the model error.
+    """
+    pm = PerfModel(table.cfg, DEVICES[device])
+    ttft = slo_ttft_s if slo_ttft_s is not None else table.slo_ttft_s
+    itl = slo_itl_s if slo_itl_s is not None else table.slo_itl_s
+    p_load = d_load = 0.0
+    notes = []
+    for d in demand:
+        if d.rps <= 0:
+            continue
+        b = d.bucket
+        ctx = b.in_len + b.out_len / 2.0
+        pt = pm.prefill_time(b.in_len)
+        if ttft is not None and pt > ttft:
+            notes.append(f"bucket {b.key}: prefill {pt:.2f}s > "
+                         f"TTFT target {ttft:.2f}s")
+        p_load += d.rps * pt
+        batch = 1
+        while (batch * 2 <= max_batch
+               and (itl is None
+                    or pm.decode_step_time(batch * 2, int(ctx)) <= itl)):
+            batch *= 2
+        d_load += (d.rps * b.out_len
+                   * pm.decode_step_time(batch, int(ctx)) / batch)
+    p_load *= headroom
+    d_load *= headroom
+    if total_engines is not None:
+        total = int(total_engines)
+        if total < 2:
+            raise ValueError("split_roles: a disaggregated fleet needs "
+                             f"total_engines >= 2, got {total}")
+        share = p_load / max(p_load + d_load, 1e-9)
+        n_p = min(max(int(round(total * share)), 1), total - 1)
+        n_d = total - n_p
+    else:
+        n_p = max(math.ceil(p_load), 1)
+        n_d = max(math.ceil(d_load), 1)
+    return RoleSplit(n_p, n_d, p_load, d_load, note="; ".join(notes))
 
 
 def homogeneous_cost(table: ProfileTable, demand: List[DemandBucket],

@@ -91,6 +91,22 @@ class PerfModel:
                    / (self.dev.peak_flops * self.dev.mfu_prefill))
         return max(t_mem, t_flops)
 
+    def mixed_step_time(self, batch: int, ctx_len: float,
+                        prefill_tokens: int) -> float:
+        """Fused mixed-batch step (the engine's ``mixed_step``): B
+        decode rows + prefill chunks flattened into ONE pass, so the
+        weights stream once for the whole token batch while the decode
+        rows add their per-sequence KV reads and the prefill tokens
+        their FLOPs — one roofline over both.  Degenerates to
+        ``decode_step_time`` at ``prefill_tokens=0``; with ``batch=0``
+        it is a prefill chunk that also pays the weight stream."""
+        flops = 2.0 * self.n_active * (batch + prefill_tokens)
+        t_comp = flops / (self.dev.peak_flops * self.dev.mfu_prefill)
+        bytes_moved = (self.param_bytes
+                       + batch * self.kv_bytes_per_token * ctx_len)
+        t_mem = bytes_moved / (self.dev.hbm_bw * self.dev.mbu_decode)
+        return max(t_comp, t_mem)
+
     # ---------------------------------------------------- request level
     def request_time(self, bucket: WorkloadBucket, batch: int) -> float:
         """End-to-end time of one request at the given batching level."""

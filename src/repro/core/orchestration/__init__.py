@@ -1,2 +1,6 @@
 from repro.core.orchestration.cluster import (ClusterManager, EngineGroup,  # noqa: F401
                                               GroupSpec, Pod, PodState)
+from repro.core.orchestration.pools import (AttainmentRebalancer,  # noqa: F401
+                                            Migration, RebalanceConfig,
+                                            RolePoolManager,
+                                            parse_role_spec)

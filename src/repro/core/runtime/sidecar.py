@@ -105,9 +105,11 @@ class AIRuntime:
             "avg_latency_s": float(m.avg_latency),
             "queue_time_s": float(m.avg_queue_time),
             "preemptions": float(m.preemptions),
-            # windowed TTFT-SLO attainment from the shared scheduler
-            # core — the inverted metric the autoscalers can target
+            # windowed TTFT/ITL-SLO attainment from the shared scheduler
+            # core — the inverted metrics the autoscalers (and the
+            # role-pool rebalancer) can target
             "slo_attainment": float(m.slo_attainment),
+            "slo_itl_attainment": float(m.slo_itl_attainment),
         }
 
     # ------------------------------------------------- engine management

@@ -5,9 +5,20 @@ with the metric pump (AI runtime scrape), autoscaler reconciliation
 through the ClusterManager (cold starts included), failure injection,
 and the GPU optimizer's desired-count feed.  This is the testbed every
 cluster-level benchmark runs on.
+
+Role pools: ``ClusterConfig.roles`` accepts 'mixed' (default),
+'<n>P<m>D' (static disaggregation) or 'auto' (even initial split).
+Disaggregated fleets are driven through the SAME
+:class:`~repro.core.orchestration.pools.RolePoolManager` the real
+launcher uses — the gateway routes new requests to the prefill pool,
+handoffs load-balance over the decode pool, and with
+``ClusterConfig.rebalance`` set an :class:`AttainmentRebalancer`
+migrates members between pools live under the discrete-event clock
+(``benchmarks/bench_pd_pools.py`` measures it).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -15,9 +26,13 @@ from repro.core.autoscaler.metrics import MetricStore
 from repro.core.autoscaler.policies import Autoscaler
 from repro.core.diagnostics.tools import (DiagnosticMonitor, FailureInjector,
                                           Telemetry)
-from repro.core.gateway.gateway import Gateway
+from repro.core.gateway.gateway import Gateway, RateLimit
 from repro.core.kvcache.pool import DistributedKVPool
 from repro.core.orchestration.cluster import ClusterManager, PodState
+from repro.core.orchestration.pools import (AttainmentRebalancer,
+                                            RebalanceConfig,
+                                            RolePoolManager,
+                                            parse_role_spec)
 from repro.core.runtime.sidecar import (AIRuntime, ColdStartManager,
                                         ModelArtifact)
 from repro.core.sim.events import EventLoop, SimClock
@@ -36,12 +51,20 @@ class ClusterConfig:
     use_kv_pool: bool = False
     kv_pool_gb: float = 64.0
     kv_pool_policy: str = "s3fifo"
+    kv_pool_bw: float = 12.5e9       # handoff fabric (bytes/s)
     autoscaler: Optional[Autoscaler] = None
+    rate_limit: Optional[RateLimit] = None   # None => gateway defaults
     metric_delay_s: float = 0.0      # legacy metrics-path propagation
     scrape_period_s: float = 1.0
     autoscale_period_s: float = 2.0
     model_bytes: float = 14e9        # ~7B bf16 artifact
     telemetry: bool = False
+    # -- role pools (P/D disaggregation at cluster scale) --
+    # 'mixed' | '<n>P<m>D' | 'auto' (even split, adapted live when a
+    # rebalance config is set).  Disaggregation implies the KV pool.
+    roles: str = "mixed"
+    rebalance: Optional[RebalanceConfig] = None
+    pool_poll_period_s: float = 0.5  # drain-completion polling cadence
 
 
 class ServingCluster:
@@ -50,14 +73,33 @@ class ServingCluster:
         self.ccfg = ccfg
         self.loop = EventLoop()
         self.clock = self.loop.clock
+        self.roles = self._resolve_roles(ccfg)
+        self.disaggregated = any(r != "mixed" for r in self.roles)
+        if self.disaggregated:
+            ccfg.num_engines = len(self.roles)
+            if ccfg.autoscaler is not None:
+                # replica autoscaling actuates through the gateway only
+                # and would bypass the role pools (retired members would
+                # keep taking handoffs); elastic role pools are a
+                # ROADMAP follow-up — refuse the combination for now
+                raise ValueError("autoscaler + disaggregated roles is "
+                                 "not supported yet: size the pools "
+                                 "with ClusterConfig.rebalance instead")
         self.kv_pool = None
-        if ccfg.use_kv_pool:
+        if ccfg.use_kv_pool or self.disaggregated:
             per_tok = 1  # placeholder, real size set by engines' PerfModel
             self.kv_pool = DistributedKVPool(
                 capacity_bytes=int(ccfg.kv_pool_gb * (1 << 30)),
-                policy=ccfg.kv_pool_policy, clock=self.clock)
+                policy=ccfg.kv_pool_policy, clock=self.clock,
+                network_bw=ccfg.kv_pool_bw)
         self.gateway = Gateway(policy=ccfg.routing_policy,
+                               default_limit=ccfg.rate_limit,
                                clock=self.clock, **ccfg.routing_kw)
+        self.pool_mgr = RolePoolManager(clock=self.clock,
+                                        gateway=self.gateway)
+        self.rebalancer = (AttainmentRebalancer(ccfg.rebalance)
+                           if ccfg.rebalance is not None
+                           and self.disaggregated else None)
         self.engines: Dict[str, SimEngine] = {}
         self.runtimes: Dict[str, AIRuntime] = {}
         self.metrics = MetricStore(propagation_delay_s=ccfg.metric_delay_s)
@@ -80,28 +122,46 @@ class ServingCluster:
             if i > 0:
                 self.cold.note_cached(cfg.name, f"node-{i}", "local")
         for i in range(ccfg.num_engines):
-            self._spawn_engine(ready=True)
+            self._spawn_engine(ready=True, role=self.roles[i])
+
+    @staticmethod
+    def _resolve_roles(ccfg: ClusterConfig) -> List[str]:
+        if ccfg.roles == "auto":
+            if ccfg.num_engines < 2:
+                raise ValueError("roles='auto' needs num_engines >= 2 "
+                                 "(one prefill AND one decode member)")
+            # the live rebalancer corrects the split; absent a demand
+            # forecast the even split is the neutral starting point
+            # (launch/serve.py seeds from the optimizer's split_roles)
+            n_p = max(ccfg.num_engines // 2, 1)
+            return (["prefill"] * n_p
+                    + ["decode"] * (ccfg.num_engines - n_p))
+        return parse_role_spec(ccfg.roles, ccfg.num_engines)
 
     # ------------------------------------------------------------ engines
-    def _spawn_engine(self, ready: bool = False) -> str:
+    def _spawn_engine(self, ready: bool = False,
+                      role: str = "mixed") -> str:
         eid = f"engine-{len(self.runtimes)}"
         node = f"node-{len(self.runtimes) % max(len(self.cluster.nodes), 1)}"
         ecfg = self.ccfg.engine or SimEngineConfig(
             device_type=self.ccfg.device_type)
+        if ecfg.role != role:
+            ecfg = dataclasses.replace(ecfg, role=role)
         eng = SimEngine(self.cfg, self.loop, ecfg, kv_pool=self.kv_pool,
                         engine_id=eid, node=node)
         eng.slowdown_fn = (lambda e=eid: self.injector.slowdown_factor(e))
         self.engines[eid] = eng
         self.runtimes[eid] = AIRuntime(eng, pod_id=eid, node=node)
         if ready:
-            self.gateway.register_engine(eid, eng)
+            self.pool_mgr.add_engine(eid, eng, role)
         else:
-            # simulate cold start before joining the gateway
+            # simulate cold start before joining the gateway/pools
             pod = self.cluster.create_pod(self.cfg.name,
                                           self.ccfg.device_type)
             delay = (pod.ready_at - self.clock.now) if pod else 30.0
             self.loop.after(delay,
-                            lambda: self.gateway.register_engine(eid, eng))
+                            lambda: self.pool_mgr.add_engine(eid, eng,
+                                                             role))
         return eid
 
     def _retire_engine(self) -> None:
@@ -137,9 +197,15 @@ class ServingCluster:
     def _remediate(self, d) -> None:
         if d.action in ("restart", "cordon", "drain"):
             if d.pod_id in self.gateway.engines:
-                self.gateway.deregister_engine(d.pod_id)
-                # replacement spins up with a cold start
-                self._spawn_engine(ready=False)
+                # remove from the role pools too (handoffs and pool
+                # attainment must stop seeing the degraded member) and
+                # spin up the replacement with a cold start UNDER THE
+                # SAME ROLE, so remediation preserves the P/D topology
+                role = self.pool_mgr.role_of(d.pod_id)
+                self.pool_mgr.remove_engine(d.pod_id)
+                self._spawn_engine(
+                    ready=False,
+                    role=role if role in self.pool_mgr.POOLS else "mixed")
 
     def _autoscale(self) -> None:
         asc = self.ccfg.autoscaler
@@ -172,6 +238,14 @@ class ServingCluster:
         self.loop.every(self.ccfg.scrape_period_s, self._scrape)
         if self.ccfg.autoscaler is not None:
             self.loop.every(self.ccfg.autoscale_period_s, self._autoscale)
+        if self.disaggregated:
+            self.loop.every(self.ccfg.pool_poll_period_s,
+                            lambda: self.pool_mgr.poll(self.clock.now))
+        if self.rebalancer is not None:
+            self.loop.every(
+                self.rebalancer.cfg.period_s,
+                lambda: self.rebalancer.step(self.clock.now,
+                                             self.pool_mgr))
         end = workload[-1].arrival + drain_s if workload else drain_s
 
         def done() -> bool:
@@ -208,4 +282,12 @@ class ServingCluster:
         s["prefix_hit_tokens"] = sum(m.prefix_hit_tokens for m in agg)
         s["remote_hit_tokens"] = sum(m.remote_hit_tokens for m in agg)
         s["preemptions"] = sum(m.preemptions for m in agg)
+        if self.disaggregated:
+            s["pool_counts"] = {p: len(m)
+                                for p, m in self.pool_mgr.pools.items()
+                                if m}
+            s["migrations"] = len(self.pool_mgr.migrations)
+            att = self.pool_mgr.attainment()
+            s["pool_ttft_attainment"] = att["ttft"]
+            s["pool_itl_attainment"] = att["itl"]
         return s

@@ -12,10 +12,15 @@ KV pool.  Cache hit/miss/eviction behaviour and scheduling decisions
 in benchmarks are produced by the production code; only the FLOPs are
 analytic (the roofline cost model plays the ModelRunner's part).
 
-Iteration model (vLLM-style continuous batching, the scheduler's
-legacy two-phase mode):
-  * each engine iteration is either a prefill chunk (compute-bound) or
-    one decode step for the running batch (bandwidth-bound)
+Iteration model (vLLM-style continuous batching):
+  * ``mixed_batching=False`` (legacy two-phase, the default): each
+    engine iteration is either a prefill chunk (compute-bound) or one
+    decode step for the running batch (bandwidth-bound)
+  * ``mixed_batching=True``: the shared Scheduler emits the SAME fused
+    ``B + K*chunk`` step the real engine runs (budget-trimmed chunks
+    from up to ``max_prefills`` concurrent prefills riding one pass
+    with the decode batch), priced by ``PerfModel.mixed_step_time`` —
+    one roofline over the flattened token batch
   * prefix-cache hits (local or distributed-pool) skip prefill compute
     for the covered tokens; pool fetches pay a transfer-time cost
   * faults (repro.core.diagnostics) scale iteration time via
@@ -51,6 +56,12 @@ class SimEngineConfig:
     prefix_caching: bool = True
     chunked_prefill: bool = True
     scheduler_overhead_s: float = 0.002
+    # fused mixed-batch scheduling (the real engine's default mode):
+    # False keeps the legacy two-phase iteration the historical
+    # cluster benchmarks were tuned on
+    mixed_batching: bool = False
+    max_prefills: int = 2           # concurrent PREFILLING requests
+    token_budget: int = 0           # 0 => max_batch + max_prefills*chunk
     # P/D disaggregation (paper §3.2.5: the pool enables a DistServe-
     # style "prefill/decode disaggregation remote pool"):
     #   mixed   — normal colocated engine
@@ -67,8 +78,8 @@ class SimEngineConfig:
     slo_preempt_cooldown_s: float = 1.0
 
     def scheduler_config(self) -> SchedulerConfig:
-        """The shared Scheduler in its legacy two-phase mode (one
-        prefill at a time — the simulator's iteration granularity)."""
+        """The shared Scheduler, two-phase or fused-mixed-batch — the
+        exact admission semantics the real engine runs either way."""
         kw = {}
         if self.slo_classes is not None:
             kw["slo_classes"] = dict(self.slo_classes)
@@ -78,7 +89,9 @@ class SimEngineConfig:
             chunk_size=self.chunk_size,
             chunked_prefill=self.chunked_prefill,
             prefix_caching=self.prefix_caching,
-            mixed_batching=False, max_prefills=1,
+            mixed_batching=self.mixed_batching,
+            max_prefills=self.max_prefills if self.mixed_batching else 1,
+            token_budget=self.token_budget,
             honor_stop_token=False,     # sim decode tokens are
             role=self.role,             # synthetic zeros
             slo_aware=self.slo_aware,
@@ -202,25 +215,36 @@ class SimEngine:
             self._busy = False        # dead engine: progress stops
             return
         out = self.sched.schedule(now)
+        if not (out.prefills or out.decode):
+            self._busy = False
+            return
         dt = self.sc.scheduler_overhead_s
-        if out.prefills:
-            work = out.prefills[0]
-            req = work.req
-            dt += self.perf.prefill_time(work.chunk_len) \
+        batch = out.decode
+        chunk_total = sum(w.chunk_len for w in out.prefills)
+        for w in out.prefills:
+            dt += getattr(w.req, "_remote_fetch_s", 0.0)
+            w.req._remote_fetch_s = 0.0     # type: ignore[attr-defined]
+        if batch and out.prefills:
+            # fused mixed batch: decode rows + budget-trimmed prefill
+            # chunks in ONE pass, one roofline over the token batch
+            ctx = sum(r.total_tokens for r in batch) / len(batch)
+            dt += self.perf.mixed_step_time(len(batch), ctx, chunk_total) \
                 / (self._speed * slow)
-            dt += getattr(req, "_remote_fetch_s", 0.0)
-            req._remote_fetch_s = 0.0       # type: ignore[attr-defined]
-            if self.sched.note_prefill_progress(req, work.chunk_len):
-                self._finish_prefill(req, now + dt)
-        elif out.decode:
-            batch = out.decode
+        elif out.prefills:
+            dt += self.perf.prefill_time(chunk_total) \
+                / (self._speed * slow)
+        else:
             ctx = sum(r.total_tokens for r in batch) / len(batch)
             dt += self.perf.decode_step_time(len(batch), ctx) \
                 / (self._speed * slow)
-            self.sched.on_decode_batch(batch, [0] * len(batch), now + dt)
-        else:
-            self._busy = False
-            return
+        done_t = now + dt
+        for w in out.prefills:
+            if w.chunk_len == 0:
+                continue                    # budget-starved this step
+            if self.sched.note_prefill_progress(w.req, w.chunk_len):
+                self._finish_prefill(w.req, done_t)
+        if batch:
+            self.sched.on_decode_batch(batch, [0] * len(batch), done_t)
         self.loop.after(dt, self._iterate)
 
     def _finish_prefill(self, req: Request, t: float) -> None:

@@ -15,6 +15,9 @@ Statistically matched stand-ins for the paper's datasets:
   * ``slo_mixed``      — interleaved interactive (short, latency-bound)
     and batch (long, throughput-bound) arrivals with priority classes
     set — the SLO-aware-scheduling testbed (bench_slo).
+  * ``phase_shift``    — prefill-heavy half then decode-heavy half: the
+    role-pool rebalancing testbed (bench_pd_pools) — any static P:D
+    split is mis-sized for one of the two phases.
 """
 from __future__ import annotations
 
@@ -150,6 +153,44 @@ def slo_mixed(rate_rps: float, duration_s: float, seed: int = 0,
             cls, mp, mo = "batch", batch_prompt, batch_output
         plen = _lognormal_len(rng, mp, 0.5, 8, 4096)
         olen = _lognormal_len(rng, mo, 0.5, 4, 1024)
+        req = Request(prompt_tokens=_toks(rng, plen),
+                      sampling=SamplingParams(max_new_tokens=olen),
+                      arrival_time=t, priority_class=cls)
+        out.append(TimedRequest(t, req))
+    return out
+
+
+def phase_shift(duration_s: float, seed: int = 0,
+                interactive_frac: float = 1.0,
+                prefill_rate_rps: float = 15.0,
+                prefill_prompt: float = 512.0,
+                prefill_output: float = 16.0,
+                decode_rate_rps: float = 2.5,
+                decode_prompt: float = 256.0,
+                decode_output: float = 400.0) -> List[TimedRequest]:
+    """Phase-shifting P/D load: the first half is prefill-heavy (high
+    arrival rate of long prompts with short outputs — the TTFT-bound
+    phase), the second half decode-heavy (fewer, short prompts with
+    long outputs — decode residency and ITL bound).  A static
+    prefill:decode split tuned for either phase starves in the other;
+    the attainment-driven RolePoolManager rebalance migrates members
+    between pools when the phase flips
+    (``benchmarks/bench_pd_pools.py``).  Requests default to the
+    'interactive' priority class so per-class attainment is the metric
+    under test."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    while t < duration_s:
+        if t < duration_s / 2:
+            rate, mp, mo = prefill_rate_rps, prefill_prompt, \
+                prefill_output
+        else:
+            rate, mp, mo = decode_rate_rps, decode_prompt, decode_output
+        t += rng.exponential(1.0 / rate)
+        cls = ("interactive" if rng.random() < interactive_frac
+               else "standard")
+        plen = _lognormal_len(rng, mp, 0.35, 8, 4096)
+        olen = _lognormal_len(rng, mo, 0.35, 4, 1024)
         req = Request(prompt_tokens=_toks(rng, plen),
                       sampling=SamplingParams(max_new_tokens=olen),
                       arrival_time=t, priority_class=cls)

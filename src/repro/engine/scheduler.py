@@ -104,6 +104,12 @@ DEFAULT_SLO_CLASSES: Dict[str, ClassSLO] = {
     "batch": ClassSLO(ttft_s=30.0, itl_s=1.0, rank=2),
 }
 
+# role taxonomy shared by the scheduler, the gateway's pool routing and
+# the RolePoolManager: frontend roles admit NEW requests, decoder roles
+# accept prefill handoffs ('mixed' does both)
+FRONTEND_ROLES = ("prefill", "mixed")
+DECODER_ROLES = ("decode", "mixed")
+
 
 def default_slo_classes() -> Dict[str, ClassSLO]:
     return dict(DEFAULT_SLO_CLASSES)
@@ -129,6 +135,10 @@ class EngineMetrics:
     # (class, ttft_attainment, itl_attainment, finished)
     slo_attainment: float = 1.0
     slo_by_class: tuple = ()
+    # recent-window ITL attainment (mean per-request fraction of
+    # inter-token gaps within the class target) — the decode-pool
+    # sizing signal for the role-pool rebalancer
+    slo_itl_attainment: float = 1.0
 
 
 @dataclass
@@ -213,6 +223,10 @@ class SchedulerCore:
         # events (for the autoscaler's windowed slo_attainment signal)
         self._slo_stats: Dict[str, dict] = {}
         self._slo_events: List[tuple] = []
+        # recent per-request ITL-attainment fractions — TTFT misses
+        # point at prefill capacity, ITL misses at decode capacity, so
+        # the role-pool rebalancer needs both windowed separately
+        self._itl_events: List[tuple] = []
 
     # ---------------------------------------------------------- queue
     def enqueue(self, req: Request, now: float) -> None:
@@ -263,12 +277,18 @@ class SchedulerCore:
         rec["ttft_ok"] += int(ttft_ok)
         gaps = req.itl
         rec["itl_total"] += len(gaps)
-        rec["itl_ok"] += sum(1 for g in gaps if g <= cls.itl_s)
+        itl_ok = sum(1 for g in gaps if g <= cls.itl_s)
+        rec["itl_ok"] += itl_ok
         self._slo_events.append((now, req.priority_class,
                                  1.0 if ttft_ok else 0.0))
+        if gaps:
+            self._itl_events.append((now, req.priority_class,
+                                     itl_ok / len(gaps)))
         cutoff = now - self.SLO_WINDOW_S
         while self._slo_events and self._slo_events[0][0] < cutoff:
             self._slo_events.pop(0)
+        while self._itl_events and self._itl_events[0][0] < cutoff:
+            self._itl_events.pop(0)
 
     def slo_attainment(self, now: float) -> float:
         """TTFT attainment over the recent window; falls back to the
@@ -281,6 +301,20 @@ class SchedulerCore:
         if fin:
             return (sum(r["ttft_ok"] for r in self._slo_stats.values())
                     / fin)
+        return 1.0
+
+    def slo_itl_attainment(self, now: float) -> float:
+        """ITL attainment over the recent window (mean per-request
+        fraction of inter-token gaps within target); falls back to the
+        cumulative fraction after a drain, 1.0 before any finish."""
+        window = [ok for t, _c, ok in self._itl_events
+                  if t >= now - self.SLO_WINDOW_S]
+        if window:
+            return sum(window) / len(window)
+        tot = sum(r["itl_total"] for r in self._slo_stats.values())
+        if tot:
+            return (sum(r["itl_ok"] for r in self._slo_stats.values())
+                    / tot)
         return 1.0
 
     def slo_class_stats(self, now: Optional[float] = None) -> tuple:
@@ -370,6 +404,9 @@ class Scheduler(SchedulerCore):
         self.handoff: Optional[Callable[[Request], None]] = None
         self._pending_handoff = 0
         self._last_preempt = -1e18      # SLO preemption cooldown clock
+        # live role migration: a draining engine admits nothing new and
+        # finishes in-flight work so the control plane can flip its role
+        self.draining = False
 
     # ---------------------------------------------------------- views
     @property
@@ -380,6 +417,36 @@ class Scheduler(SchedulerCore):
     @property
     def wants_handoff(self) -> bool:
         return self.scfg.role == "prefill" and self.handoff is not None
+
+    @property
+    def drained(self) -> bool:
+        """True when nothing admitted remains: safe to flip roles."""
+        return not (self.waiting or self.prefills or self.running
+                    or self._pending_handoff)
+
+    # ------------------------------------------------------- role migration
+    def set_role(self, role: str) -> None:
+        """Flip this engine's serving role (live P/D migration).  Only
+        legal on a drained engine — admitted work holds pages and
+        handoff obligations that belong to the old role, so the control
+        plane drains first (``draining`` + ``takeover_waiting``)."""
+        if role not in self.ROLES:
+            raise ValueError(f"unknown scheduler role {role!r}; "
+                             f"expected one of {self.ROLES}")
+        if not self.drained:
+            raise RuntimeError(
+                f"set_role({role!r}): engine has queued or admitted "
+                "work; drain first (takeover_waiting + finish in-"
+                "flight)")
+        self.scfg.role = role
+
+    def takeover_waiting(self) -> List[Request]:
+        """Drain support: hand the not-yet-admitted queue back to the
+        control plane so it can re-route the requests to another pool
+        member (in-flight prefills are NOT touched — they finish here
+        and leave through the normal pool-handoff path)."""
+        reqs, self.waiting = list(self.waiting), []
+        return reqs
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.scfg.page_size)
@@ -405,6 +472,8 @@ class Scheduler(SchedulerCore):
     # ------------------------------------------------------- admission
     def try_admit(self, now: float) -> Optional[Request]:
         scfg = self.scfg
+        if self.draining:
+            return None     # migrating out: nothing new is admitted
         if not self.waiting or (len(self.running) + len(self.prefills)
                                 >= scfg.max_batch):
             return None
@@ -785,4 +854,5 @@ class Scheduler(SchedulerCore):
             remote_hit_tokens=self._m["remote_hit_tokens"],
             loaded_adapters=loaded_adapters,
             slo_attainment=self.slo_attainment(now),
-            slo_by_class=self.slo_class_stats(now))
+            slo_by_class=self.slo_class_stats(now),
+            slo_itl_attainment=self.slo_itl_attainment(now))

@@ -202,4 +202,5 @@ class SlotEngine:
             admitted_requests=self.core.admitted_count,
             finished_requests=self.core.finished_count,
             slo_attainment=self.core.slo_attainment(now),
-            slo_by_class=self.core.slo_class_stats(now))
+            slo_by_class=self.core.slo_class_stats(now),
+            slo_itl_attainment=self.core.slo_itl_attainment(now))

@@ -15,6 +15,15 @@ decoding — the DistServe-style handoff the cluster simulator's
 ``benchmarks/bench_pd_disagg.py`` measures at scale, here executed by
 the actual jitted engines.
 
+Role pools: every engine group is owned by a
+:class:`~repro.core.orchestration.pools.RolePoolManager` — the gateway
+routes new requests to the prefill pool only and handoffs load-balance
+over the decode pool.  ``--roles auto`` lets the control plane pick
+the split: the GPU optimizer's ``split_roles`` planner proposes the
+initial P:D ratio from the roofline profile and the request shape, and
+an :class:`AttainmentRebalancer` adapts it live (attainment-driven
+role migration — no restarts) while the group serves.
+
 SLO-aware serving: ``--slo`` turns on deadline-aware scheduling in
 every engine (priority classes with TTFT/ITL targets, earliest-slack
 admission, bounded priority preemption); ``--interactive-frac`` sets
@@ -26,7 +35,6 @@ policy on the simulator).
 from __future__ import annotations
 
 import argparse
-import re
 import time
 
 import numpy as np
@@ -34,33 +42,48 @@ import numpy as np
 from repro.configs import get_reduced_config
 from repro.core.gateway import Gateway
 from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.optimizer.gpu_optimizer import DemandBucket, split_roles
+from repro.core.optimizer.profiles import ProfileTable, WorkloadBucket
+from repro.core.orchestration.pools import (AttainmentRebalancer,
+                                            RebalanceConfig,
+                                            RolePoolManager,
+                                            parse_role_spec)
 from repro.core.sim.workloads import summarize
 from repro.engine import EngineConfig, InferenceEngine, Request, \
     SamplingParams
+from repro.engine.scheduler import DEFAULT_SLO_CLASSES
 
 
 def parse_roles(spec: str, default_engines: int):
-    """'mixed' -> N mixed engines; '2P2D'/'1p3d' -> disaggregated."""
-    if not spec or spec == "mixed":
-        return ["mixed"] * default_engines
-    m = re.fullmatch(r"(\d+)[pP](\d+)[dD]", spec)
-    if m is None:
-        raise ValueError(
-            f"--roles {spec!r}: expected 'mixed' or '<n>P<m>D'")
-    n_p, n_d = int(m.group(1)), int(m.group(2))
-    if n_p == 0 or n_d == 0:
-        raise ValueError(
-            f"--roles {spec!r}: a disaggregated group needs at least "
-            "one prefill AND one decode engine")
-    return ["prefill"] * n_p + ["decode"] * n_d
+    """Back-compat alias for the shared role-spec parser."""
+    return parse_role_spec(spec, default_engines)
 
 
-def build_engines(cfg, roles, clock, ecfg_kw=None):
-    """A pod group: engines (+ pool & handoff wiring when disaggregated).
+def auto_roles(cfg, n_engines: int, prompt_len: int, max_new: int,
+               rate_rps: float = 1.0, device: str = "a10"):
+    """``--roles auto``: seed the P:D split from the GPU optimizer's
+    roofline planner over the offered request shape (the live
+    rebalancer adapts it from attainment once serving starts —
+    ``device`` names the planner's roofline profile, which need not
+    match the host exactly for the seed to be useful)."""
+    interactive = DEFAULT_SLO_CLASSES["interactive"]
+    rs = split_roles(ProfileTable(cfg),
+                     [DemandBucket(WorkloadBucket(prompt_len, max_new),
+                                   rate_rps)],
+                     device=device, total_engines=n_engines,
+                     slo_ttft_s=interactive.ttft_s,
+                     slo_itl_s=interactive.itl_s)
+    return ["prefill"] * rs.n_prefill + ["decode"] * rs.n_decode, rs
 
-    Returns (engines dict, frontends dict, pool).  ``frontends`` are the
-    engines that accept NEW requests (prefill or mixed) — decode engines
-    only receive handed-off work.
+
+def build_engines(cfg, roles, clock, ecfg_kw=None, gateway=None):
+    """A pod group under a RolePoolManager.
+
+    Returns ``(engines dict, manager, pool)``.  The manager owns the
+    role pools, wires the prefill->decode handoff and (when a gateway
+    is passed) registers each engine under its pool so routing only
+    sees frontends.  Disaggregated groups get a DistributedKVPool; a
+    pool is also built for all-mixed groups only if requested upstream.
     """
     kw = dict(page_size=8, num_pages=256, max_batch=4,
               max_pages_per_seq=32, chunk_size=32)
@@ -70,37 +93,28 @@ def build_engines(cfg, roles, clock, ecfg_kw=None):
     if disagg:
         pool = DistributedKVPool(capacity_bytes=1 << 30,
                                  metadata_lag=0.0, clock=clock)
+    manager = RolePoolManager(clock=clock, gateway=gateway)
     engines = {}
     for i, role in enumerate(roles):
-        eid = f"{role}-{i}" if disagg else f"engine-{i}"
+        eid = f"engine-{i}"
         engines[eid] = InferenceEngine(
             cfg, EngineConfig(role=role, **kw), clock=clock,
             kv_pool_client=pool, engine_id=eid, seed=0 if disagg else i)
-    if disagg:
-        decoders = [e for e in engines.values()
-                    if e.ecfg.role in ("decode", "mixed")]
-
-        def handoff(req):
-            tgt = min(decoders, key=lambda e: len(e.running)
-                      + len(e.waiting) + len(e.prefills))
-            tgt.submit(req)
-
-        for e in engines.values():
-            if e.ecfg.role == "prefill":
-                e.handoff = handoff
-    frontends = {eid: e for eid, e in engines.items()
-                 if e.ecfg.role in ("prefill", "mixed")}
-    return engines, frontends, pool
+        manager.add_engine(eid, engines[eid], role)
+    return engines, manager, pool
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--engines", type=int, default=None,
-                    help="pod count for --roles mixed (default 2)")
+                    help="pod count for --roles mixed (default 2) or "
+                         "--roles auto (default 4)")
     ap.add_argument("--roles", default="mixed",
-                    help="'mixed' (default, --engines colocated pods) or "
-                         "'2P2D'-style prefill/decode disaggregation")
+                    help="'mixed' (default, --engines colocated pods), "
+                         "'2P2D'-style static disaggregation, or "
+                         "'auto' (optimizer-proposed split, adapted "
+                         "live by the attainment rebalancer)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--policy", default="prefix-cache-aware")
     ap.add_argument("--prompt-len", type=int, default=48)
@@ -112,24 +126,49 @@ def main() -> None:
     ap.add_argument("--interactive-frac", type=float, default=0.5,
                     help="fraction of requests tagged priority class "
                          "'interactive' (the rest are 'batch')")
+    ap.add_argument("--device", default="a10",
+                    help="roofline profile the --roles auto planner "
+                         "sizes the initial P:D split against")
     args = ap.parse_args()
 
-    if args.engines is not None and args.roles != "mixed":
-        ap.error("--engines only applies to --roles mixed; a "
+    if args.engines is not None and args.roles not in ("mixed", "auto"):
+        ap.error("--engines only applies to --roles mixed/auto; a "
                  "'<n>P<m>D' spec fixes the pod count itself")
+    if args.roles == "auto" and args.engines is not None \
+            and args.engines < 2:
+        ap.error("--roles auto needs --engines >= 2 (one prefill AND "
+                 "one decode pod)")
     cfg = get_reduced_config(args.arch)
     t0 = time.monotonic()
     clock = lambda: time.monotonic() - t0      # noqa: E731
-    roles = parse_roles(args.roles, args.engines or 2)
+    rebalancer = None
+    if args.roles == "auto":
+        roles, rs = auto_roles(cfg, args.engines or 4,
+                               args.prompt_len, args.max_new,
+                               device=args.device)
+        rebalancer = AttainmentRebalancer(
+            RebalanceConfig(period_s=0.5, cooldown_s=5.0, warmup_s=2.0))
+        print(f"auto roles: optimizer proposes {rs.spec} "
+              f"(prefill_load={rs.prefill_load:.3f}, "
+              f"decode_load={rs.decode_load:.3f})")
+    else:
+        roles = parse_role_spec(args.roles, args.engines or 2)
     gw = Gateway(policy=args.policy, clock=clock)
-    engines, frontends, pool = build_engines(
-        cfg, roles, clock, ecfg_kw=dict(slo_aware=args.slo))
-    for eid, eng in frontends.items():
-        gw.register_engine(eid, eng)
+    engines, manager, pool = build_engines(
+        cfg, roles, clock, ecfg_kw=dict(slo_aware=args.slo), gateway=gw)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, 24).tolist()
     reqs = []
+
+    def pump():
+        for eng in engines.values():
+            if eng.has_work:
+                eng.step()
+        manager.poll(clock())
+        if rebalancer is not None:
+            rebalancer.step(clock(), manager)
+
     for i in range(args.requests):
         prompt = shared + rng.integers(
             0, cfg.vocab_size, max(args.prompt_len - 24, 4)).tolist()
@@ -143,13 +182,9 @@ def main() -> None:
         engines[eid].submit(r)
         reqs.append((eid, r))
         # interleave a bit of serving with arrivals
-        for eng in engines.values():
-            if eng.has_work:
-                eng.step()
-    while any(e.has_work for e in engines.values()):
-        for eng in engines.values():
-            if eng.has_work:
-                eng.step()
+        pump()
+    while any(e.has_work for e in engines.values()) or manager.draining:
+        pump()
 
     print(f"\nrouting ({args.policy}):", dict(gw.stats.per_engine))
     s = summarize([r for _, r in reqs])
@@ -158,7 +193,8 @@ def main() -> None:
               f"  {k:22s} {v}")
     for eid, eng in engines.items():
         m = eng.metrics()
-        print(f"  {eid}: finished={m.finished_requests} "
+        print(f"  {eid} [{manager.role_of(eid)}]: "
+              f"finished={m.finished_requests} "
               f"prefix_hit_tokens={m.prefix_hit_tokens} "
               f"remote_hit_tokens={m.remote_hit_tokens} "
               f"kv_util={m.kv_utilization:.2f}")
@@ -167,6 +203,9 @@ def main() -> None:
                 f"{c}: ttft={ta:.2f} itl={ia:.2f} n={n}"
                 for c, ta, ia, n in m.slo_by_class)
             print(f"    slo_attainment={m.slo_attainment:.2f} [{rows}]")
+    if any(r != "mixed" for r in roles):
+        print(f"  pools: {manager.counts()} "
+              f"migrations={len(manager.migrations)}")
     if pool is not None:
         st = pool.stats
         print(f"  pool: puts={st.puts} hits={st.hits_local + st.hits_remote}"

@@ -132,6 +132,57 @@ def test_gateway_per_user_isolation():
     assert gw.route([1], user="other") is not None   # isolated
 
 
+def test_deregister_purges_policy_state():
+    """Scale-down correctness: deregistering an engine must purge it
+    from per-policy routing state (attainment EWMAs, prefix-affinity
+    maps) — a drained/migrated pod can never be routed to again."""
+    gw = Gateway(policy="prefix-load")
+    hot = StubEngine(EngineMetrics(num_running=0), prefix_tokens=50)
+    cold = StubEngine(EngineMetrics(num_running=0))
+    gw.register_engine("hot", hot)
+    gw.register_engine("cold", cold)
+    tokens = list(range(50))
+    assert gw.route(tokens) == "hot"
+    assert "hot" in gw.policy._affinity.values()   # affinity earned
+    gw.deregister_engine("hot")
+    assert "hot" not in gw.policy._affinity.values()
+    for _ in range(5):
+        assert gw.route(tokens) == "cold"
+
+    gw = Gateway(policy="slo-aware")
+    good = StubEngine(EngineMetrics(
+        slo_by_class=(("interactive", 0.95, 0.9, 20),)))
+    bad = StubEngine(EngineMetrics(
+        slo_by_class=(("interactive", 0.2, 0.9, 20),)))
+    gw.register_engine("good", good)
+    gw.register_engine("bad", bad)
+    assert gw.route([1], priority_class="interactive") == "good"
+    assert any(k[0] == "good" for k in gw.policy._att_ewma)
+    gw.deregister_engine("good")
+    assert not any(k[0] == "good" for k in gw.policy._att_ewma)
+    assert gw.route([1], priority_class="interactive") == "bad"
+
+
+def test_route_skips_non_frontend_pools():
+    """Pool-tagged engines: new requests only route to prefill/mixed
+    members; a 'draining' retag makes a member unroutable at once."""
+    gw = Gateway(policy="least-request")
+    for eid, pool in (("p0", "prefill"), ("p1", "prefill"),
+                      ("d0", "decode")):
+        gw.register_engine(eid, StubEngine(), pool=pool)
+    for _ in range(6):
+        assert gw.route([1]) in ("p0", "p1")
+    gw.set_engine_pool("p0", "draining")
+    for _ in range(6):
+        assert gw.route([1]) == "p1"
+    gw.set_engine_pool("p0", "decode")       # migration completed
+    assert sorted(gw.routable_engines()) == ["p1"]
+    # untagged engines keep the legacy behavior (all routable)
+    gw2 = Gateway(policy="least-request")
+    gw2.register_engine("e0", StubEngine())
+    assert gw2.route([1]) == "e0"
+
+
 def test_workload_histogram_feeds_load_monitor():
     gw = Gateway(policy="random")
     gw.register_engine("e0", StubEngine())

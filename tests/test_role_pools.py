@@ -1,0 +1,267 @@
+"""Role-aware control plane: dynamic P/D pools with live migration.
+
+Covers the RolePoolManager drain/flip protocol on the simulator, the
+attainment-driven rebalance loop converging in BOTH directions on a
+phase-shifting scenario, per-pool autoscaler independence, the GPU
+optimizer's split_roles planner, and — on the REAL JAX data plane —
+that a mid-stream P->D role change yields byte-identical output to a
+static topology (the PR-2 1P+1D smoke, extended with live migration).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced_config
+from repro.core.gateway.gateway import RateLimit
+from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.optimizer.gpu_optimizer import DemandBucket, split_roles
+from repro.core.optimizer.profiles import ProfileTable, WorkloadBucket
+from repro.core.orchestration.pools import (AttainmentRebalancer,
+                                            RebalanceConfig,
+                                            RolePoolManager,
+                                            parse_role_spec)
+from repro.core.sim.cluster_sim import ClusterConfig, ServingCluster
+from repro.core.sim.events import EventLoop
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.core.sim.workloads import phase_shift
+from repro.engine import (EngineConfig, InferenceEngine, Request,
+                          RequestState, SamplingParams)
+
+ENGINE_KW = dict(page_size=8, num_pages=64, max_batch=4,
+                 max_pages_per_seq=16, chunk_size=16)
+
+
+# ---------------------------------------------------------------- parsing
+def test_parse_role_spec():
+    assert parse_role_spec("mixed", 3) == ["mixed"] * 3
+    assert parse_role_spec("2P2D", 0) == ["prefill"] * 2 + ["decode"] * 2
+    assert parse_role_spec("1p3d", 0) == ["prefill"] + ["decode"] * 3
+    with pytest.raises(ValueError):
+        parse_role_spec("0P2D", 0)
+    with pytest.raises(ValueError):
+        parse_role_spec("auto", 4)      # callers resolve 'auto' first
+
+
+# ---------------------------------------------------------------- planner
+def test_split_roles_directionality():
+    """Prefill-heavy demand proposes more P, decode-heavy more D, and
+    a fixed total is respected with at least one engine per role."""
+    table = ProfileTable(get_config("deepseek-coder-7b"))
+    heavy_p = split_roles(
+        table, [DemandBucket(WorkloadBucket(1600, 24), 2.0)], "a10",
+        total_engines=4, slo_ttft_s=0.5, slo_itl_s=0.05)
+    heavy_d = split_roles(
+        table, [DemandBucket(WorkloadBucket(96, 280), 2.0)], "a10",
+        total_engines=4, slo_ttft_s=0.5, slo_itl_s=0.05)
+    assert heavy_p.n_prefill + heavy_p.n_decode == 4
+    assert heavy_d.n_prefill + heavy_d.n_decode == 4
+    assert heavy_p.n_prefill > heavy_d.n_prefill
+    assert heavy_p.n_prefill >= 1 and heavy_p.n_decode >= 1
+    assert heavy_d.spec == f"{heavy_d.n_prefill}P{heavy_d.n_decode}D"
+    # unconstrained sizing reflects the load directly
+    free = split_roles(table,
+                       [DemandBucket(WorkloadBucket(1600, 24), 8.0)],
+                       "a10", slo_itl_s=0.05)
+    assert free.n_prefill >= free.prefill_load
+
+
+# ------------------------------------------------------- manager mechanics
+def _sim_group(roles, loop=None, **eng_kw):
+    cfg = get_config("deepseek-coder-7b")
+    loop = loop or EventLoop()
+    pool = DistributedKVPool(capacity_bytes=32 << 30, metadata_lag=0.002,
+                             network_bw=100e9, clock=loop.clock)
+    mgr = RolePoolManager(clock=loop.clock)
+    kw = dict(device_type="a10", max_batch=16, chunk_size=512)
+    kw.update(eng_kw)
+    for i, role in enumerate(roles):
+        sc = SimEngineConfig(role=role, **kw)
+        eng = SimEngine(cfg, loop, sc, kv_pool=pool,
+                        engine_id=f"engine-{i}", node=f"node-{i}")
+        mgr.add_engine(f"engine-{i}", eng, role)
+    return mgr, loop
+
+
+def _sim_req(rng, plen=600, out=8):
+    return Request(prompt_tokens=rng.integers(0, 32000, plen).tolist(),
+                   sampling=SamplingParams(max_new_tokens=out))
+
+
+def test_manager_migration_drains_and_flips():
+    """P->D migration: the draining member admits nothing new, its
+    queued work is re-delivered to the other prefill member, in-flight
+    prefills finish through the pool handoff, and the role flips only
+    once drained."""
+    mgr, loop = _sim_group(["prefill", "prefill", "decode"])
+    loop.every(0.25, lambda: mgr.poll(loop.clock.now))
+    rng = np.random.default_rng(0)
+    reqs = [_sim_req(rng) for _ in range(10)]
+    for r in reqs:
+        mgr.submit(r)
+    loop.run(until=0.5, stop_when=lambda: loop.clock.now >= 0.4)
+    victim = mgr.engines["engine-0"]
+    mig = mgr.request_migration("prefill", "decode", loop.clock.now,
+                                engine_id="engine-0")
+    assert mig is not None and not mig.done
+    assert mgr.role_of("engine-0") == "draining"
+    assert victim.sched.draining
+    # drained waiting queue went back to the control plane
+    assert not victim.sched.waiting
+    loop.run(until=1e6, stop_when=lambda: (
+        not any(e.has_work for e in mgr.engines.values())
+        and not mgr.draining))
+    assert mig.done
+    assert mgr.role_of("engine-0") == "decode"
+    assert victim.sched.scfg.role == "decode"
+    assert not victim.sched.draining
+    assert mgr.counts()["prefill"] == 1 and mgr.counts()["decode"] == 2
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    # the flipped member now takes handoffs like any decoder
+    assert "engine-0" in mgr.decoders()
+
+
+def test_manager_refuses_draining_last_member():
+    """Never drain the last frontend or the last decoder."""
+    mgr, loop = _sim_group(["prefill", "decode"])
+    assert mgr.request_migration("prefill", "decode", 0.0) is None
+    assert mgr.request_migration("decode", "prefill", 0.0) is None
+    assert not mgr.draining
+
+
+# ------------------------------------------------------- rebalance loop
+def test_rebalance_converges_both_directions():
+    """Attainment-driven rebalancing on the phase-shifting cluster
+    scenario: the prefill-heavy phase pulls a decode member into the
+    prefill pool (D->P), the decode-heavy phase pushes prefill members
+    out (P->D), and the auto run finishes everything it was offered."""
+    cfg = get_config("deepseek-coder-7b")
+    ccfg = ClusterConfig(
+        routing_policy="least-request", num_engines=4,
+        engine=SimEngineConfig(device_type="a10", max_batch=32,
+                               chunk_size=512, mixed_batching=True,
+                               max_prefills=2),
+        roles="auto",
+        rebalance=RebalanceConfig(period_s=5.0, cooldown_s=60.0,
+                                  warmup_s=30.0),
+        kv_pool_bw=100e9, rate_limit=RateLimit(rpm=1e8, tpm=1e12))
+    cluster = ServingCluster(cfg, ccfg)
+    wl = phase_shift(duration_s=200.0, seed=5)
+    s = cluster.run(wl, drain_s=300.0)
+    dirs = {(m.src, m.dst) for m in cluster.pool_mgr.migrations}
+    assert ("decode", "prefill") in dirs     # prefill-heavy phase
+    assert ("prefill", "decode") in dirs     # decode-heavy phase
+    assert s["migrations"] >= 2
+    assert s["finished"] == len(wl)
+    # every migration completed a full drain before flipping
+    assert all(m.done for m in cluster.pool_mgr.migrations)
+
+
+def test_per_pool_autoscaler_decisions_independent():
+    """One autoscaler instance per pool: the prefill scaler reacts only
+    to TTFT attainment, the decode scaler only to ITL attainment."""
+    rb = AttainmentRebalancer(RebalanceConfig())
+    for t in range(0, 30):
+        rb.store.record(float(t), "pool_ttft_attainment", 0.5)  # bad
+        rb.store.record(float(t), "pool_itl_attainment", 1.0)   # perfect
+
+    class _FakeMgr:
+        pools = {"prefill": {"p0": None, "p1": None},
+                 "decode": {"d0": None, "d1": None}, "mixed": {}}
+
+    want = rb.desired(30.0, _FakeMgr())
+    assert want["prefill"] > 2          # TTFT misses -> grow P pool
+    assert want["decode"] <= 2          # perfect ITL -> no D growth
+    # flipped signals -> flipped decisions, same instances
+    for t in range(30, 120):
+        rb.store.record(float(t), "pool_ttft_attainment", 1.0)
+        rb.store.record(float(t), "pool_itl_attainment", 0.5)
+    want = rb.desired(120.0, _FakeMgr())
+    assert want["decode"] > 2
+    assert want["prefill"] <= 2
+
+
+# ------------------------------------------------------- sim mixed batching
+def test_sim_engine_mixed_batching_completes():
+    """SimEngine with mixed_batching=True runs the fused-step pricing
+    path (decode rows + prefill chunks in one priced pass) and drains a
+    workload with correct finish accounting."""
+    cfg = get_config("deepseek-coder-7b")
+    loop = EventLoop()
+    eng = SimEngine(cfg, loop,
+                    SimEngineConfig(device_type="a10", max_batch=8,
+                                    chunk_size=256, mixed_batching=True,
+                                    max_prefills=2))
+    assert eng.sched.scfg.mixed_batching
+    rng = np.random.default_rng(1)
+    reqs = [_sim_req(rng, plen=500 + 50 * i, out=12) for i in range(6)]
+    for i, r in enumerate(reqs):
+        loop.schedule(0.05 * i, lambda r=r: eng.submit(r))
+    loop.run(until=1e6, stop_when=lambda: not eng.has_work)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(len(r.output_tokens) == 12 for r in reqs)
+    m = eng.metrics()
+    assert m.finished_requests == 6
+
+
+# ------------------------------------------------------- real-JAX migration
+def test_real_engine_migration_byte_identical():
+    """Extends the PR-2 1P+1D smoke with LIVE migration: a 2P+1D real
+    JAX group serves a request whose prefill is mid-stream when its
+    engine is told to become a decoder — the in-flight prefill finishes
+    and hands off through the pool, the engine flips, and a follow-up
+    request decodes on the migrated member.  All outputs byte-identical
+    to a colocated engine with the same parameters."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    t0 = time.monotonic()
+    clock = lambda: time.monotonic() - t0    # noqa: E731
+    pool = DistributedKVPool(capacity_bytes=1 << 30, metadata_lag=0.0,
+                             clock=clock)
+    mgr = RolePoolManager(clock=clock)
+    engines = {}
+    for eid, role in (("p0", "prefill"), ("p1", "prefill"),
+                      ("d0", "decode")):
+        engines[eid] = InferenceEngine(
+            cfg, EngineConfig(role=role, **ENGINE_KW), clock=clock,
+            kv_pool_client=pool, engine_id=eid, seed=0)
+        mgr.add_engine(eid, engines[eid], role)
+    rng = np.random.default_rng(34)
+    prompt_a = rng.integers(0, cfg.vocab_size, 40).tolist()
+    prompt_b = rng.integers(0, cfg.vocab_size, 24).tolist()
+    req_a = Request(prompt_tokens=list(prompt_a),
+                    sampling=SamplingParams(max_new_tokens=6))
+    engines["p0"].submit(req_a)
+    engines["p0"].step()                     # mid-prefill (40 > chunk 16)
+    assert engines["p0"].prefills
+    mig = mgr.request_migration("prefill", "decode", clock(),
+                                engine_id="p0")
+    assert mig is not None
+    # new work routes around the draining member
+    assert list(mgr.frontends()) == ["p1"]
+    req_b = Request(prompt_tokens=list(prompt_b),
+                    sampling=SamplingParams(max_new_tokens=6))
+    mgr.submit(req_b)
+    for _ in range(300):
+        busy = False
+        for eng in engines.values():
+            if eng.has_work:
+                eng.step()
+                busy = True
+        mgr.poll(clock())
+        if not busy and not mgr.draining:
+            break
+    assert mig.done
+    assert engines["p0"].sched.scfg.role == "decode"
+    assert mgr.counts()["prefill"] == 1 and mgr.counts()["decode"] == 2
+    assert req_a.state == RequestState.FINISHED
+    assert req_b.state == RequestState.FINISHED
+    # req_a's prefill finished on the DRAINING p0 and was handed off
+    assert req_a not in engines["p0"].finished
+    # byte-identical to a colocated engine with the same params
+    for prompt, req in ((prompt_a, req_a), (prompt_b, req_b)):
+        ref_eng = InferenceEngine(cfg, EngineConfig(**ENGINE_KW), seed=0)
+        ref = Request(prompt_tokens=list(prompt),
+                      sampling=SamplingParams(max_new_tokens=6))
+        ref_eng.submit(ref)
+        ref_eng.run_until_idle()
+        assert req.output_tokens == ref.output_tokens

@@ -128,6 +128,46 @@ def test_sim_real_admission_parity():
     assert admit_order(real_reqs) == admit_order(sim_reqs)
 
 
+def test_sim_real_admission_parity_mixed_batching():
+    """The fused mixed-batch mode now also runs under the SimEngine
+    (roofline-priced `B + K*chunk` steps): identical workloads admit in
+    the same order through the SAME shared Scheduler on the real engine
+    and the simulator with mixed_batching=True on both."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    rng = np.random.default_rng(37)
+    prompts = [rng.integers(0, cfg.vocab_size, 12 + 4 * i).tolist()
+               for i in range(5)]
+
+    _, eng = _engine(mixed_batching=True, max_prefills=2)
+    real_reqs = [Request(prompt_tokens=list(p),
+                         sampling=SamplingParams(max_new_tokens=2))
+                 for p in prompts]
+    for r in real_reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+
+    loop = EventLoop()
+    sim = SimEngine(get_reduced_config("qwen3-0.6b"), loop,
+                    SimEngineConfig(device_type="a10",
+                                    mixed_batching=True, max_prefills=2))
+    assert sim.sched.scfg.mixed_batching
+    sim_reqs = [Request(prompt_tokens=list(p),
+                        sampling=SamplingParams(max_new_tokens=2),
+                        arrival_time=0.0)
+                for p in prompts]
+    for r in sim_reqs:
+        sim.submit(r)
+    loop.run(until=1e6, stop_when=lambda: not sim.has_work)
+
+    def admit_order(reqs):
+        return sorted(range(len(reqs)),
+                      key=lambda i: (reqs[i].schedule_time, i))
+
+    assert all(r.state == RequestState.FINISHED for r in real_reqs)
+    assert all(r.state == RequestState.FINISHED for r in sim_reqs)
+    assert admit_order(real_reqs) == admit_order(sim_reqs)
+
+
 # ------------------------------------------------- real P/D disaggregation
 def test_real_engine_pd_disagg_smoke():
     """1 prefill + 1 decode REAL JAX engine around the distributed KV
