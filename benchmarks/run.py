@@ -15,9 +15,10 @@ import time
 import traceback
 
 from benchmarks import (bench_autoscaling, bench_coldstart, bench_hetero,
-                        bench_kernels, bench_kvcache, bench_lora,
-                        bench_pd_disagg, bench_pd_pools, bench_routing,
-                        bench_slo, roofline)
+                        bench_kernels, bench_kv_tiers, bench_kvcache,
+                        bench_lora, bench_pd_disagg, bench_pd_pools,
+                        bench_routing, bench_slo, roofline)
+from repro.core.gateway.gateway import Gateway
 
 SUITES = [
     ("table1_distributed_kvcache", bench_kvcache.main),
@@ -28,6 +29,7 @@ SUITES = [
     ("high_density_lora", bench_lora.main),
     ("pd_disaggregation_via_pool", bench_pd_disagg.main),
     ("pd_role_pools_rebalancing", bench_pd_pools.main),
+    ("kv_tiers_swap_and_streaming", bench_kv_tiers.main),
     ("slo_aware_scheduling", bench_slo.main),
     ("pallas_kernels", bench_kernels.main),
     ("roofline_from_dryrun", lambda quick=False: roofline.main("", quick)),
@@ -47,9 +49,15 @@ def main() -> None:
             continue
         print(f"\n===== {name} " + "=" * max(8, 60 - len(name)))
         t0 = time.time()
+        shed0 = Gateway.total_shed
         try:
             fn(quick=args.quick)
-            print(f"----- {name} done in {time.time()-t0:.1f}s")
+            # loud load shedding: a suite whose gateway rate limiter
+            # silently dropped requests must say so next to its results
+            # (it served LESS than the offered load it reports against)
+            shed = Gateway.total_shed - shed0
+            note = f" [gateway shed {shed} request(s)!]" if shed else ""
+            print(f"----- {name} done in {time.time()-t0:.1f}s{note}")
         except Exception:
             traceback.print_exc()
             failures.append(name)

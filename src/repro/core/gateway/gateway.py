@@ -19,11 +19,14 @@ migrated pod can never be picked from stale state.
 from __future__ import annotations
 
 import collections
+import logging
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gateway.router import RoutingPolicy, make_policy
 from repro.engine.scheduler import FRONTEND_ROLES
+
+log = logging.getLogger("repro.gateway")
 
 
 @dataclass
@@ -55,9 +58,22 @@ class GatewayStats:
     rejected_tpm: int = 0
     per_engine: Dict[str, int] = field(default_factory=dict)
 
+    @property
+    def shed(self) -> int:
+        """Requests the rate limiter dropped (they never reached an
+        engine — a bench that ignores this under-reports its load)."""
+        return self.rejected_rpm + self.rejected_tpm
+
 
 class Gateway:
     FRONTEND_POOLS = FRONTEND_ROLES    # shared role taxonomy
+    SHED_LOG_WINDOW_S = 10.0           # at most one shed log per window
+    # process-wide shed counter across every Gateway instance —
+    # benchmarks/run.py prints the per-suite delta so a bench whose
+    # offered load the rate limiter silently halved cannot pass as
+    # having served it (sim benches >10 rps must raise
+    # ClusterConfig.rate_limit or their requests vanish here)
+    total_shed: int = 0
 
     def __init__(self, policy: str = "least-request",
                  default_limit: RateLimit = None,
@@ -73,6 +89,13 @@ class Gateway:
         self.stats = GatewayStats()
         # workload histogram for the GPU optimizer's Load Monitor
         self.request_log: collections.deque = collections.deque(maxlen=4096)
+        # loud load shedding: sheds accumulate here and are logged at
+        # most once per SHED_LOG_WINDOW_S (first shed logs immediately;
+        # _shed_t0 stamps the accumulation start so the log line
+        # reports the real span even after an idle gap)
+        self._shed_window = 0
+        self._shed_t0 = 0.0
+        self._shed_log_at = float("-inf")
 
     # -------------------------------------------------------------- admin
     def register_engine(self, engine_id: str, handle,
@@ -137,9 +160,11 @@ class Gateway:
         rpm, tpm = self._buckets(user)
         if not rpm.allow(1.0, now):
             self.stats.rejected_rpm += 1
+            self._note_shed(user, now)
             return None
         if not tpm.allow(len(tokens) + est_output_tokens, now):
             self.stats.rejected_tpm += 1
+            self._note_shed(user, now)
             return None
         eid = self.policy.select(targets, tokens, lora_adapter,
                                  priority_class=priority_class)
@@ -148,6 +173,25 @@ class Gateway:
         self.request_log.append(
             (now, len(tokens), est_output_tokens, user, eid))
         return eid
+
+    def _note_shed(self, user: str, now: float) -> None:
+        """Rate-limit drops must be LOUD: count them (instance +
+        process-wide) and log once per window with the running totals,
+        so a workload the limiter is silently halving shows up in bench
+        output instead of just reading as light load."""
+        Gateway.total_shed += 1
+        if self._shed_window == 0:
+            self._shed_t0 = now
+        self._shed_window += 1
+        if now >= self._shed_log_at:
+            log.warning(
+                "gateway shed %d request(s) over the last %.1fs "
+                "(user=%s; totals: rpm=%d tpm=%d) — raise RateLimit if "
+                "this load is intended",
+                self._shed_window, max(now - self._shed_t0, 0.0), user,
+                self.stats.rejected_rpm, self.stats.rejected_tpm)
+            self._shed_window = 0
+            self._shed_log_at = now + self.SHED_LOG_WINDOW_S
 
     # -------------------------------------------------------------- stats
     def workload_histogram(self, in_edges=(200, 1000, 4000),

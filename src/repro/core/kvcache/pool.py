@@ -183,6 +183,13 @@ class DistributedKVPool:
             self.stats.bytes_transferred += blk.size_bytes
         return blk.payload if blk.payload is not None else True
 
+    def size_of(self, block_hash: str) -> int:
+        """Stored wire size of a visible block (0 when unknown) — what
+        a fetch of it actually moves (int8-compressed payloads are
+        smaller than the raw page)."""
+        blk = self.blocks.get(block_hash)
+        return blk.size_bytes if blk is not None else 0
+
     def fetch_cost_s(self, block_hash: str, engine_id: str) -> float:
         """Transfer-time model for the simulator (s)."""
         blk = self.blocks.get(block_hash)

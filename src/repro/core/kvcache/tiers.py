@@ -1,0 +1,196 @@
+"""KV placement tiers below device HBM (host DRAM) + the wire format.
+
+The device ``PagePool`` (repro.engine.paged_model) and the cluster
+``DistributedKVPool`` (repro.core.kvcache.pool) used to be the only two
+homes a KV page could have, with nothing in between: a device eviction
+dropped the bytes on the floor and a preemption recomputed from token 0.
+This module adds the missing middle tier and the compressed wire format
+the pool handoff path speaks:
+
+``HostPagePool``
+    A bounded host-DRAM page store, content-addressed by the SAME block
+    hashes as the device prefix cache and the distributed pool, so the
+    admission page walk can check device -> host -> distributed in
+    order.  It is fed two ways: the :class:`~repro.engine.page_table.
+    PageAllocator` eviction cascade (victims fall into this tier
+    instead of vanishing) and swap-based preemption (a preempted
+    request's pages — prompt AND generated — park here under per-
+    request swap keys until resume).  Eviction is LRU; an SSD third
+    tier below it is a ROADMAP follow-up.
+
+int8 wire compression (``compress_page`` / ``decompress_page``)
+    The distributed-pool handoff path quantizes page payloads to int8
+    with per-layer max-abs scales before they cross the wire and
+    dequantizes on install.  Round-trip error is bounded by
+    ``INT8_WIRE_MAX_REL_ERR`` times the per-layer max-abs value
+    (pinned by tests/test_kv_tiers.py).  Host-tier entries are NOT
+    compressed — the swap path must be byte-identical.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+# pinned round-trip bound: |x - dequant(quant(x))| <= this * max|x| per
+# scale group (symmetric int8 with round-to-nearest => half an LSB)
+INT8_WIRE_MAX_REL_ERR = 0.5 / 127.0
+
+# shared wire-format vocabulary: "int8" compresses; the "fp*" spellings
+# all mean raw payloads ("fp" on the real engine — its pool arrays keep
+# their native dtype — and "fp16" on the simulator, matching the
+# roofline's kv_dtype_bytes).  Anything else is a typo that would
+# otherwise silently disable compression.
+WIRE_DTYPES = ("fp", "fp16", "fp32", "int8")
+
+
+def validate_wire_dtype(name: str) -> str:
+    if name not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire_dtype {name!r}; expected one of "
+                         f"{WIRE_DTYPES}")
+    return name
+
+
+# --------------------------------------------------------------- wire format
+@dataclass
+class CompressedPage:
+    """One page's (k, v) arrays quantized to int8 with per-layer scales.
+
+    ``q_k``/``q_v`` keep the payload shape (L, page, Hkv, D); the scales
+    are (L, 1, 1, 1) so dequantization is a single broadcast multiply.
+    """
+    q_k: np.ndarray
+    q_v: np.ndarray
+    k_scale: np.ndarray
+    v_scale: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.q_k.nbytes + self.q_v.nbytes
+                   + self.k_scale.nbytes + self.v_scale.nbytes)
+
+
+def _quant(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    x = np.asarray(x, np.float32)
+    axes = tuple(range(1, x.ndim))
+    scale = np.max(np.abs(x), axis=axes, keepdims=True) / 127.0
+    scale = np.maximum(scale, 1e-12).astype(np.float32)
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def compress_page(k_page, v_page) -> CompressedPage:
+    """Quantize one page payload for the pool wire (int8 + scales)."""
+    q_k, k_scale = _quant(k_page)
+    q_v, v_scale = _quant(v_page)
+    return CompressedPage(q_k, q_v, k_scale, v_scale)
+
+
+def decompress_page(cp: CompressedPage) -> Tuple[np.ndarray, np.ndarray]:
+    return (cp.q_k.astype(np.float32) * cp.k_scale,
+            cp.q_v.astype(np.float32) * cp.v_scale)
+
+
+def payload_nbytes(payload: Any, default: int = 0) -> int:
+    """Best-effort wire size of a page payload: CompressedPage and
+    (k, v) array tuples know their bytes; opaque payloads (the
+    simulator's ``True``) fall back to ``default``."""
+    if isinstance(payload, CompressedPage):
+        return payload.nbytes
+    if isinstance(payload, tuple):
+        n = sum(int(getattr(p, "nbytes", 0)) for p in payload)
+        if n:
+            return n
+    return int(default)
+
+
+# ---------------------------------------------------------------- host tier
+@dataclass
+class HostTierStats:
+    puts: int = 0
+    dup_puts: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_stored: int = 0
+    bytes_offloaded: int = 0     # cumulative bytes written into the tier
+
+
+class HostPagePool:
+    """Bounded host-DRAM page tier between device HBM and the cluster
+    pool.  Content-addressed (block hashes for cascade-evicted cache
+    pages, ``swap/<rid>/<i>`` keys for swapped-out requests), LRU-
+    evicting, payload-agnostic (real engines store raw (k, v) arrays —
+    the swap path must be byte-identical, so host entries are never
+    quantized; the simulator stores ``True`` and prices transfers with
+    ``dram_bw``)."""
+
+    def __init__(self, capacity_bytes: int = 4 << 30,
+                 dram_bw: float = 50e9):
+        self.capacity_bytes = int(capacity_bytes)
+        self.dram_bw = dram_bw
+        # key -> (payload, size_bytes); dict order == LRU order
+        self._entries: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()
+        self.stats = HostTierStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def can_hold(self, nbytes: int) -> bool:
+        """Whether ``nbytes`` could ever fit (evicting everything else
+        if needed) — the swap-out feasibility check."""
+        return nbytes <= self.capacity_bytes
+
+    def contains(self, key: str) -> bool:
+        return key in self._entries
+
+    @property
+    def utilization(self) -> float:
+        return self.stats.bytes_stored / max(self.capacity_bytes, 1)
+
+    def keys(self):
+        return list(self._entries)
+
+    # ------------------------------------------------------------ put/get
+    def put(self, key: str, payload: Any, size_bytes: int,
+            now: float = 0.0) -> bool:
+        """Insert (or refresh) an entry; returns False when it cannot
+        fit even after evicting every other entry."""
+        size_bytes = int(size_bytes)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.stats.dup_puts += 1
+            return True
+        if size_bytes > self.capacity_bytes:
+            return False
+        while (self.stats.bytes_stored + size_bytes
+               > self.capacity_bytes) and self._entries:
+            _, (_, sz) = self._entries.popitem(last=False)
+            self.stats.bytes_stored -= sz
+            self.stats.evictions += 1
+        self._entries[key] = (payload, size_bytes)
+        self.stats.bytes_stored += size_bytes
+        self.stats.puts += 1
+        self.stats.bytes_offloaded += size_bytes
+        return True
+
+    def get(self, key: str, now: float = 0.0) -> Optional[Any]:
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return ent[0]
+
+    def discard(self, key: str) -> None:
+        """Remove an entry without hit/miss accounting — swap-in holds
+        the payloads it ``get()``-ed (so a cascade eviction racing the
+        page allocation cannot invalidate them) and discards the keys
+        only after the installs succeed."""
+        ent = self._entries.pop(key, None)
+        if ent is not None:
+            self.stats.bytes_stored -= ent[1]

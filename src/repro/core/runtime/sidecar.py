@@ -110,6 +110,14 @@ class AIRuntime:
             # role-pool rebalancer) can target
             "slo_attainment": float(m.slo_attainment),
             "slo_itl_attainment": float(m.slo_itl_attainment),
+            # tiered-KV transfer accounting: host-tier pressure signals
+            # for the rebalancer and dashboards (device->host offload
+            # bytes, host/pool->device fetch bytes, swap traffic)
+            "kv_bytes_offloaded": float(m.kv_bytes_offloaded),
+            "kv_bytes_fetched": float(m.kv_bytes_fetched),
+            "swap_out": float(m.swap_out),
+            "swap_in": float(m.swap_in),
+            "host_hit_tokens": float(m.host_hit_tokens),
         }
 
     # ------------------------------------------------- engine management

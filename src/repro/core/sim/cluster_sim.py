@@ -272,6 +272,9 @@ class ServingCluster:
     def summary(self) -> dict:
         s = summarize(self.all_requests)
         s["rejected"] = self.rejected
+        # loud load shedding: surface the gateway's rate-limit drops in
+        # every cluster summary so benches can't under-report load
+        s["shed_requests"] = self.gateway.stats.shed
         s["routing_policy"] = self.ccfg.routing_policy
         if self.kv_pool is not None:
             st = self.kv_pool.stats
@@ -282,6 +285,12 @@ class ServingCluster:
         s["prefix_hit_tokens"] = sum(m.prefix_hit_tokens for m in agg)
         s["remote_hit_tokens"] = sum(m.remote_hit_tokens for m in agg)
         s["preemptions"] = sum(m.preemptions for m in agg)
+        # tiered-KV pressure: host-tier hits, swap traffic, wire bytes
+        s["host_hit_tokens"] = sum(m.host_hit_tokens for m in agg)
+        s["swap_out"] = sum(m.swap_out for m in agg)
+        s["swap_in"] = sum(m.swap_in for m in agg)
+        s["kv_bytes_offloaded"] = sum(m.kv_bytes_offloaded for m in agg)
+        s["kv_bytes_fetched"] = sum(m.kv_bytes_fetched for m in agg)
         if self.disaggregated:
             s["pool_counts"] = {p: len(m)
                                 for p, m in self.pool_mgr.pools.items()

@@ -37,6 +37,7 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.kvcache.tiers import HostPagePool, validate_wire_dtype
 from repro.core.optimizer.profiles import DEVICES, PerfModel
 from repro.core.sim.events import EventLoop
 from repro.engine.page_table import PageAllocator, chunk_hashes
@@ -69,6 +70,18 @@ class SimEngineConfig:
     #             off (never decodes)
     #   decode  — pulls prefilled KV from the pool, decodes only
     role: str = "mixed"
+    # tiered KV cache: host-DRAM tier capacity (0 disables — no
+    # eviction cascade, drop-and-recompute preemption), the pool wire
+    # format ("fp16" matches the roofline's kv_dtype_bytes; "int8"
+    # halves the wire bytes) and the streaming-handoff chunk size in
+    # pages (0 => eager whole-payload transfer)
+    host_cache_gb: float = 0.0
+    wire_dtype: str = "fp16"
+    handoff_chunk_pages: int = 4
+    swap_preemption: bool = True
+    # 0 => size the device page count from HBM minus params (default);
+    # a positive override pins it (small-KV preemption benchmarks)
+    num_pages: int = 0
     # SLO-aware scheduling — the SAME policy knobs as the real engine,
     # handled by the shared Scheduler (deadline-aware admission order,
     # priority preemption, per-class attainment accounting)
@@ -92,6 +105,8 @@ class SimEngineConfig:
             mixed_batching=self.mixed_batching,
             max_prefills=self.max_prefills if self.mixed_batching else 1,
             token_budget=self.token_budget,
+            handoff_chunk_pages=self.handoff_chunk_pages,
+            swap_preemption=self.swap_preemption,
             honor_stop_token=False,     # sim decode tokens are
             role=self.role,             # synthetic zeros
             slo_aware=self.slo_aware,
@@ -119,14 +134,28 @@ class SimEngine:
         self._speed = nd * (0.9 if nd > 1 else 1.0)
         kv_budget = max(dev.hbm_bytes * 0.9 * nd
                         - self.perf.param_bytes, dev.hbm_bytes * 0.05)
-        num_pages = int(kv_budget
-                        / (self.perf.kv_bytes_per_token * self.sc.page_size))
+        num_pages = self.sc.num_pages or int(
+            kv_budget / (self.perf.kv_bytes_per_token * self.sc.page_size))
+        # raw per-page payload bytes + the wire size a pool handoff
+        # actually moves (int8 quantization halves the fp16 roofline)
+        self._page_bytes = int(self.perf.kv_bytes_per_token
+                               * self.sc.page_size)
+        self._wire_bytes = (self._page_bytes // 2
+                            if validate_wire_dtype(self.sc.wire_dtype)
+                            == "int8" else self._page_bytes)
+        self.host_pool = None
+        if self.sc.host_cache_gb > 0:
+            self.host_pool = HostPagePool(
+                capacity_bytes=int(self.sc.host_cache_gb * (1 << 30)))
         self.sched = Scheduler(
             self.sc.scheduler_config(),
             PageAllocator(max(num_pages, 16), self.sc.page_size),
             kv_pool=kv_pool, engine_id=engine_id,
             install_page=self._install_page,
-            publish_page=self._publish_page)
+            publish_page=self._publish_page,
+            host_pool=self.host_pool,
+            page_payload=(lambda pid: True),    # sim: cost model only
+            page_bytes=self._page_bytes)
         self.slowdown_fn: Callable[[], float] = lambda: 1.0
         self._busy = False
         self._adapters: set = set()
@@ -190,23 +219,31 @@ class SimEngine:
             self.loop.after(0.0, self._iterate)
 
     def _install_page(self, pid: int, payload, req: Request,
-                      now: float) -> None:
-        """Payload hook for the shared Scheduler's pool walk: the sim
+                      now: float, source: str = "pool",
+                      stream: bool = False, nbytes: int = 0) -> None:
+        """Payload hook for the shared Scheduler's page walk: the sim
         stores no arrays — each fetched page attributes a transfer-time
-        cost to the request (paid once at admit — pipelined
-        transfers)."""
-        req._remote_fetch_s = (               # type: ignore[attr-defined]
-            getattr(req, "_remote_fetch_s", 0.0)
-            + self.perf.kv_bytes_per_token * self.sc.page_size
-            / self.kv_pool.network_bw)
+        cost to the request.  Host-tier pages move raw bytes at
+        ``dram_bw``; pool pages move wire bytes (int8-compressed when
+        configured) at ``network_bw``.  Head-group pages charge
+        ``_fetch_head_s`` (they gate the tail recompute); streamed
+        groups charge ``_fetch_stream_s``, which ``_iterate`` overlaps
+        with the step's compute — the chunked-handoff pipeline."""
+        nbytes = nbytes or self._page_bytes
+        if source == "host":
+            cost = nbytes / self.host_pool.dram_bw
+        else:
+            cost = nbytes / self.kv_pool.network_bw
+        attr = "_fetch_stream_s" if stream else "_fetch_head_s"
+        setattr(req, attr, getattr(req, attr, 0.0) + cost)
 
     def _publish_page(self, pid: int, block_hash: str, req: Request,
                       now: float) -> None:
         """Payload hook for the shared prompt-page registration: the
-        sim publishes a payload-less record sized by the cost model."""
-        self.kv_pool.publish(
-            block_hash, True, self.engine_id, now,
-            size_bytes=self.perf.kv_bytes_per_token * self.sc.page_size)
+        sim publishes a payload-less record sized by the cost model
+        (wire bytes — the int8 format halves them)."""
+        self.kv_pool.publish(block_hash, True, self.engine_id, now,
+                             size_bytes=self._wire_bytes)
 
     def _iterate(self) -> None:
         now = self.loop.clock.now
@@ -218,25 +255,34 @@ class SimEngine:
         if not (out.prefills or out.decode):
             self._busy = False
             return
-        dt = self.sc.scheduler_overhead_s
         batch = out.decode
         chunk_total = sum(w.chunk_len for w in out.prefills)
-        for w in out.prefills:
-            dt += getattr(w.req, "_remote_fetch_s", 0.0)
-            w.req._remote_fetch_s = 0.0     # type: ignore[attr-defined]
+        # transfer charges from the page walk / swap-in: head bytes
+        # gate the step (the engine cannot attend over pages that have
+        # not landed), streamed chunk groups overlap with the step's
+        # compute — effective cost max(compute, stream), the chunked-
+        # handoff pipeline (eager mode puts everything in head)
+        head = stream = 0.0
+        for r in [w.req for w in out.prefills] + list(batch):
+            head += getattr(r, "_fetch_head_s", 0.0)
+            stream += getattr(r, "_fetch_stream_s", 0.0)
+            r._fetch_head_s = 0.0           # type: ignore[attr-defined]
+            r._fetch_stream_s = 0.0         # type: ignore[attr-defined]
         if batch and out.prefills:
             # fused mixed batch: decode rows + budget-trimmed prefill
             # chunks in ONE pass, one roofline over the token batch
             ctx = sum(r.total_tokens for r in batch) / len(batch)
-            dt += self.perf.mixed_step_time(len(batch), ctx, chunk_total) \
+            comp = self.perf.mixed_step_time(len(batch), ctx,
+                                             chunk_total) \
                 / (self._speed * slow)
         elif out.prefills:
-            dt += self.perf.prefill_time(chunk_total) \
+            comp = self.perf.prefill_time(chunk_total) \
                 / (self._speed * slow)
         else:
             ctx = sum(r.total_tokens for r in batch) / len(batch)
-            dt += self.perf.decode_step_time(len(batch), ctx) \
+            comp = self.perf.decode_step_time(len(batch), ctx) \
                 / (self._speed * slow)
+        dt = self.sc.scheduler_overhead_s + head + max(comp, stream)
         done_t = now + dt
         for w in out.prefills:
             if w.chunk_len == 0:
@@ -278,10 +324,9 @@ class SimEngine:
         # publish every full block of (prompt + generated) tokens
         seq = list(req.prompt_tokens) + [0] * len(req.output_tokens)
         hashes = chunk_hashes(seq, self.sc.page_size)
-        size = self.perf.kv_bytes_per_token * self.sc.page_size
         for h in hashes:
             self.kv_pool.publish(h, True, self.engine_id, now,
-                                 size_bytes=size)
+                                 size_bytes=self._wire_bytes)
         self.sched.drop_running(req, now)
         # target treats the full sequence-so-far as its "prompt": the
         # generated tokens keep their identity via req.output_tokens

@@ -41,6 +41,9 @@ import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
+from repro.core.kvcache.tiers import (CompressedPage, HostPagePool,
+                                      compress_page, decompress_page,
+                                      validate_wire_dtype)
 from repro.engine import paged_model as PM
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request
@@ -70,6 +73,19 @@ class EngineConfig:
     token_budget: int = 0           # 0 => max_batch + max_prefills*chunk
     # -- P/D disaggregation --
     role: str = "mixed"             # mixed | prefill | decode
+    # -- tiered KV cache --
+    # host-DRAM tier capacity; 0 disables the tier (no eviction
+    # cascade, drop-and-recompute preemption — the pre-tier engine)
+    host_cache_gb: float = 0.0
+    # wire format for distributed-pool page payloads: "fp" publishes
+    # the raw arrays (byte-exact), "int8" quantizes with per-layer
+    # scales (≈4x fewer handoff bytes, parity within
+    # tiers.INT8_WIRE_MAX_REL_ERR of the per-layer max-abs)
+    wire_dtype: str = "fp"
+    # pool-handoff transfers stream in groups of this many pages
+    # (0 => eager whole-payload, the pre-tier behavior)
+    handoff_chunk_pages: int = 4
+    swap_preemption: bool = True    # swap to host tier when available
     # -- SLO-aware scheduling (scheduler.DEFAULT_SLO_CLASSES targets) --
     slo_aware: bool = False         # deadline-aware admission/preemption
     slo_classes: Optional[dict] = None      # None => scheduler defaults
@@ -93,6 +109,8 @@ class EngineConfig:
             mixed_batching=self.mixed_batching,
             max_prefills=self.max_prefills,
             token_budget=self.token_budget, role=self.role,
+            handoff_chunk_pages=self.handoff_chunk_pages,
+            swap_preemption=self.swap_preemption,
             slo_aware=self.slo_aware,
             slo_preempt_headroom=self.slo_preempt_headroom,
             slo_preempt_cooldown_s=self.slo_preempt_cooldown_s, **kw)
@@ -112,13 +130,23 @@ class InferenceEngine:
         self.engine_id = engine_id
         self.clock = clock
         self.kv_pool = kv_pool_client
+        validate_wire_dtype(ecfg.wire_dtype)
         self.runner = ModelRunner(cfg, ecfg, params=params, seed=seed)
+        # host-DRAM KV tier: device evictions cascade into it and
+        # preemption swaps to it instead of recomputing
+        self.host_pool = None
+        if ecfg.host_cache_gb > 0:
+            self.host_pool = HostPagePool(
+                capacity_bytes=int(ecfg.host_cache_gb * (1 << 30)))
         self.sched = Scheduler(
             ecfg.scheduler_config(),
             PageAllocator(ecfg.num_pages, ecfg.page_size),
             kv_pool=kv_pool_client, engine_id=engine_id,
             install_page=self._install_page,
-            publish_page=self._publish_page)
+            publish_page=self._publish_page,
+            host_pool=self.host_pool,
+            page_payload=self.runner.page_payload,
+            page_bytes=self.runner.page_bytes)
 
     # ----------------------------------------------------------- views
     @property
@@ -186,17 +214,30 @@ class InferenceEngine:
 
     # ------------------------------------------------------------- pool
     def _install_page(self, pid: int, payload, req: Request,
-                      now: float) -> None:
-        """Payload hook for the Scheduler's pool walk: write the
-        fetched (k_page, v_page) arrays into a local device page."""
+                      now: float, source: str = "pool",
+                      stream: bool = False, nbytes: int = 0) -> None:
+        """Payload hook for the Scheduler's page walk (pool OR host
+        tier): write the fetched (k_page, v_page) arrays into a local
+        device page, dequantizing compressed wire payloads first.  The
+        synchronous real data plane installs streamed chunks in place;
+        ``stream`` only changes the simulator's cost attribution."""
+        if isinstance(payload, CompressedPage):
+            payload = decompress_page(payload)
         self.runner.write_remote_page(pid, *payload)
 
     def _publish_page(self, pid: int, block_hash: str, req: Request,
                       now: float) -> None:
         """Payload hook for the Scheduler's prompt-page registration:
-        copy the page off-device and publish it under its block hash."""
-        self.kv_pool.publish(block_hash, self.runner.page_payload(pid),
-                             self.engine_id, now)
+        copy the page off-device and publish it under its block hash —
+        quantized to int8 with per-layer scales when the wire format
+        asks for it, so a handoff moves ~4x fewer bytes."""
+        payload = self.runner.page_payload(pid)
+        size = self.runner.page_bytes
+        if self.ecfg.wire_dtype == "int8":
+            payload = compress_page(*payload)
+            size = payload.nbytes
+        self.kv_pool.publish(block_hash, payload, self.engine_id, now,
+                             size_bytes=size)
 
     # ------------------------------------------------------------- step
     def step(self) -> int:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 def chunk_hashes(tokens: Sequence[int], page_size: int) -> List[str]:
@@ -53,6 +53,11 @@ class PageAllocator:
         self._cached_lru: Dict[int, float] = {}
         self.stats = {"allocated": 0, "cache_hits": 0, "cache_misses": 0,
                       "evictions": 0}
+        # eviction cascade hook: called as (page_id, block_hash, now)
+        # BEFORE a hash-indexed cached page is recycled, while its
+        # contents are still intact — the tiered-KV engine offloads the
+        # victim into the host-DRAM tier here instead of dropping it
+        self.on_evict: Optional[Callable[[int, str, float], None]] = None
 
     # ---------------------------------------------------------------- util
     @property
@@ -73,6 +78,8 @@ class PageAllocator:
             del self._cached_lru[pid]
             info = self.pages[pid]
             if info.block_hash:
+                if self.on_evict is not None:
+                    self.on_evict(pid, info.block_hash, now)
                 self.hash_index.pop(info.block_hash, None)
             info.block_hash = None
             self.stats["evictions"] += 1

@@ -31,6 +31,10 @@ class RequestState(Enum):
     RUNNING = "running"
     FINISHED = "finished"
     PREEMPTED = "preempted"
+    # preempted with its KV pages parked in the host-DRAM tier: resume
+    # swaps them back in and continues decoding from where it stopped
+    # instead of recomputing from token 0
+    SWAPPED = "swapped"
     FAILED = "failed"
 
 
@@ -54,6 +58,7 @@ class Request:
     cached_prefix_tokens: int = 0         # tokens served from prefix cache
     page_ids: List[int] = field(default_factory=list)
     slot: int = -1                        # slot-engine binding
+    preempt_count: int = 0                # times preempted (swap OR drop)
 
     # timestamps (engine clock)
     schedule_time: float = 0.0

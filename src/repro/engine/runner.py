@@ -239,12 +239,22 @@ class ModelRunner:
         return logits
 
     # ------------------------------------------------------- pool payloads
+    @property
+    def page_bytes(self) -> int:
+        """Raw (k + v) payload bytes of one page — what the host tier's
+        capacity accounting and the transfer counters charge."""
+        k = self.pool.k
+        return int(2 * k[:, 0].size * k.dtype.itemsize)
+
     def page_payload(self, pid: int):
-        """Materialize one page's (k, v) arrays for a pool publish —
-        the device→host copy the Scheduler's contains() gate avoids for
-        blocks the pool already knows."""
-        return (np.asarray(self.pool.k[:, pid]),
-                np.asarray(self.pool.v[:, pid]))
+        """Materialize one page's (k, v) arrays for a pool publish or a
+        host-tier offload — the device→host copy the Scheduler's
+        contains() gate avoids for blocks the pool already knows.
+        ``np.array`` forces a real copy: host-tier entries outlive this
+        step, and on CPU backends a zero-copy view could alias a
+        donated buffer the next jitted call overwrites in place."""
+        return (np.array(self.pool.k[:, pid]),
+                np.array(self.pool.v[:, pid]))
 
     def write_remote_page(self, pid: int, k_page, v_page) -> None:
         """Install a page payload fetched from the distributed pool."""

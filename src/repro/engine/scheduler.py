@@ -54,6 +54,24 @@ metric) can consume it even from FIFO engines.  Because all of this
 lives in the one shared Scheduler, the same SLO policy drives the real
 JAX engine, the simulator and the P/D role split with no duplication.
 
+Tiered KV placement (paper §3.2.5 + "KV cache offloading" line of work)
+-----------------------------------------------------------------------
+With a :class:`~repro.core.kvcache.tiers.HostPagePool` attached, KV
+pages have three homes checked in order by the admission page walk:
+device HBM (``PageAllocator`` prefix cache), host DRAM (the bounded
+tier this scheduler feeds via the allocator's eviction cascade and via
+swap-based preemption), and the cluster ``DistributedKVPool``.
+``preempt`` then *swaps* instead of discarding: the victim's pages —
+prompt and generated — are offloaded under per-request swap keys, the
+request parks in ``waiting`` as ``SWAPPED``, and ``_try_resume`` swaps
+the pages back in to continue decoding from ``prefill_done_tokens``
+(byte-identical to the never-preempted run) rather than re-prefilling
+from token 0.  Pool handoff transfers are chunked into page groups
+(``handoff_chunk_pages``): only the head group must land before the
+tail recompute starts; later groups are marked ``stream=True`` for the
+host to overlap (the simulator prices them against the step's compute,
+the real engine installs them synchronously).
+
 All bookkeeping methods take an explicit ``now`` so the same code runs
 under wall clock (real engines) and forward-dated discrete-event time
 (the simulator).
@@ -63,6 +81,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.kvcache.tiers import payload_nbytes
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
 
@@ -139,6 +158,13 @@ class EngineMetrics:
     # inter-token gaps within the class target) — the decode-pool
     # sizing signal for the role-pool rebalancer
     slo_itl_attainment: float = 1.0
+    # tiered-KV transfer accounting (host tier + pool wire): tier
+    # pressure signals for the rebalancer and dashboards
+    host_hit_tokens: int = 0        # admission tokens served from host tier
+    kv_bytes_offloaded: int = 0     # device -> host (cascade + swap-out)
+    kv_bytes_fetched: int = 0       # host/pool -> device (walk + swap-in)
+    swap_out: int = 0               # preemptions that swapped (not dropped)
+    swap_in: int = 0                # swapped requests resumed in place
 
 
 @dataclass
@@ -158,6 +184,16 @@ class SchedulerConfig:
     honor_stop_token: bool = True
     # -- P/D disaggregation --
     role: str = "mixed"             # mixed | prefill | decode
+    # -- tiered KV cache / streaming handoff --
+    # pool-handoff transfers are split into groups of this many pages;
+    # only the head group blocks the tail recompute, later groups are
+    # marked streamable for the host to overlap.  0 => eager whole-
+    # payload transfer (the pre-tier behavior).
+    handoff_chunk_pages: int = 4
+    # preemption offloads the victim's pages to the host tier (when one
+    # is attached) and resumes from where it stopped; False restores
+    # drop-and-recompute preemption even with a host tier present
+    swap_preemption: bool = True
     # -- SLO-aware scheduling --
     # False => FIFO admission (legacy).  True => deadline-aware
     # admission: strict priority rank across classes, earliest TTFT
@@ -371,13 +407,16 @@ class Scheduler(SchedulerCore):
     """The paged-KV scheduler: one admission/budget/role implementation
     for the real JAX engine AND the cluster simulator.
 
-    The distributed KV pool is consulted by the scheduler itself
-    (``kv_pool``/``engine_id``): the page walk — which blocks to ask
-    for, where to stop, allocation and hash registration — lives here,
-    once.  Only the payload handling differs per host, via
-    ``install_page(page_id, payload, req, now)``: the real engine
-    writes the fetched arrays into a device page, the simulator
-    attributes a transfer-time cost.
+    The KV tiers are consulted by the scheduler itself
+    (``host_pool``/``kv_pool``/``engine_id``): the page walk — which
+    blocks to ask for, in which tier, where to stop, allocation and
+    hash registration — lives here, once.  Only the payload handling
+    differs per host, via ``install_page(page_id, payload, req, now, *,
+    source="host"|"pool", stream=bool, nbytes=int)``: the real engine
+    writes the fetched arrays into a device page (ignoring the cost
+    hints), the simulator attributes a transfer-time cost from them.
+    ``page_payload(page_id)`` is the reverse hook (offload/publish
+    materialization).
     """
 
     ROLES = ("mixed", "prefill", "decode")
@@ -385,7 +424,9 @@ class Scheduler(SchedulerCore):
     def __init__(self, scfg: SchedulerConfig, alloc: PageAllocator,
                  kv_pool=None, engine_id: str = "engine-0",
                  install_page: Optional[Callable] = None,
-                 publish_page: Optional[Callable] = None):
+                 publish_page: Optional[Callable] = None,
+                 host_pool=None, page_payload: Optional[Callable] = None,
+                 page_bytes: int = 0):
         super().__init__(honor_stop_token=scfg.honor_stop_token,
                          slo_classes=scfg.slo_classes)
         if scfg.role not in self.ROLES:
@@ -397,6 +438,21 @@ class Scheduler(SchedulerCore):
         self.engine_id = engine_id
         self.install_page = install_page
         self.publish_page = publish_page
+        # tiered KV: optional host-DRAM page tier between the device
+        # allocator and the distributed pool.  ``page_payload(pid)``
+        # materializes a device page for offload (real engines copy
+        # the arrays off-device, the simulator returns an opaque
+        # record); ``page_bytes`` is the raw per-page payload size the
+        # transfer counters and capacity checks use.
+        self.host_pool = host_pool
+        self.page_payload = page_payload
+        self.page_bytes = int(page_bytes)
+        self._m.update(host_hit_tokens=0, kv_bytes_offloaded=0,
+                       kv_bytes_fetched=0, swap_out=0, swap_in=0)
+        if host_pool is not None and page_payload is not None:
+            # eviction cascade: device-cache victims fall into the host
+            # tier (same block hashes) instead of being dropped
+            alloc.on_evict = self._cascade_evict
         self.prefills: List[Request] = []      # concurrent PREFILLING
         self.running: List[Request] = []
         # P/D handoff: host-provided delivery callable (a decode engine's
@@ -444,8 +500,15 @@ class Scheduler(SchedulerCore):
         """Drain support: hand the not-yet-admitted queue back to the
         control plane so it can re-route the requests to another pool
         member (in-flight prefills are NOT touched — they finish here
-        and leave through the normal pool-handoff path)."""
+        and leave through the normal pool-handoff path).  SWAPPED
+        requests are re-routable too, but their parked KV lives in
+        THIS engine's host tier — drop it and reset them to recompute
+        on whichever member picks them up."""
         reqs, self.waiting = list(self.waiting), []
+        for r in reqs:
+            if r.state is RequestState.SWAPPED:
+                self._drop_swap(r)
+                self._reset_recompute(r)
         return reqs
 
     def pages_for(self, n_tokens: int) -> int:
@@ -486,6 +549,8 @@ class Scheduler(SchedulerCore):
             candidates.sort(key=self._admission_key(now))
         req = None
         for cand in candidates:
+            if cand.state is RequestState.SWAPPED:
+                continue    # resumes through _try_resume, not admission
             total = cand.prompt_len + cand.sampling.max_new_tokens
             if (scfg.max_pages_per_seq
                     and self.pages_for(total) > scfg.max_pages_per_seq):
@@ -520,11 +585,11 @@ class Scheduler(SchedulerCore):
             matched_pages, matched_tokens = self.alloc.match_prefix(
                 req.prompt_tokens, now)
         local_tokens = matched_tokens
-        # the distributed pool works even when engine-local prefix
-        # caching is off (the paper's "KV cache + Default" rows):
-        # cross-engine reuse is the pool's, not the engine's, feature
+        # the lower tiers work even when engine-local prefix caching is
+        # off (the paper's "KV cache + Default" rows): cross-engine
+        # reuse is the pool's, not the engine's, feature
         fetched: List[tuple] = []
-        if self.kv_pool is not None:
+        if self.kv_pool is not None or self.host_pool is not None:
             rp, rt, fetched = self._pool_walk(req, matched_tokens, now)
             matched_pages += rp
             matched_tokens += rt
@@ -554,32 +619,45 @@ class Scheduler(SchedulerCore):
 
     def _pool_walk(self, req: Request, have_tokens: int, now: float
                    ) -> Tuple[List[int], int, List[tuple]]:
-        """Extend a local prefix hit with pages from the distributed
-        pool: walk the prompt's block hashes past the locally covered
-        prefix, fetching and allocating a local page per hit.  The tail
-        block is never fetched (prefill must produce at least one new
-        token), and the walk stops at the first miss.
+        """Extend a local prefix hit with pages from the lower tiers:
+        walk the prompt's block hashes past the locally covered prefix,
+        checking host DRAM before the distributed pool (device -> host
+        -> distributed is the admission order) and allocating a local
+        page per hit.  The tail block is never fetched (prefill must
+        produce at least one new token), and the walk stops at the
+        first miss in BOTH tiers.
 
         Payload installation and hash registration are DEFERRED — the
-        (page, hash, payload) triples are returned for the caller to
-        apply only once admission succeeds.  (Hash registration with
-        local prefix caching off would also let a re-fetch of the same
-        hash clobber hash_index while the stale page's eviction later
-        deletes the live entry, so it is additionally gated on
-        ``prefix_caching``.)"""
+        (page, hash, payload, source) tuples are returned for the
+        caller to apply only once admission succeeds.  (Hash
+        registration with local prefix caching off would also let a
+        re-fetch of the same hash clobber hash_index while the stale
+        page's eviction later deletes the live entry, so it is
+        additionally gated on ``prefix_caching``.)"""
         ps = self.scfg.page_size
         hashes = chunk_hashes(req.prompt_tokens, ps)
         pages, tokens, fetched = [], 0, []
         for i in range(have_tokens // ps, len(hashes)):
             if (i + 1) * ps >= req.prompt_len:
                 break
-            payload = self.kv_pool.fetch(hashes[i], self.engine_id, now)
+            payload, source, nbytes = None, "host", self.page_bytes
+            if self.host_pool is not None:
+                payload = self.host_pool.get(hashes[i], now)
+            if payload is None and self.kv_pool is not None:
+                payload = self.kv_pool.fetch(hashes[i], self.engine_id,
+                                             now)
+                # stored wire size, NOT the raw page: int8-compressed
+                # payloads move (and are charged as) fewer bytes
+                nbytes = (self.kv_pool.size_of(hashes[i])
+                          or self.page_bytes)
+                source = "pool"
             if payload is None:
                 break
             pids = self.alloc.allocate(1, now)
             if not pids:
                 break
-            fetched.append((pids[0], hashes[i], payload))
+            nbytes = payload_nbytes(payload, nbytes)
+            fetched.append((pids[0], hashes[i], payload, source, nbytes))
             pages.append(pids[0])
             tokens += ps
         return pages, tokens, fetched
@@ -587,13 +665,36 @@ class Scheduler(SchedulerCore):
     def _apply_fetched(self, fetched: List[tuple], req: Request,
                        now: float) -> None:
         """Install the walk's deferred payloads, register their hashes
-        (when locally cacheable) and count the remote hits."""
-        for pid, h, payload in fetched:
+        (when locally cacheable) and count the per-tier hits.  The
+        transfer is chunked into ``handoff_chunk_pages`` page groups:
+        pages past the head group are handed to ``install_page`` with
+        ``stream=True`` — the host may overlap them with the tail
+        recompute (the simulator prices exactly that overlap)."""
+        cp = self.scfg.handoff_chunk_pages
+        ps = self.scfg.page_size
+        for n, (pid, h, payload, source, nbytes) in enumerate(fetched):
             if self.install_page is not None:
-                self.install_page(pid, payload, req, now)
+                self.install_page(pid, payload, req, now, source=source,
+                                  stream=bool(cp) and n >= cp,
+                                  nbytes=nbytes)
             if self.scfg.prefix_caching:
                 self.alloc.register_hash(pid, h)
-        self._m["remote_hit_tokens"] += len(fetched) * self.scfg.page_size
+            if source == "pool":
+                self._m["remote_hit_tokens"] += ps
+            else:
+                self._m["host_hit_tokens"] += ps
+            self._m["kv_bytes_fetched"] += nbytes
+
+    def _cascade_evict(self, pid: int, block_hash: str,
+                       now: float) -> None:
+        """PageAllocator eviction hook: offload the victim page into
+        the host tier (content-addressed by the same block hash)
+        instead of dropping it."""
+        if self.host_pool.contains(block_hash):
+            return
+        if self.host_pool.put(block_hash, self.page_payload(pid),
+                              self.page_bytes, now):
+            self._m["kv_bytes_offloaded"] += self.page_bytes
 
     # ------------------------------------------------------- schedule
     def schedule(self, now: float) -> ScheduleOutput:
@@ -606,6 +707,7 @@ class Scheduler(SchedulerCore):
         only when no prefill is in flight.
         """
         scfg = self.scfg
+        self._try_resume(now)   # swapped victims outrank new admissions
         if not scfg.mixed_batching:
             return self._schedule_two_phase(now)
         self._admit_prefills(now)
@@ -671,7 +773,14 @@ class Scheduler(SchedulerCore):
             return False
         if scfg.mixed_batching and len(self.prefills) >= scfg.max_prefills:
             return False    # a freed decode slot cannot admit anyway
-        cand = min(self.waiting, key=self._admission_key(now))
+        # SWAPPED waiters re-enter through _try_resume, never through
+        # try_admit — preempting on their behalf would just swap one
+        # victim out to resume another at the front of the queue (churn)
+        admissible = [r for r in self.waiting
+                      if r.state is not RequestState.SWAPPED]
+        if not admissible:
+            return False
+        cand = min(admissible, key=self._admission_key(now))
         need = self.pages_for(cand.prompt_len + (
             0 if self.wants_handoff else cand.sampling.max_new_tokens))
         if (len(self.running) + len(self.prefills) < scfg.max_batch
@@ -812,10 +921,24 @@ class Scheduler(SchedulerCore):
         return True
 
     def preempt(self, req: Request, now: float) -> None:
+        """Evict a RUNNING request.  With a host tier attached the
+        victim's pages are *swapped out* (offloaded under per-request
+        keys; resume continues decoding from where it stopped —
+        byte-identical to the never-preempted run); without one — or
+        when the tier cannot hold the pages — the legacy path drops
+        everything and re-prefills from token 0."""
         if req in self.running:
             self.running.remove(req)
+        req.preempt_count += 1
+        self._m["preemptions"] += 1
+        if self._swap_out(req, now):
+            return
         self.alloc.release(req.page_ids, now)
         req.page_ids = []
+        self._reset_recompute(req)
+        self.waiting.insert(0, req)
+
+    def _reset_recompute(self, req: Request) -> None:
         req.output_tokens = []
         # the discarded tokens' timestamps go with them — ITL is then
         # measured over the re-run (plus the one real requeue stall
@@ -823,8 +946,83 @@ class Scheduler(SchedulerCore):
         req.token_times = []
         req.prefill_done_tokens = 0
         req.state = RequestState.QUEUED
+
+    # ----------------------------------------------------- swap preemption
+    @staticmethod
+    def _swap_key(req: Request, i: int) -> str:
+        return f"swap/{req.request_id}/{i}"
+
+    def _swap_out(self, req: Request, now: float) -> bool:
+        """Offload a decode-phase victim's pages (prompt AND generated
+        KV) into the host tier.  Returns False — caller falls back to
+        drop-and-recompute — when no tier/payload hook is attached, the
+        request is still prefilling, or the pages can't ever fit."""
+        scfg = self.scfg
+        if (not scfg.swap_preemption or self.host_pool is None
+                or self.page_payload is None or not req.page_ids
+                or req.prefill_done_tokens < req.prompt_len):
+            return False
+        n = len(req.page_ids)
+        if not self.host_pool.can_hold(n * self.page_bytes):
+            return False
+        for i, pid in enumerate(req.page_ids):
+            self.host_pool.put(self._swap_key(req, i),
+                               self.page_payload(pid), self.page_bytes,
+                               now)
+        self.alloc.release(req.page_ids, now)
+        req.page_ids = []
+        req._swap_pages = n                 # type: ignore[attr-defined]
+        req.state = RequestState.SWAPPED
         self.waiting.insert(0, req)
-        self._m["preemptions"] += 1
+        self._m["swap_out"] += 1
+        self._m["kv_bytes_offloaded"] += n * self.page_bytes
+        return True
+
+    def _drop_swap(self, req: Request) -> None:
+        for i in range(getattr(req, "_swap_pages", 0)):
+            self.host_pool.discard(self._swap_key(req, i))
+        req._swap_pages = 0                 # type: ignore[attr-defined]
+
+    def _try_resume(self, now: float) -> None:
+        """Swap SWAPPED requests back in (preemption order — they sit
+        at the front of ``waiting``): re-allocate their pages, install
+        the parked payloads and rejoin the decode batch mid-sequence.
+        A request whose swap entries the bounded tier already evicted
+        falls back to recompute admission (still byte-identical under
+        greedy decoding — just slower)."""
+        if self.host_pool is None:
+            return
+        for req in [r for r in self.waiting
+                    if r.state is RequestState.SWAPPED]:
+            if (len(self.running) + len(self.prefills)
+                    >= self.scfg.max_batch):
+                break
+            need = getattr(req, "_swap_pages", 0)
+            entries = [self.host_pool.get(self._swap_key(req, i), now)
+                       for i in range(need)]
+            if not need or any(e is None for e in entries):
+                self._drop_swap(req)
+                self._reset_recompute(req)   # stays queued; try_admit
+                continue                     # re-prefills it later
+            fresh = self.alloc.allocate(need, now)
+            if fresh is None:
+                continue        # no memory yet — stay swapped
+            for i, (pid, payload) in enumerate(zip(fresh, entries)):
+                if self.install_page is not None:
+                    self.install_page(
+                        pid, payload, req, now, source="host",
+                        stream=False,
+                        nbytes=payload_nbytes(payload, self.page_bytes))
+                self.host_pool.discard(self._swap_key(req, i))
+            req._swap_pages = 0             # type: ignore[attr-defined]
+            req.page_ids = fresh
+            req.state = RequestState.RUNNING
+            self.waiting.remove(req)
+            self.running.append(req)
+            self._m["swap_in"] += 1
+            self._m["kv_bytes_fetched"] += need * self.page_bytes
+            # a victim preempted on its very last token is already done
+            self.maybe_finish(req, now)
 
     def drop_running(self, req: Request, now: float) -> None:
         """Remove a RUNNING request without finishing it (migration)."""
@@ -855,4 +1053,9 @@ class Scheduler(SchedulerCore):
             loaded_adapters=loaded_adapters,
             slo_attainment=self.slo_attainment(now),
             slo_by_class=self.slo_class_stats(now),
-            slo_itl_attainment=self.slo_itl_attainment(now))
+            slo_itl_attainment=self.slo_itl_attainment(now),
+            host_hit_tokens=self._m["host_hit_tokens"],
+            kv_bytes_offloaded=self._m["kv_bytes_offloaded"],
+            kv_bytes_fetched=self._m["kv_bytes_fetched"],
+            swap_out=self._m["swap_out"],
+            swap_in=self._m["swap_in"])

@@ -24,6 +24,14 @@ initial P:D ratio from the roofline profile and the request shape, and
 an :class:`AttainmentRebalancer` adapts it live (attainment-driven
 role migration — no restarts) while the group serves.
 
+Tiered KV cache: ``--host-cache-gb`` gives every engine a host-DRAM
+page tier below device HBM — device-cache evictions cascade into it
+(content-addressed by the same block hashes) and preemption *swaps*
+the victim's pages out instead of recomputing from token 0.
+``--wire-dtype int8`` quantizes pool-handoff payloads with per-layer
+scales so a P->D handoff moves ~4x fewer bytes; transfers stream in
+page-group chunks either way (``EngineConfig.handoff_chunk_pages``).
+
 SLO-aware serving: ``--slo`` turns on deadline-aware scheduling in
 every engine (priority classes with TTFT/ITL targets, earliest-slack
 admission, bounded priority preemption); ``--interactive-frac`` sets
@@ -129,6 +137,15 @@ def main() -> None:
     ap.add_argument("--device", default="a10",
                     help="roofline profile the --roles auto planner "
                          "sizes the initial P:D split against")
+    ap.add_argument("--host-cache-gb", type=float, default=0.5,
+                    help="host-DRAM KV tier per engine (GB): device "
+                         "evictions cascade into it and preemption "
+                         "swaps instead of recomputing; 0 disables")
+    ap.add_argument("--wire-dtype", default="int8",
+                    choices=("fp", "int8"),
+                    help="pool-handoff wire format: 'int8' quantizes "
+                         "page payloads with per-layer scales (~4x "
+                         "fewer handoff bytes), 'fp' is byte-exact")
     args = ap.parse_args()
 
     if args.engines is not None and args.roles not in ("mixed", "auto"):
@@ -153,9 +170,21 @@ def main() -> None:
               f"decode_load={rs.decode_load:.3f})")
     else:
         roles = parse_role_spec(args.roles, args.engines or 2)
+    disagg = any(r != "mixed" for r in roles)
+    if disagg:
+        # int8 is the launcher's default deployment posture — say so
+        # loudly: the wire is lossy (parity within the pinned
+        # tolerance), pass --wire-dtype fp for byte-exact handoffs
+        print(f"kv tiers: host_cache={args.host_cache_gb}GB/engine, "
+              f"pool wire={args.wire_dtype}"
+              + (" (quantized; --wire-dtype fp for byte-exact)"
+                 if args.wire_dtype == "int8" else ""))
     gw = Gateway(policy=args.policy, clock=clock)
     engines, manager, pool = build_engines(
-        cfg, roles, clock, ecfg_kw=dict(slo_aware=args.slo), gateway=gw)
+        cfg, roles, clock,
+        ecfg_kw=dict(slo_aware=args.slo,
+                     host_cache_gb=args.host_cache_gb,
+                     wire_dtype=args.wire_dtype), gateway=gw)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, 24).tolist()
@@ -197,7 +226,12 @@ def main() -> None:
               f"finished={m.finished_requests} "
               f"prefix_hit_tokens={m.prefix_hit_tokens} "
               f"remote_hit_tokens={m.remote_hit_tokens} "
+              f"host_hit_tokens={m.host_hit_tokens} "
               f"kv_util={m.kv_utilization:.2f}")
+        if m.swap_out or m.kv_bytes_offloaded:
+            print(f"    tiers: swap_out={m.swap_out} swap_in={m.swap_in}"
+                  f" offloaded={m.kv_bytes_offloaded >> 10}KiB"
+                  f" fetched={m.kv_bytes_fetched >> 10}KiB")
         if m.slo_by_class:
             rows = " ".join(
                 f"{c}: ttft={ta:.2f} itl={ia:.2f} n={n}"

@@ -1,0 +1,347 @@
+"""Tiered KV cache: host-DRAM tier, swap-based preemption, and the
+compressed streaming pool handoff.
+
+The byte-identity pins are the load-bearing ones: a swap-out/swap-in
+cycle on the REAL JAX engine must resume decoding mid-sequence with
+exactly the tokens the never-preempted run produces (the already-
+generated prefix must survive the swap untouched), and the host-tier
+cascade must serve a re-offered prefix byte-identically to a cold
+recompute.  The int8 wire format is parity-pinned within
+``INT8_WIRE_MAX_REL_ERR`` of the per-layer max-abs value."""
+import logging
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.gateway.gateway import Gateway, RateLimit
+from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.kvcache.tiers import (INT8_WIRE_MAX_REL_ERR, HostPagePool,
+                                      compress_page, decompress_page,
+                                      payload_nbytes)
+from repro.core.sim.events import EventLoop
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.engine import (EngineConfig, InferenceEngine, Request,
+                          RequestState, SamplingParams)
+from repro.engine.page_table import PageAllocator
+
+ENGINE_KW = dict(page_size=8, num_pages=64, max_batch=4,
+                 max_pages_per_seq=16, chunk_size=16)
+
+
+def _engine(seed=0, **kw):
+    cfg = get_reduced_config("qwen3-0.6b")
+    defaults = dict(ENGINE_KW)
+    defaults.update(kw)
+    return cfg, InferenceEngine(cfg, EngineConfig(**defaults), seed=seed)
+
+
+def _greedy_reference(cfg, prompt, max_new, seed=0, **kw):
+    _, ref_eng = _engine(seed=seed, **kw)
+    ref = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=max_new))
+    ref_eng.submit(ref)
+    ref_eng.run_until_idle()
+    return ref.output_tokens
+
+
+# ------------------------------------------------------- swap preemption
+def test_swap_preemption_byte_identical_resume():
+    """Preempt a decoding request mid-stream on the real JAX engine
+    with a host tier attached: its pages swap out, resume swaps them
+    back in and CONTINUES from where it stopped — the already-generated
+    tokens survive and the final output is byte-identical to the
+    never-preempted run."""
+    cfg, eng = _engine(host_cache_gb=0.25)
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, cfg.vocab_size, 20).tolist()
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=8))
+    eng.submit(req)
+    for _ in range(200):
+        if len(req.output_tokens) >= 3:
+            break
+        eng.step()
+    assert len(req.output_tokens) >= 3
+    generated = list(req.output_tokens)
+    eng.sched.preempt(req, eng.clock())
+    assert req.state is RequestState.SWAPPED
+    assert req.page_ids == []
+    assert req.output_tokens == generated       # NOT reset
+    assert len(eng.host_pool) > 0                # pages parked in DRAM
+    eng.run_until_idle()
+    assert req.state is RequestState.FINISHED
+    # the pre-preemption prefix survived the swap: continued, not rerun
+    assert req.output_tokens[:len(generated)] == generated
+    assert req.output_tokens == _greedy_reference(cfg, prompt, 8)
+    m = eng.metrics()
+    assert m.swap_out == 1 and m.swap_in == 1 and m.preemptions == 1
+    assert m.kv_bytes_offloaded > 0 and m.kv_bytes_fetched > 0
+    assert req.preempt_count == 1
+
+
+def test_swap_falls_back_to_recompute_when_tier_cannot_hold():
+    """A host tier too small for the victim's pages falls back to the
+    legacy drop-and-recompute path — still byte-identical under greedy
+    decoding, just slower."""
+    cfg, eng = _engine(host_cache_gb=1e-6)      # ~1 KiB: can_hold fails
+    rng = np.random.default_rng(42)
+    prompt = rng.integers(0, cfg.vocab_size, 20).tolist()
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=6))
+    eng.submit(req)
+    for _ in range(200):
+        if len(req.output_tokens) >= 2:
+            break
+        eng.step()
+    eng.sched.preempt(req, eng.clock())
+    assert req.state is RequestState.QUEUED     # legacy path
+    assert req.output_tokens == []              # recompute from token 0
+    eng.run_until_idle()
+    assert req.output_tokens == _greedy_reference(cfg, prompt, 6)
+    m = eng.metrics()
+    assert m.preemptions == 1 and m.swap_out == 0 and m.swap_in == 0
+
+
+def test_sim_swap_preemption_shares_scheduler_path():
+    """The SAME Scheduler swap path runs under the simulator: an SLO
+    preemption with a host tier attached swaps instead of resetting,
+    and the victim finishes with its full output."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    loop = EventLoop()
+    sc = SimEngineConfig(device_type="a10", max_batch=2, chunk_size=64,
+                         mixed_batching=True, slo_aware=True,
+                         slo_preempt_cooldown_s=0.0, num_pages=128,
+                         page_size=8, host_cache_gb=1.0)
+    eng = SimEngine(cfg, loop, sc)
+    rng = np.random.default_rng(43)
+    batch = [Request(prompt_tokens=rng.integers(0, 100, 16).tolist(),
+                     sampling=SamplingParams(max_new_tokens=400),
+                     priority_class="batch", arrival_time=0.0)
+             for _ in range(2)]
+    for r in batch:
+        eng.submit(r)
+    urgent = Request(prompt_tokens=rng.integers(0, 100, 16).tolist(),
+                     sampling=SamplingParams(max_new_tokens=4),
+                     priority_class="interactive", arrival_time=0.0)
+    loop.after(0.1, lambda: eng.submit(urgent))
+    loop.run(until=1e6, stop_when=lambda: not eng.has_work)
+    m = eng.metrics()
+    assert m.preemptions >= 1 and m.swap_out >= 1
+    assert m.swap_in == m.swap_out
+    assert all(r.state is RequestState.FINISHED for r in batch + [urgent])
+    assert all(len(r.output_tokens) == r.sampling.max_new_tokens
+               for r in batch)
+
+
+# ------------------------------------------------------ eviction cascade
+def test_host_tier_cascade_eviction_order():
+    """Device-cache victims cascade into the host tier in eviction
+    (LRU-release) order, content-addressed by the same block hash."""
+    host = HostPagePool(capacity_bytes=1 << 20)
+    alloc = PageAllocator(4, page_size=4)
+    alloc.on_evict = lambda pid, h, now: host.put(h, ("pl", pid), 64, now)
+    pages = alloc.allocate(4, 1.0)
+    for i, pid in enumerate(pages):
+        alloc.register_hash(pid, f"h{i}")
+    for t, idx in zip((2.0, 3.0, 4.0, 5.0), (2, 0, 3, 1)):
+        alloc.release([pages[idx]], t)
+    assert len(host) == 0                       # nothing evicted yet
+    fresh = alloc.allocate(4, 6.0)              # forces 4 cascades
+    assert fresh is not None
+    assert host.keys() == ["h2", "h0", "h3", "h1"]   # LRU-release order
+    assert host.get("h0") == ("pl", pages[0])
+
+
+def test_host_tier_is_bounded_lru():
+    host = HostPagePool(capacity_bytes=256)
+    for i in range(6):
+        assert host.put(f"k{i}", i, 64, now=float(i))
+    assert len(host) == 4                       # 256 / 64
+    assert host.keys() == ["k2", "k3", "k4", "k5"]
+    assert host.stats.evictions == 2
+    host.get("k2")                              # refresh
+    host.put("k6", 6, 64)
+    assert "k2" in host.keys() and "k3" not in host.keys()
+    assert not host.put("huge", 0, 512)         # can never fit
+    assert host.can_hold(256) and not host.can_hold(257)
+
+
+def test_host_tier_serves_evicted_prefix_real_engine():
+    """End-to-end cascade on the real JAX engine: a finished prompt's
+    pages get evicted from the device cache under pressure, fall into
+    the host tier, and a later request re-offering the prefix is served
+    from host DRAM (host_hit_tokens) byte-identically to a cold run."""
+    cfg, eng = _engine(host_cache_gb=0.25, num_pages=24)
+    rng = np.random.default_rng(44)
+    shared = rng.integers(0, cfg.vocab_size, 24).tolist()
+    first = Request(prompt_tokens=list(shared),
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(first)
+    eng.run_until_idle()
+    # pressure: distinct long prompts evict the shared prefix's pages
+    for i in range(3):
+        filler = Request(
+            prompt_tokens=rng.integers(0, cfg.vocab_size, 120).tolist(),
+            sampling=SamplingParams(max_new_tokens=2))
+        eng.submit(filler)
+        eng.run_until_idle()
+    assert eng.sched.alloc.stats["evictions"] > 0
+    assert eng.host_pool.stats.puts > 0
+    again = Request(prompt_tokens=list(shared),
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(again)
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m.host_hit_tokens >= eng.ecfg.page_size
+    assert again.output_tokens == first.output_tokens
+    assert again.output_tokens == _greedy_reference(
+        cfg, shared, 4, num_pages=24)
+
+
+# ------------------------------------------------------------ int8 wire
+@pytest.mark.parametrize("shape", [(2, 8, 2, 16), (4, 16, 1, 8)])
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 300.0])
+def test_int8_roundtrip_parity_sweep(shape, scale):
+    """Pinned wire tolerance: |x - roundtrip(x)| <= INT8_WIRE_MAX_REL_ERR
+    * per-layer max|x|, across payload shapes and magnitudes."""
+    rng = np.random.default_rng(45)
+    k = (rng.standard_normal(shape) * scale).astype(np.float32)
+    v = (rng.standard_normal(shape) * scale).astype(np.float32)
+    cp = compress_page(k, v)
+    dk, dv = decompress_page(cp)
+    for x, d in ((k, dk), (v, dv)):
+        bound = (INT8_WIRE_MAX_REL_ERR
+                 * np.max(np.abs(x), axis=(1, 2, 3), keepdims=True))
+        assert np.all(np.abs(x - d) <= bound + 1e-9)
+    # the wire really is smaller: int8 + scales vs 2 fp32 arrays
+    assert cp.nbytes < (k.nbytes + v.nbytes) // 2
+    assert payload_nbytes(cp) == cp.nbytes
+    assert payload_nbytes((k, v)) == k.nbytes + v.nbytes
+    assert payload_nbytes(True, default=7) == 7
+
+
+def test_int8_wire_real_pd_handoff():
+    """1P+1D real JAX engines with the int8 wire: the decode engine
+    serves a request whose (dequantized) KV it never prefilled and the
+    pool stores the compressed size."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    t0 = time.monotonic()
+    clock = lambda: time.monotonic() - t0    # noqa: E731
+    pool = DistributedKVPool(capacity_bytes=1 << 30, metadata_lag=0.0,
+                             clock=clock)
+    kw = dict(ENGINE_KW, wire_dtype="int8")
+    pre = InferenceEngine(cfg, EngineConfig(role="prefill", **kw),
+                          clock=clock, kv_pool_client=pool,
+                          engine_id="p0", seed=0)
+    dec = InferenceEngine(cfg, EngineConfig(role="decode", **kw),
+                          clock=clock, kv_pool_client=pool,
+                          engine_id="d0", seed=0)
+    pre.handoff = dec.submit
+    rng = np.random.default_rng(46)
+    prompt = rng.integers(0, cfg.vocab_size, 24).tolist()
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=6))
+    pre.submit(req)
+    for _ in range(200):
+        if not (pre.has_work or dec.has_work):
+            break
+        if pre.has_work:
+            pre.step()
+        if dec.has_work:
+            dec.step()
+    assert req.state is RequestState.FINISHED
+    assert dec.metrics().remote_hit_tokens >= 16
+    # pool accounted the COMPRESSED wire size, not the raw page
+    assert 0 < pool.stats.bytes_stored < 2 * pre.runner.page_bytes
+    # fetched-byte accounting follows the wire size too
+    assert 0 < dec.metrics().kv_bytes_fetched < 2 * pre.runner.page_bytes
+
+
+# ----------------------------------------------- chunked handoff parity
+def test_chunked_handoff_sim_real_admission_parity():
+    """The chunked streaming handoff makes the SAME admission decisions
+    on the real JAX data plane and the simulator: same pool-walk
+    coverage (remote_hit_tokens) at the same page/chunk geometry, and
+    the real pair stays byte-identical to a colocated engine."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    rng = np.random.default_rng(47)
+    prompt = rng.integers(0, cfg.vocab_size, 24).tolist()
+
+    t0 = time.monotonic()
+    clock = lambda: time.monotonic() - t0    # noqa: E731
+    pool = DistributedKVPool(capacity_bytes=1 << 30, metadata_lag=0.0,
+                             clock=clock)
+    kw = dict(ENGINE_KW, handoff_chunk_pages=1)
+    pre = InferenceEngine(cfg, EngineConfig(role="prefill", **kw),
+                          clock=clock, kv_pool_client=pool,
+                          engine_id="p0", seed=0)
+    dec = InferenceEngine(cfg, EngineConfig(role="decode", **kw),
+                          clock=clock, kv_pool_client=pool,
+                          engine_id="d0", seed=0)
+    pre.handoff = dec.submit
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=6))
+    pre.submit(req)
+    for _ in range(200):
+        if not (pre.has_work or dec.has_work):
+            break
+        if pre.has_work:
+            pre.step()
+        if dec.has_work:
+            dec.step()
+    assert req.state is RequestState.FINISHED
+    assert req.output_tokens == _greedy_reference(cfg, prompt, 6)
+
+    loop = EventLoop()
+    spool = DistributedKVPool(capacity_bytes=1 << 30, metadata_lag=0.002,
+                              clock=loop.clock)
+    skw = dict(device_type="a10", page_size=8, max_batch=4,
+               chunk_size=16, mixed_batching=True, handoff_chunk_pages=1)
+    spre = SimEngine(cfg, loop, SimEngineConfig(role="prefill", **skw),
+                     kv_pool=spool, engine_id="p0", node="n0")
+    sdec = SimEngine(cfg, loop, SimEngineConfig(role="decode", **skw),
+                     kv_pool=spool, engine_id="d0", node="n1")
+    spre.handoff = sdec.submit
+    sreq = Request(prompt_tokens=list(prompt),
+                   sampling=SamplingParams(max_new_tokens=6),
+                   arrival_time=0.0)
+    spre.submit(sreq)
+    loop.run(until=1e6,
+             stop_when=lambda: not (spre.has_work or sdec.has_work))
+    assert sreq.state is RequestState.FINISHED
+    # same page walk on both data planes: identical pool coverage
+    assert (sdec.metrics().remote_hit_tokens
+            == dec.metrics().remote_hit_tokens > 0)
+
+
+# --------------------------------------------------- loud load shedding
+def test_gateway_shed_counting_and_logging(caplog):
+    """Rate-limit drops are counted (instance + process-wide) and
+    logged at most once per window — no more silent request loss."""
+    now = [0.0]
+    gw = Gateway(policy="least-request",
+                 default_limit=RateLimit(rpm=60.0, tpm=1e9),
+                 clock=lambda: now[0])
+
+    class _H:
+        def metrics(self):
+            from repro.engine.scheduler import EngineMetrics
+            return EngineMetrics()
+
+    gw.register_engine("e0", _H())
+    before = Gateway.total_shed
+    with caplog.at_level(logging.WARNING, logger="repro.gateway"):
+        routed = sum(gw.route([1, 2, 3]) is not None for _ in range(15))
+    assert routed == 10                 # burst bucket: rpm/6
+    assert gw.stats.shed == 5
+    assert gw.stats.rejected_rpm == 5
+    assert Gateway.total_shed - before == 5
+    shed_logs = [r for r in caplog.records if "shed" in r.message]
+    assert len(shed_logs) == 1          # once per window, not per drop
+    now[0] = 11.0
+    with caplog.at_level(logging.WARNING, logger="repro.gateway"):
+        list(gw.route([1]) for _ in range(30))
+    assert any("shed" in r.message
+               for r in caplog.records[len(shed_logs):])
