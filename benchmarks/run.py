@@ -14,10 +14,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_autoscaling, bench_coldstart, bench_hetero,
-                        bench_kernels, bench_kv_tiers, bench_kvcache,
-                        bench_lora, bench_pd_disagg, bench_pd_pools,
-                        bench_routing, bench_slo, roofline)
+from benchmarks import (bench_autoscaling, bench_chaos, bench_coldstart,
+                        bench_hetero, bench_kernels, bench_kv_tiers,
+                        bench_kvcache, bench_lora, bench_pd_disagg,
+                        bench_pd_pools, bench_routing, bench_slo, roofline)
 from repro.core.gateway.gateway import Gateway
 
 SUITES = [
@@ -31,6 +31,7 @@ SUITES = [
     ("pd_role_pools_rebalancing", bench_pd_pools.main),
     ("kv_tiers_swap_and_streaming", bench_kv_tiers.main),
     ("slo_aware_scheduling", bench_slo.main),
+    ("chaos_and_crash_recovery", bench_chaos.main),
     ("pallas_kernels", bench_kernels.main),
     ("roofline_from_dryrun", lambda quick=False: roofline.main("", quick)),
 ]

@@ -66,9 +66,14 @@ class FailureInjector:
     def clear(self, pod_id: str, kind: Optional[FaultKind] = None) -> None:
         if kind is None:
             self.active.pop(pod_id, None)
+            return
+        left = [f for f in self.active.get(pod_id, []) if f.kind != kind]
+        if left:
+            self.active[pod_id] = left
         else:
-            self.active[pod_id] = [f for f in self.active.get(pod_id, [])
-                                   if f.kind != kind]
+            # no empty-list tombstones: long chaos runs inject/clear
+            # thousands of times and `active` must not grow unbounded
+            self.active.pop(pod_id, None)
 
     # ---------------------------------------------------------- effects
     def perturb(self, sample: Telemetry) -> Telemetry:
@@ -109,22 +114,46 @@ class Diagnosis:
     t: float
     fault: FaultKind
     evidence: str
-    action: str                      # cordon | restart | drain | observe
+    action: str         # cordon | restart | drain | observe | quarantine | readmit
 
 
 class DiagnosticMonitor:
-    """Rule-based detector over telemetry history (per pod)."""
+    """Rule-based detector over telemetry history (per pod), with
+    hysteresis between detection and action.
 
-    def __init__(self, window: int = 30, tput_drop_ratio: float = 0.6):
+    Hard faults (missed heartbeat, double-bit ECC) act on a single
+    sample — there is no recovering from those in place.  Soft faults
+    (thermal throttle, link flaps, silent degradation) must persist
+    for ``confirm_n`` consecutive samples before the pod is
+    *quarantined* (the orchestrator cordons it out of routing but
+    keeps it alive).  A quarantined pod is re-admitted only after a
+    probe passes: at least ``quarantine_s`` seconds cordoned AND
+    ``readmit_n`` consecutive clean samples.  A pod still anomalous
+    ``escalate_s`` seconds into quarantine escalates to ``restart``
+    (replacement).  This keeps a flapping engine from oscillating
+    between cordon and re-admit on every scrape.
+    """
+
+    def __init__(self, window: int = 30, tput_drop_ratio: float = 0.6,
+                 confirm_n: int = 3, quarantine_s: float = 10.0,
+                 readmit_n: int = 5, escalate_s: float = 60.0):
         self.window = window
         self.tput_drop = tput_drop_ratio
+        self.confirm_n = confirm_n
+        self.quarantine_s = quarantine_s
+        self.readmit_n = readmit_n
+        self.escalate_s = escalate_s
         self.history: Dict[str, Deque[Telemetry]] = {}
         self.baseline_tput: Dict[str, float] = {}
+        self._streak: Dict[str, int] = {}       # consecutive anomalous samples
+        self._clean: Dict[str, int] = {}        # consecutive clean samples
+        self.quarantined: Dict[str, float] = {}  # pod -> quarantine start t
+        self._qfault: Dict[str, FaultKind] = {}  # pod -> quarantining fault
 
-    def observe(self, sample: Telemetry) -> List[Diagnosis]:
-        h = self.history.setdefault(
-            sample.pod_id, collections.deque(maxlen=self.window))
-        h.append(sample)
+    # ------------------------------------------------------------- rules
+    def _rules(self, sample: Telemetry,
+               h: "Deque[Telemetry]") -> List[Diagnosis]:
+        """Raw per-sample findings (no hysteresis applied)."""
         out: List[Diagnosis] = []
         pid, t = sample.pod_id, sample.t
         if not sample.heartbeat_ok:
@@ -159,3 +188,62 @@ class DiagnosticMonitor:
                     f"tput {recent:.0f} < {self.tput_drop:.0%} of "
                     f"baseline {base:.0f}", "restart"))
         return out
+
+    # ----------------------------------------------------- state machine
+    def observe(self, sample: Telemetry) -> List[Diagnosis]:
+        h = self.history.setdefault(
+            sample.pod_id, collections.deque(maxlen=self.window))
+        h.append(sample)
+        pid, t = sample.pod_id, sample.t
+        raw = self._rules(sample, h)
+
+        hard = [d for d in raw if d.fault in (FaultKind.DEVICE_LOST,)
+                or (d.fault == FaultKind.ECC_ERROR and d.action == "cordon")]
+        soft = [d for d in raw if d not in hard]
+        if hard:
+            # terminal: the pod is being replaced, drop quarantine state
+            self._forget(pid)
+            return hard
+
+        out: List[Diagnosis] = []
+        since = self.quarantined.get(pid)
+        if soft:
+            self._clean[pid] = 0
+            if since is None:
+                streak = self._streak.get(pid, 0) + 1
+                self._streak[pid] = streak
+                if streak >= self.confirm_n:
+                    self.quarantined[pid] = t
+                    self._streak[pid] = 0
+                    lead = soft[0]
+                    self._qfault[pid] = lead.fault
+                    out.append(Diagnosis(
+                        pid, t, lead.fault,
+                        f"{lead.evidence} ({streak} consecutive scrapes)",
+                        "quarantine"))
+            elif t - since >= self.escalate_s:
+                # probe keeps failing well into quarantine: replace it
+                self._forget(pid)
+                out.append(Diagnosis(
+                    pid, t, soft[0].fault,
+                    f"still anomalous {t - since:.0f}s into quarantine",
+                    "restart"))
+        else:
+            self._streak[pid] = 0
+            if since is not None:
+                clean = self._clean.get(pid, 0) + 1
+                self._clean[pid] = clean
+                if clean >= self.readmit_n and t - since >= self.quarantine_s:
+                    fault = self._qfault.get(pid, FaultKind.SILENT_DEGRADATION)
+                    self._forget(pid)
+                    out.append(Diagnosis(
+                        pid, t, fault,
+                        f"probe passed: {clean} clean scrapes after "
+                        f"{t - since:.0f}s quarantined", "readmit"))
+        return out
+
+    def _forget(self, pod_id: str) -> None:
+        self.quarantined.pop(pod_id, None)
+        self._qfault.pop(pod_id, None)
+        self._streak.pop(pod_id, None)
+        self._clean.pop(pod_id, None)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import collections
 import logging
+import statistics
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -57,6 +58,10 @@ class GatewayStats:
     rejected_rpm: int = 0
     rejected_tpm: int = 0
     per_engine: Dict[str, int] = field(default_factory=dict)
+    # per-engine failure accounting: engine_id -> {failure kind -> n}
+    # (crashes, quarantines, hedged re-routes) — the control plane's
+    # evidence trail for replace-vs-readmit decisions
+    engine_failures: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
     @property
     def shed(self) -> int:
@@ -83,6 +88,10 @@ class Gateway:
         self.clock = clock or (lambda: 0.0)
         self.engines: Dict[str, object] = {}
         self.engine_pool: Dict[str, str] = {}     # engine_id -> pool tag
+        # quarantined engines: cordoned out of routable_engines() while
+        # the DiagnosticMonitor's re-admit probe runs (in-flight work
+        # keeps draining; only NEW routing is blocked)
+        self.cordoned: set = set()
         self.user_limits: Dict[str, RateLimit] = {}
         self._rpm: Dict[str, TokenBucket] = {}
         self._tpm: Dict[str, TokenBucket] = {}
@@ -112,7 +121,26 @@ class Gateway:
         EWMAs, prefix-affinity maps) that could still name it."""
         self.engines.pop(engine_id, None)
         self.engine_pool.pop(engine_id, None)
+        self.cordoned.discard(engine_id)
         self.policy.forget(engine_id)
+
+    def cordon(self, engine_id: str, reason: str = "quarantine") -> None:
+        """Quarantine: stop routing NEW work to the engine without
+        deregistering it (it stays registered so telemetry and the
+        re-admit probe keep flowing).  Policy state is purged — stale
+        affinity must not re-earn routing the moment it is readmitted."""
+        if engine_id in self.engines and engine_id not in self.cordoned:
+            self.cordoned.add(engine_id)
+            self.policy.forget(engine_id)
+            self.note_failure(engine_id, reason)
+
+    def uncordon(self, engine_id: str) -> None:
+        self.cordoned.discard(engine_id)
+
+    def note_failure(self, engine_id: str, kind: str) -> None:
+        """Per-engine failure accounting (crash / quarantine / hedged)."""
+        rec = self.stats.engine_failures.setdefault(engine_id, {})
+        rec[kind] = rec.get(kind, 0) + 1
 
     def set_engine_pool(self, engine_id: str, pool: str) -> None:
         """Role migration: retag without a deregister/register cycle.
@@ -122,13 +150,36 @@ class Gateway:
         self.policy.forget(engine_id)
 
     def routable_engines(self) -> Dict[str, object]:
-        """NEW requests go to frontend pools only (prefill/mixed);
-        untagged engines (no pool manager) keep the legacy behavior."""
+        """NEW requests go to frontend pools only (prefill/mixed) and
+        never to a cordoned engine; untagged engines (no pool manager)
+        keep the legacy behavior."""
         if not self.engine_pool:
-            return self.engines
+            if not self.cordoned:
+                return self.engines
+            return {eid: h for eid, h in self.engines.items()
+                    if eid not in self.cordoned}
         return {eid: h for eid, h in self.engines.items()
-                if self.engine_pool.get(eid, "mixed")
+                if eid not in self.cordoned
+                and self.engine_pool.get(eid, "mixed")
                 in self.FRONTEND_POOLS}
+
+    def straggler_engines(self, ratio: float = 0.5) -> List[str]:
+        """Fleet-relative straggler detection: routable engines whose
+        windowed tokens/s sits below ``ratio`` x the fleet median while
+        they still hold work (queued or running).  A silently degraded
+        node looks exactly like this — slow, not dead — and the hedging
+        loop re-routes its queued work before the DiagnosticMonitor's
+        quarantine confirm window elapses."""
+        mets = {eid: h.metrics() for eid, h in
+                self.routable_engines().items()}
+        rates = [m.tokens_per_sec for m in mets.values()
+                 if m.tokens_per_sec > 0]
+        if len(rates) < 2:
+            return []
+        med = statistics.median(rates)
+        return [eid for eid, m in mets.items()
+                if (m.num_waiting or m.num_running)
+                and m.tokens_per_sec < ratio * med]
 
     def set_user_limit(self, user: str, limit: RateLimit) -> None:
         self.user_limits[user] = limit

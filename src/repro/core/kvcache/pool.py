@@ -38,6 +38,12 @@ class KVBlock:
     hits: int = 0
 
 
+class KVPoolError(RuntimeError):
+    """Pool unreachable — network partition or cache-node loss.  Raised
+    by ``fetch``/``publish`` while a partition window is active; callers
+    (the scheduler's pool walk) must degrade to recompute, never crash."""
+
+
 @dataclass
 class PoolStats:
     puts: int = 0
@@ -49,6 +55,8 @@ class PoolStats:
     bytes_stored: int = 0
     bytes_transferred: int = 0
     pending_metadata: int = 0
+    fetch_failures: int = 0            # fetches rejected by a partition
+    publish_failures: int = 0          # publishes rejected by a partition
 
 
 class DistributedKVPool:
@@ -79,6 +87,22 @@ class DistributedKVPool:
         self._pending_hashes: set = set()
         # engine node map (engine_id -> node id) for colocation checks
         self._engine_node: Dict[str, str] = {}
+        # chaos: while now < _partition_until, fetch/publish raise
+        self._partition_until: float = float("-inf")
+
+    # ---------------------------------------------------------- partition
+    def partition(self, now: Optional[float] = None,
+                  duration: float = 1.0) -> None:
+        """Sever the pool for ``duration`` seconds (chaos injection)."""
+        now = self.clock() if now is None else now
+        self._partition_until = max(self._partition_until, now + duration)
+
+    def heal(self) -> None:
+        self._partition_until = float("-inf")
+
+    def partitioned(self, now: Optional[float] = None) -> bool:
+        now = self.clock() if now is None else now
+        return now < self._partition_until
 
     # ------------------------------------------------------------ attach
     def attach_engine(self, engine_id: str, node: str) -> None:
@@ -89,6 +113,9 @@ class DistributedKVPool:
                 now: Optional[float] = None, size_bytes: int = 0) -> bool:
         """Async publish; returns False when dropped as duplicate."""
         now = self.clock() if now is None else now
+        if self.partitioned(now):
+            self.stats.publish_failures += 1
+            raise KVPoolError("kv pool partitioned: publish rejected")
         if self.contains(block_hash):
             self.stats.dup_puts_dropped += 1
             return False
@@ -168,6 +195,9 @@ class DistributedKVPool:
     def fetch(self, block_hash: str, engine_id: str,
               now: Optional[float] = None) -> Optional[Any]:
         """Payload or None.  Updates hotness + transfer accounting."""
+        if self.partitioned(now):
+            self.stats.fetch_failures += 1
+            raise KVPoolError("kv pool partitioned: fetch rejected")
         self.tick(now)
         blk = self.blocks.get(block_hash)
         if blk is None:

@@ -232,9 +232,12 @@ class RolePoolManager:
                 "itl": sum(itl) / len(itl) if itl else 1.0}
 
     # ------------------------------------------------------------ data path
-    def handoff(self, req: Request) -> None:
-        """Prefill->decode handoff: least-loaded decoder by queue depth."""
-        targets = self.decoders()
+    def handoff(self, req: Request, exclude=()) -> None:
+        """Prefill->decode handoff: least-loaded decoder by queue depth.
+        ``exclude`` removes members from consideration (hedging away
+        from a straggler, re-delivery off a crashed engine)."""
+        targets = {eid: e for eid, e in self.decoders().items()
+                   if eid not in exclude}
         if not targets:
             raise RuntimeError("role pools: handoff with no decode-"
                                "capable member (refused to drain last?)")
@@ -242,23 +245,27 @@ class RolePoolManager:
             targets[e]))
         targets[eid].submit(req)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, exclude=()) -> None:
         """Admit a NEW request: least-loaded frontend by queue depth
         (what the gateway's least-request policy computes; this is the
-        manager-local path used for drain re-delivery and tests)."""
-        targets = self.frontends()
+        manager-local path used for drain re-delivery and tests).
+        ``exclude`` as in :meth:`handoff`."""
+        targets = {eid: e for eid, e in self.frontends().items()
+                   if eid not in exclude}
         if not targets:
             raise RuntimeError("role pools: no frontend member")
         eid = min(sorted(targets), key=lambda e: self._queue_depth(
             targets[e]))
         targets[eid].submit(req)
 
-    def _redeliver(self, reqs: List[Request], src_pool: str) -> None:
+    def _redeliver(self, reqs: List[Request], src_pool: str,
+                   exclude=()) -> None:
         for r in reqs:
             if src_pool == "decode":
-                self.handoff(r)      # KV already in the distributed pool
+                # KV already in the distributed pool
+                self.handoff(r, exclude=exclude)
             else:
-                self.submit(r)
+                self.submit(r, exclude=exclude)
 
     # ------------------------------------------------------------ migration
     def request_migration(self, src: str, dst: str, now: float,

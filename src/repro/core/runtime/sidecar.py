@@ -118,6 +118,12 @@ class AIRuntime:
             "swap_out": float(m.swap_out),
             "swap_in": float(m.swap_in),
             "host_hit_tokens": float(m.host_hit_tokens),
+            # failure handling: pool fetch/publish attempts lost to a
+            # partition, recompute waste from drop-and-recompute
+            # resets, recovery-log pages published
+            "kv_fetch_failures": float(m.kv_fetch_failures),
+            "wasted_tokens": float(m.wasted_tokens),
+            "ckpt_pages": float(m.ckpt_pages),
         }
 
     # ------------------------------------------------- engine management

@@ -25,9 +25,10 @@ from typing import Callable, Dict, List, Optional
 from repro.core.autoscaler.metrics import MetricStore
 from repro.core.autoscaler.policies import Autoscaler
 from repro.core.diagnostics.tools import (DiagnosticMonitor, FailureInjector,
-                                          Telemetry)
+                                          FaultKind, Telemetry)
 from repro.core.gateway.gateway import Gateway, RateLimit
 from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.sim.chaos import ChaosSchedule
 from repro.core.orchestration.cluster import ClusterManager, PodState
 from repro.core.orchestration.pools import (AttainmentRebalancer,
                                             RebalanceConfig,
@@ -65,6 +66,22 @@ class ClusterConfig:
     roles: str = "mixed"
     rebalance: Optional[RebalanceConfig] = None
     pool_poll_period_s: float = 0.5  # drain-completion polling cadence
+    # -- chaos harness + failure handling --
+    # a ChaosSchedule arms scripted failures on the event loop
+    # (telemetry/diagnostics are force-enabled so detection can run)
+    chaos: Optional[ChaosSchedule] = None
+    # harvest a dead engine's queued/in-flight requests and re-deliver
+    # them to survivors (KV-backed resume when the recovery log covers
+    # them); False = the pre-chaos behavior, requests on a dead engine
+    # are simply lost
+    crash_recovery: bool = True
+    # straggler hedging: re-route queued work off engines whose
+    # windowed tokens/s < hedge_ratio x fleet median (0 disables)
+    hedge_ratio: float = 0.0
+    hedge_period_s: float = 1.0
+    # client behavior across a gateway restart: deferred dispatches
+    # retry this long after the gateway comes back
+    gw_retry_delay_s: float = 0.25
 
 
 class ServingCluster:
@@ -109,6 +126,18 @@ class ServingCluster:
         self.all_requests: List = []
         self.rejected: int = 0
         self.scale_history: List[tuple] = []
+        # chaos / failure-handling accounting
+        if ccfg.chaos is not None:
+            ccfg.telemetry = True    # detection must run to remediate
+        self.chaos_log: List[tuple] = []
+        self.crashed_requests: List[int] = []   # ids on an engine at crash
+        self.crash_recovered: List[int] = []    # ids harvested + redelivered
+        self.quarantines = 0
+        self.readmits = 0
+        self.hedged = 0
+        self.gw_restarts = 0
+        self.gw_deferred = 0
+        self._gateway_down_until = float("-inf")
         # orchestration (pods + cold start) — used when autoscaling
         self.cold = ColdStartManager(streaming_loader=True)
         self.cold.register_artifact(
@@ -168,9 +197,12 @@ class ServingCluster:
         live = [e for e in self.engines if e in self.gateway.engines]
         if len(live) <= 1:
             return
-        # retire the emptiest engine (graceful: it finishes its work)
+        # retire the emptiest engine (graceful: it finishes its work).
+        # Through the pool manager, NOT the gateway alone — a stale
+        # role-pool member would keep receiving handoffs and keep
+        # counting toward pool attainment after retirement
         eid = min(live, key=lambda e: self.engines[e].metrics().num_running)
-        self.gateway.deregister_engine(eid)
+        self.pool_mgr.remove_engine(eid)
 
     @property
     def active_replicas(self) -> int:
@@ -195,17 +227,155 @@ class ServingCluster:
                     self._remediate(d)
 
     def _remediate(self, d) -> None:
+        eid = d.pod_id
+        if d.action == "quarantine":
+            # soft fault confirmed: cordon out of routing while the
+            # monitor's re-admit probe runs; the engine stays alive
+            # and keeps draining its in-flight work
+            if eid in self.gateway.engines:
+                self.gateway.cordon(eid)
+                self.quarantines += 1
+            return
+        if d.action == "readmit":
+            self.gateway.uncordon(eid)
+            self.readmits += 1
+            return
         if d.action in ("restart", "cordon", "drain"):
-            if d.pod_id in self.gateway.engines:
-                # remove from the role pools too (handoffs and pool
-                # attainment must stop seeing the degraded member) and
-                # spin up the replacement with a cold start UNDER THE
-                # SAME ROLE, so remediation preserves the P/D topology
-                role = self.pool_mgr.role_of(d.pod_id)
-                self.pool_mgr.remove_engine(d.pod_id)
-                self._spawn_engine(
-                    ready=False,
-                    role=role if role in self.pool_mgr.POOLS else "mixed")
+            if eid not in self.gateway.engines:
+                return
+            # remove from the role pools too (handoffs and pool
+            # attainment must stop seeing the degraded member) and
+            # spin up the replacement with a cold start UNDER THE
+            # SAME ROLE, so remediation preserves the P/D topology
+            role = self.pool_mgr.role_of(eid)
+            src_pool = role if role in self.pool_mgr.POOLS else "mixed"
+            eng = self.engines.get(eid)
+            lost: List = []
+            if eng is not None and not eng.healthy():
+                # the pod is DEAD: nothing on it can ever finish.
+                # Harvest every request it owns — running decodes
+                # rewind to their last recovery-log checkpoint — and
+                # re-deliver them to survivors
+                if self.ccfg.crash_recovery:
+                    lost = eng.sched.crash_takeover(self.clock.now)
+                    self.gateway.note_failure(eid, "crash")
+                    self.crash_recovered += [r.request_id for r in lost]
+            elif eng is not None:
+                # degraded but alive: graceful drain — in-flight work
+                # finishes here, only queued work is re-routed
+                lost = eng.sched.takeover_waiting()
+            self.pool_mgr.remove_engine(eid)
+            self._spawn_engine(ready=False, role=src_pool)
+            self._redeliver_lost(lost, src_pool)
+
+    def _redeliver_lost(self, reqs: List, src_pool: str,
+                        exclude=frozenset()) -> None:
+        """Re-deliver harvested requests through the role pools,
+        request by request; anything undeliverable right now (the
+        replacement is still cold-starting and no other member can
+        take it) retries on a timer instead of being dropped."""
+        pending = []
+        for r in reqs:
+            try:
+                if src_pool == "decode":
+                    self.pool_mgr.handoff(r, exclude=exclude)
+                else:
+                    self.pool_mgr.submit(r, exclude=exclude)
+            except RuntimeError:
+                pending.append(r)
+        if pending:
+            self.loop.after(1.0, lambda: self._redeliver_lost(
+                pending, src_pool, exclude))
+
+    # ------------------------------------------------------------ chaos
+    def _busiest_engine(self) -> Optional[str]:
+        live = sorted(e for e in self.engines
+                      if e in self.gateway.engines
+                      and self.engines[e].healthy())
+        if not live:
+            return None
+        return max(live, key=lambda e: (
+            self.engines[e].metrics().num_running
+            + self.engines[e].metrics().num_waiting))
+
+    def _chaos_exec(self, ev) -> None:
+        now = self.clock.now
+        self.chaos_log.append((now, ev.kind, ev.target))
+        if ev.kind == "engine_crash":
+            eid = ev.target or self._busiest_engine()
+            eng = self.engines.get(eid)
+            if eng is None:
+                return
+            # the process is gone mid-decode: heartbeat disappears from
+            # telemetry (detection), iteration stops (effect).  Every
+            # request aboard is recorded so benches can report the
+            # resumed-request latency across recovery modes.
+            sched = eng.sched
+            self.crashed_requests += [
+                r.request_id for r in (sched.waiting + sched.prefills
+                                       + sched.running)]
+            self.injector.inject(eid, FaultKind.DEVICE_LOST, now)
+            eng.alive = False
+        elif ev.kind == "straggler":
+            eid = ev.target or self._busiest_engine()
+            if eid not in self.engines:
+                return
+            self.injector.inject(eid, ev.fault, now,
+                                 severity=ev.severity)
+            if ev.duration > 0:
+                self.loop.after(ev.duration, lambda: self.injector.clear(
+                    eid, ev.fault))
+        elif ev.kind == "kv_partition":
+            if self.kv_pool is not None:
+                self.kv_pool.partition(now, ev.duration or 1.0)
+        elif ev.kind == "gateway_restart":
+            self._gateway_restart(ev.duration or 1.0)
+
+    def _gateway_restart(self, duration: float) -> None:
+        """Bounce the gateway: dispatches arriving inside the window
+        are deferred (client retries), and the restarted process comes
+        back with its warm state — routing-policy EWMAs/affinity,
+        rate-limit buckets, cordon set — wiped."""
+        now = self.clock.now
+        self.gw_restarts += 1
+        self._gateway_down_until = max(self._gateway_down_until,
+                                       now + duration)
+
+        def back_up():
+            gw = self.gateway
+            gw.set_policy(self.ccfg.routing_policy, **self.ccfg.routing_kw)
+            gw._rpm.clear()
+            gw._tpm.clear()
+            gw.cordoned.clear()
+        self.loop.after(duration, back_up)
+
+    def _hedge(self) -> None:
+        """Straggler hedging: pull queued work off engines whose
+        windowed tokens/s fell below hedge_ratio x the fleet median
+        and re-route it to faster members (the straggler keeps its
+        in-flight work — only NOT-yet-started requests move).
+        Quarantined engines count too: cordoning stops NEW routing but
+        would otherwise strand whatever was already queued on the slow
+        node for its whole (slow) drain."""
+        suspects = list(self.gateway.straggler_engines(
+            self.ccfg.hedge_ratio))
+        suspects += [e for e in self.gateway.cordoned
+                     if e not in suspects]
+        for eid in suspects:
+            eng = self.engines.get(eid)
+            if eng is None or not eng.sched.waiting:
+                continue
+            role = self.pool_mgr.role_of(eid)
+            src_pool = role if role in self.pool_mgr.POOLS else "mixed"
+            # hedging needs somewhere else to put the work
+            others = (self.pool_mgr.decoders() if src_pool == "decode"
+                      else self.pool_mgr.frontends())
+            if len(others) - (eid in others) < 1:
+                continue
+            reqs = eng.sched.takeover_waiting()
+            self.hedged += len(reqs)
+            self.gateway.note_failure(eid, "hedged")
+            self._redeliver_lost(reqs, src_pool, exclude={eid})
 
     def _autoscale(self) -> None:
         asc = self.ccfg.autoscaler
@@ -222,8 +392,11 @@ class ServingCluster:
                      if e not in self.gateway.engines
                      and self.engines[e].healthy()]
             if spare:
-                self.gateway.register_engine(spare[0],
-                                             self.engines[spare[0]])
+                # rejoin through the pool manager so pool membership
+                # and gateway registration stay consistent (the retire
+                # path removes from both)
+                self.pool_mgr.add_engine(spare[0], self.engines[spare[0]],
+                                         "mixed")
             else:
                 self._spawn_engine(ready=False)
         for _ in range(max(-delta, 0)):
@@ -236,6 +409,12 @@ class ServingCluster:
             self.all_requests.append(tr.request)
             self.loop.schedule(tr.arrival, self._make_dispatch(tr))
         self.loop.every(self.ccfg.scrape_period_s, self._scrape)
+        if self.ccfg.chaos is not None:
+            for ev in self.ccfg.chaos:
+                self.loop.schedule(ev.at, (lambda e=ev:
+                                           self._chaos_exec(e)))
+        if self.ccfg.hedge_ratio > 0:
+            self.loop.every(self.ccfg.hedge_period_s, self._hedge)
         if self.ccfg.autoscaler is not None:
             self.loop.every(self.ccfg.autoscale_period_s, self._autoscale)
         if self.disaggregated:
@@ -258,6 +437,14 @@ class ServingCluster:
 
     def _make_dispatch(self, tr: TimedRequest) -> Callable:
         def dispatch():
+            if self.clock.now < self._gateway_down_until:
+                # gateway mid-restart: the client retries shortly
+                # after the downtime window ends
+                self.gw_deferred += 1
+                self.loop.after(
+                    (self._gateway_down_until - self.clock.now)
+                    + self.ccfg.gw_retry_delay_s, dispatch)
+                return
             eid = self.gateway.route(
                 tr.request.prompt_tokens, user=tr.request.user,
                 lora_adapter=tr.request.lora_adapter,
@@ -281,6 +468,8 @@ class ServingCluster:
             s["pool_hits"] = st.hits_local + st.hits_remote
             s["pool_evictions"] = st.evictions
             s["pool_dup_drops"] = st.dup_puts_dropped
+            s["pool_fetch_failures"] = st.fetch_failures
+            s["pool_publish_failures"] = st.publish_failures
         agg = [e.metrics() for e in self.engines.values()]
         s["prefix_hit_tokens"] = sum(m.prefix_hit_tokens for m in agg)
         s["remote_hit_tokens"] = sum(m.remote_hit_tokens for m in agg)
@@ -291,6 +480,20 @@ class ServingCluster:
         s["swap_in"] = sum(m.swap_in for m in agg)
         s["kv_bytes_offloaded"] = sum(m.kv_bytes_offloaded for m in agg)
         s["kv_bytes_fetched"] = sum(m.kv_bytes_fetched for m in agg)
+        # failure handling: drop-and-recompute waste, pool-failure
+        # fallbacks and the recovery log's footprint
+        s["wasted_tokens"] = sum(m.wasted_tokens for m in agg)
+        s["kv_fetch_failures"] = sum(m.kv_fetch_failures for m in agg)
+        s["ckpt_pages"] = sum(m.ckpt_pages for m in agg)
+        if self.ccfg.telemetry or self.ccfg.chaos is not None:
+            s["diagnoses"] = len(self.diagnoses)
+            s["quarantines"] = self.quarantines
+            s["readmits"] = self.readmits
+            s["crashed_requests"] = len(self.crashed_requests)
+            s["crash_recovered"] = len(self.crash_recovered)
+            s["hedged"] = self.hedged
+            s["gw_restarts"] = self.gw_restarts
+            s["gw_deferred"] = self.gw_deferred
         if self.disaggregated:
             s["pool_counts"] = {p: len(m)
                                 for p, m in self.pool_mgr.pools.items()

@@ -36,7 +36,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
-from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.kvcache.pool import DistributedKVPool, KVPoolError
 from repro.core.kvcache.tiers import HostPagePool, validate_wire_dtype
 from repro.core.optimizer.profiles import DEVICES, PerfModel
 from repro.core.sim.events import EventLoop
@@ -89,6 +89,11 @@ class SimEngineConfig:
     slo_classes: Optional[dict] = None      # None => scheduler defaults
     slo_preempt_headroom: float = 0.25
     slo_preempt_cooldown_s: float = 1.0
+    # crash-recovery checkpoint policy (the recovery log): publish a
+    # running decode's full KV blocks to the pool every this-many new
+    # sequence tokens (0 disables), at most ckpt_budget_bytes per pass
+    ckpt_interval_tokens: int = 0
+    ckpt_budget_bytes: int = 0
 
     def scheduler_config(self) -> SchedulerConfig:
         """The shared Scheduler, two-phase or fused-mixed-batch — the
@@ -111,7 +116,9 @@ class SimEngineConfig:
             role=self.role,             # synthetic zeros
             slo_aware=self.slo_aware,
             slo_preempt_headroom=self.slo_preempt_headroom,
-            slo_preempt_cooldown_s=self.slo_preempt_cooldown_s, **kw)
+            slo_preempt_cooldown_s=self.slo_preempt_cooldown_s,
+            ckpt_interval_tokens=self.ckpt_interval_tokens,
+            ckpt_budget_bytes=self.ckpt_budget_bytes, **kw)
 
 
 class SimEngine:
@@ -324,9 +331,12 @@ class SimEngine:
         # publish every full block of (prompt + generated) tokens
         seq = list(req.prompt_tokens) + [0] * len(req.output_tokens)
         hashes = chunk_hashes(seq, self.sc.page_size)
-        for h in hashes:
-            self.kv_pool.publish(h, True, self.engine_id, now,
-                                 size_bytes=self._wire_bytes)
+        try:
+            for h in hashes:
+                self.kv_pool.publish(h, True, self.engine_id, now,
+                                     size_bytes=self._wire_bytes)
+        except KVPoolError:
+            return False    # pool partitioned: migration refused
         self.sched.drop_running(req, now)
         # target treats the full sequence-so-far as its "prompt": the
         # generated tokens keep their identity via req.output_tokens

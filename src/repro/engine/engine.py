@@ -91,6 +91,12 @@ class EngineConfig:
     slo_classes: Optional[dict] = None      # None => scheduler defaults
     slo_preempt_headroom: float = 0.25
     slo_preempt_cooldown_s: float = 1.0
+    # -- crash-recovery checkpoint policy (the recovery log) --
+    # publish a running decode's full KV blocks to the pool every
+    # this-many new sequence tokens (0 disables), bounded per pass by
+    # ckpt_budget_bytes (0 => unbounded)
+    ckpt_interval_tokens: int = 0
+    ckpt_budget_bytes: int = 0
 
     @property
     def step_token_budget(self) -> int:
@@ -113,7 +119,9 @@ class EngineConfig:
             swap_preemption=self.swap_preemption,
             slo_aware=self.slo_aware,
             slo_preempt_headroom=self.slo_preempt_headroom,
-            slo_preempt_cooldown_s=self.slo_preempt_cooldown_s, **kw)
+            slo_preempt_cooldown_s=self.slo_preempt_cooldown_s,
+            ckpt_interval_tokens=self.ckpt_interval_tokens,
+            ckpt_budget_bytes=self.ckpt_budget_bytes, **kw)
 
 
 class InferenceEngine:

@@ -59,6 +59,10 @@ class Request:
     page_ids: List[int] = field(default_factory=list)
     slot: int = -1                        # slot-engine binding
     preempt_count: int = 0                # times preempted (swap OR drop)
+    # crash-recovery log coverage: sequence tokens (prompt + generated)
+    # whose KV blocks the scheduler has checkpointed into the
+    # distributed pool — crash_takeover resumes from here
+    ckpt_tokens: int = 0
 
     # timestamps (engine clock)
     schedule_time: float = 0.0

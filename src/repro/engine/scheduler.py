@@ -81,9 +81,14 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.kvcache.pool import KVPoolError
 from repro.core.kvcache.tiers import payload_nbytes
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
+
+# sentinel: continuation admission found the checkpoint unrecoverable
+# (distinct from None = out of memory, retry later)
+_RECOMPUTE = object()
 
 
 def window_throughput(events, now: float, horizon: float = 10.0) -> float:
@@ -165,6 +170,12 @@ class EngineMetrics:
     kv_bytes_fetched: int = 0       # host/pool -> device (walk + swap-in)
     swap_out: int = 0               # preemptions that swapped (not dropped)
     swap_in: int = 0                # swapped requests resumed in place
+    # failure handling: pool fetch/publish attempts lost to a partition
+    # (after retries), generated tokens discarded by drop-and-recompute
+    # resets, and recovery-log pages published by the checkpoint policy
+    kv_fetch_failures: int = 0
+    wasted_tokens: int = 0
+    ckpt_pages: int = 0
 
 
 @dataclass
@@ -194,6 +205,16 @@ class SchedulerConfig:
     # is attached) and resumes from where it stopped; False restores
     # drop-and-recompute preemption even with a host tier present
     swap_preemption: bool = True
+    # -- crash-recovery checkpoint policy (the recovery log) --
+    # every ``ckpt_interval_tokens`` new sequence tokens, a running
+    # decode's full KV blocks are published to the distributed pool
+    # under their content hashes, so ``crash_takeover`` can resume the
+    # request on another engine from the last checkpointed page.
+    # 0 disables checkpointing (crash recovery degrades to
+    # drop-and-recompute).  ``ckpt_budget_bytes`` bounds the publish
+    # bytes per scheduler pass (0 => unbounded).
+    ckpt_interval_tokens: int = 0
+    ckpt_budget_bytes: int = 0
     # -- SLO-aware scheduling --
     # False => FIFO admission (legacy).  True => deadline-aware
     # admission: strict priority rank across classes, earliest TTFT
@@ -448,7 +469,14 @@ class Scheduler(SchedulerCore):
         self.page_payload = page_payload
         self.page_bytes = int(page_bytes)
         self._m.update(host_hit_tokens=0, kv_bytes_offloaded=0,
-                       kv_bytes_fetched=0, swap_out=0, swap_in=0)
+                       kv_bytes_fetched=0, swap_out=0, swap_in=0,
+                       kv_fetch_failures=0, wasted_tokens=0, ckpt_pages=0,
+                       crash_resumes=0)
+        # pool-failure circuit breaker: after a failed fetch/publish
+        # burst the scheduler stops talking to the pool until the
+        # backoff deadline (exponential, reset on the next success)
+        self._pool_backoff_until = float("-inf")
+        self._pool_backoff_s = 0.0
         if host_pool is not None and page_payload is not None:
             # eviction cascade: device-cache victims fall into the host
             # tier (same block hashes) instead of being dropped
@@ -574,6 +602,21 @@ class Scheduler(SchedulerCore):
             break
         if req is None:
             return None
+        if getattr(req, "_resume_decode", False):
+            # crash-rewound decode victim: resume from the recovery log
+            if self.wants_handoff:
+                # a prefill-role engine can't host the decode; degrade
+                # to a plain prefill+handoff of the original prompt
+                req._resume_decode = False
+                self._reset_recompute(req)
+            else:
+                got = self._admit_continuation(req, now)
+                if got is not _RECOMPUTE:
+                    return got      # admitted, or out of memory (None)
+                # the pool no longer covers the checkpoint (partition
+                # or eviction): degrade to full recompute below
+                req._resume_decode = False
+                self._reset_recompute(req)
         # a handoff-bound prefill engine never decodes: reserving pages
         # for the decode tokens would only shrink its prefill capacity
         # (the decode side allocates them at re-admission)
@@ -644,8 +687,7 @@ class Scheduler(SchedulerCore):
             if self.host_pool is not None:
                 payload = self.host_pool.get(hashes[i], now)
             if payload is None and self.kv_pool is not None:
-                payload = self.kv_pool.fetch(hashes[i], self.engine_id,
-                                             now)
+                payload = self._pool_fetch(hashes[i], now)
                 # stored wire size, NOT the raw page: int8-compressed
                 # payloads move (and are charged as) fewer bytes
                 nbytes = (self.kv_pool.size_of(hashes[i])
@@ -661,6 +703,114 @@ class Scheduler(SchedulerCore):
             pages.append(pids[0])
             tokens += ps
         return pages, tokens, fetched
+
+    def _admit_continuation(self, req: Request, now: float):
+        """Admit a crash-rewound decode victim by restoring its
+        checkpointed KV and rejoining the decode batch directly,
+        swap-in style.  EVERY covered page is fetched — including the
+        final one, whose KV was decode-computed on the dead engine:
+        re-prefilling it would subtly change the numerics and break
+        byte-identical greedy resume.  Returns the request on success,
+        ``None`` when out of memory (stay queued and retry), or the
+        ``_RECOMPUTE`` sentinel when the pool no longer covers the
+        checkpoint (caller degrades to full recompute)."""
+        ps = self.scfg.page_size
+        seq = list(req.prompt_tokens) + [int(t) for t in
+                                         req.output_tokens]
+        npages = len(seq) // ps
+        if npages == 0 or npages * ps != len(seq):
+            return _RECOMPUTE       # rewind always leaves page-aligned
+        hashes = chunk_hashes(seq, ps)
+        fetched: List[tuple] = []
+        pages: List[int] = []
+        missing = False
+        for i in range(npages):
+            payload, source, nbytes = None, "host", self.page_bytes
+            if self.host_pool is not None:
+                payload = self.host_pool.get(hashes[i], now)
+            if payload is None and self.kv_pool is not None:
+                payload = self._pool_fetch(hashes[i], now)
+                nbytes = (self.kv_pool.size_of(hashes[i])
+                          or self.page_bytes)
+                source = "pool"
+            if payload is None:
+                missing = True
+                break
+            pids = self.alloc.allocate(1, now)
+            if not pids:
+                break               # no memory — stay queued
+            fetched.append((pids[0], hashes[i], payload, source,
+                            payload_nbytes(payload, nbytes)))
+            pages.append(pids[0])
+        if len(pages) < npages:
+            self.alloc.release(pages, now)
+            return _RECOMPUTE if missing else None
+        total = req.prompt_len + req.sampling.max_new_tokens
+        fresh = self.alloc.allocate(
+            max(self.pages_for(total) - npages, 0), now)
+        if fresh is None:
+            self.alloc.release(pages, now)
+            return None             # no memory — stay queued
+        self._apply_fetched(fetched, req, now)
+        self.waiting.remove(req)
+        req.page_ids = pages + fresh
+        req.cached_prefix_tokens = len(seq)
+        req.prefill_done_tokens = req.prompt_len
+        req._resume_decode = False  # type: ignore[attr-defined]
+        req.state = RequestState.RUNNING
+        self.running.append(req)
+        self.note_admitted(req, now)
+        self._m["crash_resumes"] += 1
+        # a victim rewound onto its very last token is already done
+        self.maybe_finish(req, now)
+        return req
+
+    # ------------------------------------------------ pool fault isolation
+    POOL_RETRIES = 2            # in-line attempts before giving up
+    POOL_BACKOFF_S = 0.5        # first backoff window after a failure
+    POOL_BACKOFF_MAX_S = 8.0
+
+    def _pool_fetch(self, block_hash: str, now: float):
+        """``kv_pool.fetch`` behind a bounded retry + circuit breaker.
+        A partitioned pool raises :class:`KVPoolError`; the walk must
+        degrade to recompute, never crash the scheduler.  Failures
+        open an exponential backoff window during which the pool is
+        not consulted at all (every admission would otherwise pay the
+        retry cost while the partition lasts)."""
+        if now < self._pool_backoff_until:
+            return None
+        for _ in range(self.POOL_RETRIES):
+            try:
+                payload = self.kv_pool.fetch(block_hash, self.engine_id,
+                                             now)
+                self._pool_backoff_s = 0.0
+                return payload
+            except KVPoolError:
+                continue
+        self._note_pool_failure(now)
+        return None
+
+    def _pool_publish(self, pid: int, block_hash: str, req: Request,
+                      now: float) -> bool:
+        """``publish_page`` behind the same circuit breaker (a publish
+        into a partitioned pool raises too).  Returns False when the
+        publish did not happen."""
+        if now < self._pool_backoff_until:
+            return False
+        try:
+            self.publish_page(pid, block_hash, req, now)
+            self._pool_backoff_s = 0.0
+            return True
+        except KVPoolError:
+            self._note_pool_failure(now)
+            return False
+
+    def _note_pool_failure(self, now: float) -> None:
+        self._m["kv_fetch_failures"] += 1
+        self._pool_backoff_s = min(
+            max(self._pool_backoff_s * 2, self.POOL_BACKOFF_S),
+            self.POOL_BACKOFF_MAX_S)
+        self._pool_backoff_until = now + self._pool_backoff_s
 
     def _apply_fetched(self, fetched: List[tuple], req: Request,
                        now: float) -> None:
@@ -708,6 +858,7 @@ class Scheduler(SchedulerCore):
         """
         scfg = self.scfg
         self._try_resume(now)   # swapped victims outrank new admissions
+        self._maybe_checkpoint(now)
         if not scfg.mixed_batching:
             return self._schedule_two_phase(now)
         self._admit_prefills(now)
@@ -756,6 +907,8 @@ class Scheduler(SchedulerCore):
             req = self.try_admit(now)
             if req is None:
                 break
+            if req.state is RequestState.RUNNING:
+                continue    # crash-rewound continuation: already decoding
             self.prefills.append(req)
 
     def _slo_preempt(self, now: float) -> bool:
@@ -809,7 +962,7 @@ class Scheduler(SchedulerCore):
             if (req is None and scfg.slo_aware and self.waiting
                     and self._slo_preempt(now)):
                 req = self.try_admit(now)
-            if req is not None:
+            if req is not None and req.state is not RequestState.RUNNING:
                 self.prefills.append(req)
         if self.prefills:
             req = self.prefills[0]
@@ -849,7 +1002,7 @@ class Scheduler(SchedulerCore):
             # publish, and a handoff needs them present again
             if (self.kv_pool is not None and self.publish_page is not None
                     and not self.kv_pool.contains(h)):
-                self.publish_page(pid, h, req, now)
+                self._pool_publish(pid, h, req, now)
 
     def note_prefill_progress(self, req: Request, chunk_len: int) -> bool:
         """Advance a prefill by ``chunk_len`` tokens; True when the whole
@@ -939,6 +1092,10 @@ class Scheduler(SchedulerCore):
         self.waiting.insert(0, req)
 
     def _reset_recompute(self, req: Request) -> None:
+        # every discarded generated token is paid-for decode compute
+        # the fleet re-runs — the figure bench_chaos compares across
+        # recovery modes
+        self._m["wasted_tokens"] += len(req.output_tokens)
         req.output_tokens = []
         # the discarded tokens' timestamps go with them — ITL is then
         # measured over the re-run (plus the one real requeue stall
@@ -1031,6 +1188,93 @@ class Scheduler(SchedulerCore):
         self.alloc.release(req.page_ids, now)
         req.page_ids = []
 
+    # --------------------------------------------- crash recovery log
+    def _maybe_checkpoint(self, now: float) -> None:
+        """The recovery log: periodically publish a running decode's
+        full KV blocks — prompt AND generated — to the distributed
+        pool under their content hashes.  ``req.ckpt_tokens`` records
+        how many sequence tokens the log covers; after a crash,
+        :meth:`crash_takeover` rewinds the request to that point and
+        the replacement engine's admission walk fetches the
+        checkpointed blocks back instead of re-prefilling from token
+        0.  Publish volume is bounded per pass by
+        ``ckpt_budget_bytes`` and skips blocks the pool already holds
+        (prompt blocks usually entered at prefill time)."""
+        iv = self.scfg.ckpt_interval_tokens
+        if (not iv or self.kv_pool is None
+                or self.publish_page is None):
+            return
+        ps = self.scfg.page_size
+        budget = self.scfg.ckpt_budget_bytes or float("inf")
+        for req in self.running:
+            total = req.prompt_len + len(req.output_tokens)
+            full = (total // ps) * ps
+            if full - req.ckpt_tokens < iv:
+                continue
+            hashes = chunk_hashes(
+                req.prompt_tokens + req.output_tokens, ps)
+            for i in range(req.ckpt_tokens // ps, full // ps):
+                if budget <= 0:
+                    return
+                if not self.kv_pool.contains(hashes[i]):
+                    if not self._pool_publish(req.page_ids[i], hashes[i],
+                                              req, now):
+                        return      # partitioned: retry next pass
+                    self._m["ckpt_pages"] += 1
+                    budget -= max(self.page_bytes, 1)
+                req.ckpt_tokens = (i + 1) * ps
+
+    def crash_takeover(self, now: float) -> List[Request]:
+        """Harvest EVERY request a dead engine owns so the control
+        plane can re-deliver them to surviving pool members.  Queued
+        requests come back untouched (``takeover_waiting`` semantics);
+        in-flight prefills reset to recompute; running decodes rewind
+        to their last recovery-log checkpoint when one exists — the
+        surviving engine's continuation admission pulls every
+        checkpointed block (prompt AND generated) back from the pool
+        and resumes decoding mid-sequence — and reset to full
+        recompute otherwise.  The local pages are released either way:
+        this engine is gone."""
+        out = self.takeover_waiting()
+        for req in list(self.prefills):
+            self.prefills.remove(req)
+            self.alloc.release(req.page_ids, now)
+            req.page_ids = []
+            self._reset_recompute(req)
+            out.append(req)
+        for req in list(self.running):
+            self.running.remove(req)
+            self.alloc.release(req.page_ids, now)
+            req.page_ids = []
+            if not self._rewind_to_checkpoint(req):
+                self._reset_recompute(req)
+            out.append(req)
+        return out
+
+    def _rewind_to_checkpoint(self, req: Request) -> bool:
+        """Rewind a decode-phase victim onto its recovery log: keep the
+        generated tokens the log covers, drop the uncovered tail and
+        re-queue flagged for continuation admission
+        (:meth:`_admit_continuation` pulls the checkpointed blocks and
+        rejoins decode directly — the prompt is NOT folded, because the
+        covered tokens' KV must come back verbatim, never be
+        re-prefilled).  False (caller falls back to full recompute)
+        when the log never got past the prompt."""
+        gen_covered = min(req.ckpt_tokens - req.prompt_len,
+                          len(req.output_tokens))
+        if gen_covered <= 0:
+            return False
+        self._m["wasted_tokens"] += len(req.output_tokens) - gen_covered
+        req.output_tokens = list(req.output_tokens[:gen_covered])
+        # inter-token gaps for the kept tokens stay; the gap spanning
+        # the crash shows up against the first resumed token
+        req.token_times = list(req.token_times[:max(gen_covered - 1, 0)])
+        req.prefill_done_tokens = 0
+        req.cached_prefix_tokens = 0
+        req._resume_decode = True           # type: ignore[attr-defined]
+        req.state = RequestState.QUEUED
+        return True
+
     # ---------------------------------------------------------- metrics
     def match_prefix_len(self, tokens) -> int:
         """Prefix-cache coverage for router scoring (non-mutating)."""
@@ -1058,4 +1302,7 @@ class Scheduler(SchedulerCore):
             kv_bytes_offloaded=self._m["kv_bytes_offloaded"],
             kv_bytes_fetched=self._m["kv_bytes_fetched"],
             swap_out=self._m["swap_out"],
-            swap_in=self._m["swap_in"])
+            swap_in=self._m["swap_in"],
+            kv_fetch_failures=self._m["kv_fetch_failures"],
+            wasted_tokens=self._m["wasted_tokens"],
+            ckpt_pages=self._m["ckpt_pages"])

@@ -84,21 +84,23 @@ def auto_roles(cfg, n_engines: int, prompt_len: int, max_new: int,
     return ["prefill"] * rs.n_prefill + ["decode"] * rs.n_decode, rs
 
 
-def build_engines(cfg, roles, clock, ecfg_kw=None, gateway=None):
+def build_engines(cfg, roles, clock, ecfg_kw=None, gateway=None,
+                  force_pool=False):
     """A pod group under a RolePoolManager.
 
     Returns ``(engines dict, manager, pool)``.  The manager owns the
     role pools, wires the prefill->decode handoff and (when a gateway
     is passed) registers each engine under its pool so routing only
-    sees frontends.  Disaggregated groups get a DistributedKVPool; a
-    pool is also built for all-mixed groups only if requested upstream.
+    sees frontends.  Disaggregated groups get a DistributedKVPool;
+    ``force_pool`` builds one for all-mixed groups too (the chaos
+    drill's crash recovery and partition scenarios need it).
     """
     kw = dict(page_size=8, num_pages=256, max_batch=4,
               max_pages_per_seq=32, chunk_size=32)
     kw.update(ecfg_kw or {})
     disagg = any(r != "mixed" for r in roles)
     pool = None
-    if disagg:
+    if disagg or force_pool:
         pool = DistributedKVPool(capacity_bytes=1 << 30,
                                  metadata_lag=0.0, clock=clock)
     manager = RolePoolManager(clock=clock, gateway=gateway)
@@ -146,6 +148,21 @@ def main() -> None:
                     help="pool-handoff wire format: 'int8' quantizes "
                          "page payloads with per-layer scales (~4x "
                          "fewer handoff bytes), 'fp' is byte-exact")
+    ap.add_argument("--chaos", default="none",
+                    choices=("none", "engine_crash", "kv_partition"),
+                    help="mid-run chaos drill on the REAL engines: "
+                         "'engine_crash' kills the busiest engine after "
+                         "half the requests (harvested work re-delivers "
+                         "to survivors; pair with --ckpt-interval so "
+                         "running decodes resume from the recovery log "
+                         "instead of recomputing), 'kv_partition' "
+                         "partitions the KV pool for 2s (engines "
+                         "degrade to recompute behind the breaker)")
+    ap.add_argument("--ckpt-interval", type=int, default=0,
+                    help="recovery-log checkpoint interval in tokens "
+                         "(0 disables): running decodes periodically "
+                         "publish their KV pages so a crash rewinds to "
+                         "the last checkpoint, not to token 0")
     args = ap.parse_args()
 
     if args.engines is not None and args.roles not in ("mixed", "auto"):
@@ -184,20 +201,63 @@ def main() -> None:
         cfg, roles, clock,
         ecfg_kw=dict(slo_aware=args.slo,
                      host_cache_gb=args.host_cache_gb,
-                     wire_dtype=args.wire_dtype), gateway=gw)
+                     wire_dtype=args.wire_dtype,
+                     ckpt_interval_tokens=args.ckpt_interval),
+        gateway=gw, force_pool=args.chaos != "none")
+    if args.chaos == "engine_crash" and not args.ckpt_interval:
+        print("chaos: --ckpt-interval 0 — crashed decodes recompute "
+              "from token 0 (set e.g. --ckpt-interval 16 to resume "
+              "from the recovery log)")
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, 24).tolist()
     reqs = []
 
     def pump():
-        for eng in engines.values():
+        for eng in list(engines.values()):
             if eng.has_work:
                 eng.step()
         manager.poll(clock())
         if rebalancer is not None:
             rebalancer.step(clock(), manager)
 
+    def chaos_drill():
+        """Mid-run failure injection against the live engine group."""
+        now = clock()
+        if args.chaos == "kv_partition":
+            pool.partition(now=now, duration=2.0)
+            print(f"[chaos] t={now:.2f}s kv pool partitioned for 2.0s "
+                  "(fetch/publish fail; the breaker degrades admission "
+                  "to recompute until it heals)")
+            return
+        # let in-flight work decode past a checkpoint boundary first:
+        # the drill demonstrates the resume path, and a kill during
+        # prefill leaves the recovery log nothing to cover
+        for _ in range(40):
+            pump()
+        now = clock()
+        # crash the engine carrying the most work: harvest everything
+        # it owns (running decodes rewind to their recovery-log
+        # checkpoint when --ckpt-interval fed one) and re-deliver
+        victim = max(engines, key=lambda e: len(engines[e].running)
+                     + len(engines[e].prefills) + len(engines[e].waiting))
+        eng = engines.pop(victim)
+        lost = eng.sched.crash_takeover(now)
+        manager.remove_engine(victim)
+        gw.note_failure(victim, "crash")
+        for r in lost:
+            eid = gw.route(r.prompt_tokens,
+                           est_output_tokens=args.max_new,
+                           priority_class=r.priority_class)
+            engines[eid].submit(r)
+        resumed = sum(1 for r in lost
+                      if getattr(r, "_resume_decode", False)
+                      or r.output_tokens)
+        print(f"[chaos] t={now:.2f}s engine {victim} crashed: "
+              f"{len(lost)} request(s) harvested, {resumed} resuming "
+              "from the recovery log, rest recompute")
+
+    drill_after = args.requests // 2 if args.chaos != "none" else -1
     for i in range(args.requests):
         prompt = shared + rng.integers(
             0, cfg.vocab_size, max(args.prompt_len - 24, 4)).tolist()
@@ -212,6 +272,8 @@ def main() -> None:
         reqs.append((eid, r))
         # interleave a bit of serving with arrivals
         pump()
+        if i + 1 == drill_after:
+            chaos_drill()
     while any(e.has_work for e in engines.values()) or manager.draining:
         pump()
 
@@ -245,6 +307,16 @@ def main() -> None:
         print(f"  pool: puts={st.puts} hits={st.hits_local + st.hits_remote}"
               f" dup_drops={st.dup_puts_dropped}"
               f" bytes_stored={st.bytes_stored}")
+    if args.chaos != "none":
+        wasted = sum(e.metrics().wasted_tokens for e in engines.values())
+        ckpt = sum(e.metrics().ckpt_pages for e in engines.values())
+        fails = sum(e.metrics().kv_fetch_failures
+                    for e in engines.values())
+        unfinished = sum(1 for _, r in reqs
+                         if len(r.output_tokens) < args.max_new)
+        print(f"  chaos({args.chaos}): unfinished={unfinished} "
+              f"wasted_tokens={wasted} ckpt_pages={ckpt} "
+              f"kv_fetch_failures={fails}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,409 @@
+"""Chaos harness + KV-backed crash recovery.
+
+The load-bearing pin is the real-JAX one: after a simulated engine
+kill, a request resumed on a SURVIVOR from its recovery-log checkpoint
+must finish byte-identical to the never-crashed greedy run, with the
+checkpointed pages served from the distributed pool (not recomputed).
+Everything else exercises the detection -> remediation chain: per-fault
+monitor actions, quarantine hysteresis (no flapping), pool-partition
+retry/backoff with recompute fallback, straggler hedging, and the
+cluster-level crash-recovery loop.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced_config
+from repro.core.diagnostics.tools import (DiagnosticMonitor, FailureInjector,
+                                          FaultKind, Telemetry)
+from repro.core.kvcache.pool import DistributedKVPool, KVPoolError
+from repro.core.sim.chaos import ChaosEvent, ChaosSchedule
+from repro.core.sim.cluster_sim import ClusterConfig, ServingCluster
+from repro.core.sim.events import EventLoop
+from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
+from repro.core.sim.workloads import slo_mixed
+from repro.engine import (EngineConfig, InferenceEngine, Request,
+                          RequestState, SamplingParams)
+
+ARCH = "deepseek-coder-7b"
+ENGINE_KW = dict(page_size=8, num_pages=64, max_batch=4,
+                 max_pages_per_seq=16, chunk_size=16)
+
+
+# ------------------------------------------------------------- schedule
+def test_chaos_schedule_validates_and_composes():
+    with pytest.raises(ValueError):
+        ChaosEvent(1.0, "meteor_strike")
+    with pytest.raises(ValueError):
+        ChaosEvent(-1.0, "engine_crash")
+    sched = (ChaosSchedule.straggler(at=20.0, duration=5.0)
+             + ChaosSchedule.engine_crash(at=10.0))
+    assert len(sched) == 2
+    assert [e.at for e in sched] == [10.0, 20.0]   # iteration is sorted
+
+
+# ------------------------------------------------------------- injector
+def test_injector_clear_leaves_no_empty_entries():
+    inj = FailureInjector()
+    inj.inject("p0", FaultKind.THERMAL_THROTTLE, now=0.0)
+    inj.inject("p0", FaultKind.LINK_FLAP, now=0.0)
+    inj.clear("p0", FaultKind.LINK_FLAP)
+    assert [f.kind for f in inj.active["p0"]] == \
+        [FaultKind.THERMAL_THROTTLE]
+    inj.clear("p0", FaultKind.THERMAL_THROTTLE)
+    # no empty-list tombstone left behind (unbounded growth in long runs)
+    assert "p0" not in inj.active
+    inj.clear("p0", FaultKind.DEVICE_LOST)      # clearing absent: no-op
+    assert "p0" not in inj.active
+
+
+# -------------------------------------------------- monitor: per fault
+def _sample(pid, t, **kw):
+    return Telemetry(pod_id=pid, t=float(t), tokens_per_sec=100.0, **kw)
+
+
+def test_monitor_device_lost_restarts_immediately():
+    mon = DiagnosticMonitor()
+    diags = mon.observe(_sample("p0", 1.0, heartbeat_ok=False))
+    assert [(d.fault, d.action) for d in diags] == \
+        [(FaultKind.DEVICE_LOST, "restart")]
+
+
+def test_monitor_fatal_ecc_cordons_immediately():
+    mon = DiagnosticMonitor()
+    diags = mon.observe(_sample("p0", 1.0, ecc_dbe=1))
+    assert any(d.fault == FaultKind.ECC_ERROR and d.action == "cordon"
+               for d in diags)
+
+
+def test_monitor_thermal_quarantines_after_confirm():
+    inj = FailureInjector()
+    mon = DiagnosticMonitor(confirm_n=3)
+    inj.inject("p0", FaultKind.THERMAL_THROTTLE, now=0.0, severity=1.0)
+    diags = []
+    for t in range(1, 4):
+        diags += mon.observe(inj.perturb(_sample("p0", t)))
+    assert sum(1 for d in diags if d.action == "quarantine") == 1
+    assert any(d.fault == FaultKind.THERMAL_THROTTLE for d in diags)
+    assert "p0" in mon.quarantined
+
+
+def test_monitor_link_flap_quarantines_after_confirm():
+    mon = DiagnosticMonitor(confirm_n=3)
+    diags = []
+    for t in range(1, 8):
+        diags += mon.observe(_sample("p0", t, link_up=False))
+    qs = [d for d in diags if d.action == "quarantine"]
+    assert len(qs) == 1 and qs[0].fault == FaultKind.LINK_FLAP
+
+
+def test_monitor_silent_degradation_quarantines_with_history():
+    inj = FailureInjector()
+    mon = DiagnosticMonitor(confirm_n=3)
+    for t in range(10):                         # healthy baseline
+        mon.observe(_sample("p1", t))
+    inj.inject("p1", FaultKind.SILENT_DEGRADATION, 10.0, severity=0.9)
+    diags = []
+    for t in range(10, 25):
+        diags += mon.observe(inj.perturb(_sample("p1", t)))
+    assert any(d.fault == FaultKind.SILENT_DEGRADATION
+               and d.action == "quarantine" for d in diags)
+
+
+# ------------------------------------------------- monitor: hysteresis
+def test_monitor_flapping_engine_does_not_oscillate():
+    """An engine alternating anomalous/clean every scrape must neither
+    quarantine (streak never reaches confirm_n) nor — once quarantined
+    by a sustained anomaly — bounce between readmit and re-quarantine."""
+    mon = DiagnosticMonitor(confirm_n=3, quarantine_s=5.0, readmit_n=5)
+    diags = []
+    t = 0.0
+    for i in range(20):                          # flapping: 1 on, 1 off
+        t += 1.0
+        bad = (i % 2 == 0)
+        diags += mon.observe(_sample("pf", t, ecc_sbe=60 if bad else 0))
+    assert diags == []                           # hysteresis holds it
+
+    # sustained anomaly -> one quarantine
+    for _ in range(3):
+        t += 1.0
+        diags += mon.observe(_sample("pf", t, ecc_sbe=60))
+    assert [d.action for d in diags] == ["quarantine"]
+
+    # flapping DURING quarantine: clean streak keeps resetting, so the
+    # pod is neither readmitted nor re-quarantined
+    for i in range(20):
+        t += 1.0
+        bad = (i % 2 == 0)
+        diags += mon.observe(_sample("pf", t, ecc_sbe=60 if bad else 0))
+    assert [d.action for d in diags] == ["quarantine"]
+
+    # genuinely clean -> exactly one readmit
+    for _ in range(6):
+        t += 1.0
+        diags += mon.observe(_sample("pf", t))
+    assert [d.action for d in diags] == ["quarantine", "readmit"]
+    assert "pf" not in mon.quarantined
+
+
+def test_monitor_escalates_stuck_quarantine_to_restart():
+    mon = DiagnosticMonitor(confirm_n=2, escalate_s=10.0)
+    diags = []
+    for t in range(1, 14):
+        diags += mon.observe(_sample("pe", t, ecc_sbe=60))
+        if any(d.action == "restart" for d in diags):
+            break
+    assert [d.action for d in diags] == ["quarantine", "restart"]
+    assert "pe" not in mon.quarantined           # state dropped on restart
+
+
+# -------------------------------------------- pool partition + backoff
+def test_kv_pool_partition_raises_counts_and_heals():
+    t = [0.0]
+    pool = DistributedKVPool(capacity_bytes=1 << 20, metadata_lag=0.0,
+                             clock=lambda: t[0])
+    pool.partition(now=0.0, duration=5.0)
+    with pytest.raises(KVPoolError):
+        pool.publish("h0", b"x", "e0", 0.0, size_bytes=8)
+    with pytest.raises(KVPoolError):
+        pool.fetch("h0", "e0", 1.0)
+    assert pool.stats.publish_failures == 1
+    assert pool.stats.fetch_failures == 1
+    t[0] = 6.0                                   # window elapsed
+    assert not pool.partitioned(6.0)
+    pool.partition(now=6.0, duration=60.0)
+    pool.heal()                                  # explicit heal wins
+    pool.publish("h0", b"x", "e0", 6.0, size_bytes=8)
+    assert pool.fetch("h0", "e1", 6.1) == b"x"
+
+
+def test_scheduler_survives_partition_with_recompute_fallback():
+    """Two sim engines sharing a pool: engine A publishes a prompt's
+    pages; the pool partitions; engine B gets the same prompt and must
+    fall back to recompute (bounded retries + breaker, no crash), then
+    resume pool fetches after the partition heals + backoff expires."""
+    cfg = get_config(ARCH)
+    loop = EventLoop()
+    pool = DistributedKVPool(capacity_bytes=4 << 30, metadata_lag=0.0,
+                             clock=loop.clock)
+    # engine-local prefix caching off: the healed-pool stage below must
+    # go back to the POOL for its pages, not hit b's local cache
+    kw = dict(device_type="a10", page_size=16, max_batch=4,
+              chunk_size=512, prefix_caching=False)
+    a = SimEngine(cfg, loop, SimEngineConfig(**kw), kv_pool=pool,
+                  engine_id="a")
+    b = SimEngine(cfg, loop, SimEngineConfig(**kw), kv_pool=pool,
+                  engine_id="b")
+    prompt = [7] * 256
+    r0 = Request(prompt_tokens=list(prompt),
+                 sampling=SamplingParams(max_new_tokens=4))
+    loop.schedule(0.0, lambda: a.submit(r0))
+    loop.run(until=20.0, stop_when=lambda: not a.has_work)
+    assert pool.stats.puts > 0                   # prompt pages published
+    pool.tick(loop.clock.now)                    # flush pending metadata
+    assert pool.stats.bytes_stored > 0
+
+    pool.partition(now=loop.clock.now, duration=30.0)
+    r1 = Request(prompt_tokens=list(prompt),
+                 sampling=SamplingParams(max_new_tokens=4))
+    t1 = loop.clock.now
+    loop.schedule(t1 + 0.1, lambda: b.submit(r1))
+    loop.run(until=t1 + 30.0, stop_when=lambda: loop.clock.now > t1 + 0.1
+             and not b.has_work)
+    assert r1.state is RequestState.FINISHED     # recompute fallback
+    mb = b.metrics()
+    assert mb.remote_hit_tokens == 0
+    assert mb.kv_fetch_failures > 0              # breaker counted it
+
+    pool.heal()
+    r2 = Request(prompt_tokens=list(prompt),
+                 sampling=SamplingParams(max_new_tokens=4))
+    t2 = loop.clock.now + 10.0                   # past the 8s max backoff
+    loop.schedule(t2, lambda: b.submit(r2))
+    loop.run(until=t2 + 30.0, stop_when=lambda: loop.clock.now > t2
+             and not b.has_work)
+    assert r2.state is RequestState.FINISHED
+    assert b.metrics().remote_hit_tokens > 0     # pool fetches resumed
+
+
+# ------------------------------------------------- gateway-level pieces
+def test_gateway_cordon_and_straggler_detection():
+    class FakeMetrics:
+        def __init__(self, tps, waiting):
+            self.tokens_per_sec = tps
+            self.num_waiting = waiting
+            self.num_running = 0
+            self.num_active_tokens = 0
+            self.kv_utilization = 0.0
+
+    class FakeEngine:
+        def __init__(self, tps, waiting=1):
+            self._m = FakeMetrics(tps, waiting)
+
+        def metrics(self):
+            return self._m
+
+    from repro.core.gateway.gateway import Gateway
+    gw = Gateway(policy="least-request")
+    gw.register_engine("fast0", FakeEngine(100.0))
+    gw.register_engine("fast1", FakeEngine(100.0))
+    gw.register_engine("slow", FakeEngine(10.0))
+    assert gw.straggler_engines(ratio=0.5) == ["slow"]
+    # an idle slow engine is not worth hedging
+    gw.engines["slow"]._m.num_waiting = 0
+    assert gw.straggler_engines(ratio=0.5) == []
+
+    gw.cordon("fast1", reason="quarantine")
+    assert "fast1" not in gw.routable_engines()
+    assert "fast1" in gw.engines                 # still registered
+    assert gw.stats.engine_failures["fast1"]["quarantine"] == 1
+    gw.uncordon("fast1")
+    assert "fast1" in gw.routable_engines()
+
+
+# ------------------------------------------------- cluster-level chaos
+def _cluster(chaos, n=3, ckpt=64, seed=3, rate=3.0, dur=15.0, mb=8,
+             **ccfg_kw):
+    cfg = get_config(ARCH)
+    wl = slo_mixed(rate_rps=rate, duration_s=dur, seed=seed)
+    ecfg = SimEngineConfig(device_type="a10", max_batch=mb, chunk_size=512,
+                           mixed_batching=True,
+                           ckpt_interval_tokens=ckpt)
+    ccfg = ClusterConfig(num_engines=n, engine=ecfg, use_kv_pool=True,
+                         chaos=chaos, **ccfg_kw)
+    c = ServingCluster(cfg, ccfg)
+    s = c.run(wl, drain_s=300.0)
+    return c, s, [tr.request for tr in wl]
+
+
+def test_cluster_engine_crash_recovers_all_requests():
+    c, s, reqs = _cluster(ChaosSchedule.engine_crash(at=5.0))
+    assert s["crashed_requests"] > 0
+    assert s["crash_recovered"] == s["crashed_requests"]
+    assert s["finished"] == len(reqs)            # nothing lost
+    assert s["ckpt_pages"] > 0                   # recovery log was fed
+    # the dead engine was replaced and removed from pool membership
+    dead = [eid for eid, e in c.engines.items() if not e.alive]
+    assert len(dead) == 1
+    assert c.pool_mgr.role_of(dead[0]) is None
+    assert dead[0] not in c.gateway.engines
+
+
+def test_cluster_crash_without_recovery_loses_requests():
+    _, s, reqs = _cluster(ChaosSchedule.engine_crash(at=5.0),
+                          crash_recovery=False)
+    assert s["crashed_requests"] > 0
+    assert s["crash_recovered"] == 0
+    assert s["finished"] < len(reqs)             # the pre-chaos behavior
+
+
+def test_cluster_straggler_quarantine_and_hedging():
+    # the straggler starts only after the monitor has a dozen clean
+    # scrapes: silent-degradation detection compares against a baseline
+    # median of the FIRST positive throughput samples, so a fault at
+    # t=3s would pollute the baseline and never be diagnosed
+    # max_batch=2 keeps queues non-empty under load: hedging only moves
+    # NOT-yet-started requests, so the straggler must actually queue
+    c, s, reqs = _cluster(
+        ChaosSchedule.straggler(at=12.0, duration=25.0, severity=0.95,
+                                fault=FaultKind.SILENT_DEGRADATION),
+        n=4, rate=6.0, dur=30.0, mb=2, hedge_ratio=0.6)
+    assert s["finished"] == len(reqs)
+    # detection fired: the slow engine was cordoned out of routing
+    assert s["quarantines"] >= 1
+    # hedging pulled queued work off the straggler before/while the
+    # monitor's confirm window elapsed
+    assert s["hedged"] >= 1
+
+
+def test_cluster_kv_partition_degrades_to_recompute():
+    _, s, reqs = _cluster(ChaosSchedule.kv_partition(at=3.0, duration=8.0))
+    assert s["finished"] == len(reqs)            # nobody crashed on it
+    assert s["pool_publish_failures"] + s["pool_fetch_failures"] > 0
+    assert s["kv_fetch_failures"] > 0            # engines hit the breaker
+
+
+def test_cluster_gateway_restart_defers_then_delivers():
+    c, s, reqs = _cluster(ChaosSchedule.gateway_restart(at=4.0,
+                                                        duration=2.0))
+    assert s["gw_restarts"] == 1
+    assert s["gw_deferred"] > 0                  # dispatches were deferred
+    assert s["finished"] == len(reqs)            # clients retried through
+    assert c.gateway.cordoned == set()           # warm state wiped
+
+
+def test_retire_engine_removes_pool_membership():
+    cfg = get_config(ARCH)
+    ccfg = ClusterConfig(num_engines=2,
+                         engine=SimEngineConfig(device_type="a10"))
+    c = ServingCluster(cfg, ccfg)
+    eids = list(c.engines)
+    assert all(c.pool_mgr.role_of(e) is not None for e in eids)
+    c._retire_engine()
+    gone = [e for e in eids if c.pool_mgr.role_of(e) is None]
+    assert len(gone) == 1                        # satellite fix: no ghost
+    assert len(c.gateway.engines) == 1
+
+
+# ---------------------------------------------- real JAX engine: resume
+def test_crash_recovery_real_engine_byte_identical():
+    """Kill engine A mid-decode past a recovery-log checkpoint; the
+    harvested request resumes on engine B from the checkpointed pages
+    (pool-backed, not recomputed) and the final output is byte-identical
+    to the never-crashed greedy run."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    t0 = time.monotonic()
+    clock = lambda: time.monotonic() - t0        # noqa: E731
+    pool = DistributedKVPool(capacity_bytes=1 << 30, metadata_lag=0.0,
+                             clock=clock)
+    kw = dict(ENGINE_KW, ckpt_interval_tokens=8)   # every full page
+    a = InferenceEngine(cfg, EngineConfig(**kw), clock=clock,
+                        kv_pool_client=pool, engine_id="a", seed=0)
+    b = InferenceEngine(cfg, EngineConfig(**kw), clock=clock,
+                        kv_pool_client=pool, engine_id="b", seed=0)
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(0, cfg.vocab_size, 20).tolist()
+    max_new = 16
+
+    # uncrashed greedy reference on a fresh engine
+    ref_eng = InferenceEngine(cfg, EngineConfig(**ENGINE_KW), seed=0)
+    ref = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=max_new))
+    ref_eng.submit(ref)
+    ref_eng.run_until_idle()
+    assert len(ref.output_tokens) == max_new
+
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=max_new))
+    a.submit(req)
+    for _ in range(400):                         # decode past a page edge
+        if len(req.output_tokens) >= 10:
+            break
+        a.step()
+    assert len(req.output_tokens) >= 10
+    generated = list(req.output_tokens)
+    assert a.metrics().ckpt_pages >= 1
+    # the recovery log covers at least one GENERATED page
+    assert req.ckpt_tokens > len(prompt)
+
+    lost = a.sched.crash_takeover(a.clock())     # engine A is dead now
+    assert lost == [req]
+    assert req.state is RequestState.QUEUED
+    covered = req.ckpt_tokens - len(prompt)
+    # rewind kept the checkpoint-covered generated prefix, dropped the
+    # uncovered tail (it will be re-decoded on B)
+    assert req.output_tokens == generated[:covered]
+    assert req.prompt_tokens == prompt           # never folded
+    resume_cov = req.ckpt_tokens                 # page-aligned coverage
+
+    b.submit(req)
+    b.run_until_idle()
+    assert req.state is RequestState.FINISHED
+    # byte-identical continuation from the checkpointed prefix
+    assert req.output_tokens == ref.output_tokens
+    # resumed from the pool: B fetched EVERY checkpointed page (prompt
+    # + generated, including the decode-computed final page) instead
+    # of recomputing any of them
+    assert b.metrics().remote_hit_tokens == resume_cov
+    assert b.sched._m["crash_resumes"] == 1

@@ -133,19 +133,24 @@ def test_rolling_upgrade_keeps_availability():
 
 # ---------------------------------------------------------- diagnostics
 def test_injector_and_monitor_detect_each_fault():
+    """Hard faults act on one sample; soft faults must persist for
+    confirm_n consecutive scrapes and then quarantine (hysteresis)."""
     inj = FailureInjector()
-    mon = DiagnosticMonitor()
+    mon = DiagnosticMonitor(confirm_n=3)
     cases = [
-        (FaultKind.DEVICE_LOST, "restart"),
-        (FaultKind.ECC_ERROR, "cordon"),
-        (FaultKind.THERMAL_THROTTLE, "drain"),
+        (FaultKind.DEVICE_LOST, "restart", 1),    # hard: immediate
+        (FaultKind.ECC_ERROR, "cordon", 1),       # hard: immediate
+        (FaultKind.THERMAL_THROTTLE, "quarantine", 3),  # soft: confirmed
     ]
-    for kind, action in cases:
+    for i, (kind, action, samples) in enumerate(cases):
+        pid = f"p{i}"
         inj.active.clear()
-        inj.inject("p0", kind, now=0.0, severity=1.0)
-        sample = inj.perturb(Telemetry(pod_id="p0", t=1.0,
-                                       tokens_per_sec=100.0))
-        diags = mon.observe(sample)
+        inj.inject(pid, kind, now=0.0, severity=1.0)
+        diags = []
+        for t in range(1, samples + 1):
+            s = inj.perturb(Telemetry(pod_id=pid, t=float(t),
+                                      tokens_per_sec=100.0))
+            diags += mon.observe(s)
         assert any(d.fault == kind and d.action == action
                    for d in diags), (kind, diags)
 
