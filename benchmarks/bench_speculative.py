@@ -1,0 +1,147 @@
+"""Speculative n-gram decoding + the async overlapped engine loop.
+
+Real JAX engine (CPU/interpret in this container), two workloads:
+
+1. ``repetitive``  — prompts built from a repeated token motif, the
+   case prompt-lookup drafting is designed for (summarization, code
+   edits, quoting chat).  Target: >= 1.5x decode tokens/s over the
+   non-speculative engine with BYTE-IDENTICAL greedy outputs.
+2. ``adversarial`` — uniform-random prompts where the trailing n-gram
+   almost never recurs, so drafting can only lose.  The adaptive
+   acceptance-EWMA backoff (full -> 1 -> 0 drafts + periodic probe)
+   must bound the regression to <= 5%.
+
+A third section times the async overlapped loop (dispatch step N+1's
+host scheduling + input prep while step N runs on device) on the
+repetitive workload, reporting wall time and the engine's measured
+device-wait / host-overhead split, again pinned byte-identical.
+
+Speedups here are REAL measured wall-clock on the tiny reduced model;
+absolute tokens/s are not TPU numbers, but the spec-on/spec-off ratio
+exercises exactly the production step pipeline (fused verification
+pass, budget-last drafting, EWMA backoff).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.engine.engine import EngineConfig, InferenceEngine
+from repro.engine.request import Request, SamplingParams
+
+ARCH = "qwen3-0.6b"
+MOTIF = [11, 23, 5, 17]
+
+
+def _workload(kind: str, n: int, prompt_len: int,
+              vocab: int, seed: int = 0) -> List[List[int]]:
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for i in range(n):
+        if kind == "repetitive":
+            # a per-request motif repeated to prompt_len: the trailing
+            # n-gram always has an earlier occurrence to continue
+            motif = [int(t) for t in rng.integers(0, vocab, 4)]
+            reps = -(-prompt_len // len(motif))
+            prompts.append((motif * reps)[:prompt_len])
+        else:
+            prompts.append([int(t) for t in
+                            rng.integers(0, vocab, prompt_len)])
+    return prompts
+
+
+@dataclass
+class RunResult:
+    wall_s: float
+    tokens: int
+    outs: Dict[str, List[int]]
+    acceptance: float
+    drafted: int
+    device_wait_s: float
+    host_overhead_frac: float
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / max(self.wall_s, 1e-9)
+
+
+def _run(cfg, prompts: List[List[int]], max_new: int,
+         **ekw) -> RunResult:
+    ecfg = EngineConfig(num_pages=256, max_batch=4, max_pages_per_seq=16,
+                        chunk_size=32, **ekw)
+    # warmup pass compiles every jitted shape this config will touch
+    # (module-level jit caches carry over to the timed engine)
+    warm = InferenceEngine(cfg, ecfg, seed=0)
+    warm.submit(Request(request_id="w", prompt_tokens=list(prompts[0]),
+                        sampling=SamplingParams(max_new_tokens=8)))
+    warm.run_until_idle()
+    eng = InferenceEngine(cfg, ecfg, seed=0)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(
+            request_id=f"r{i}", prompt_tokens=list(p),
+            sampling=SamplingParams(max_new_tokens=max_new, seed=i)))
+    t0 = time.perf_counter()
+    eng.run_until_idle()
+    wall = time.perf_counter() - t0
+    m = eng.metrics()
+    outs = {r.request_id: list(r.output_tokens) for r in eng.finished}
+    return RunResult(wall, sum(len(o) for o in outs.values()), outs,
+                     m.spec_acceptance, m.spec_drafted_tokens,
+                     m.device_wait_s, m.host_overhead_frac)
+
+
+def main(quick: bool = False):
+    cfg = get_reduced_config(ARCH)
+    n, max_new, plen = (4, 24, 16) if quick else (8, 48, 24)
+    spec = 4
+    print("workload,mode,tok_per_s,speedup,acceptance,identical")
+
+    rep = _workload("repetitive", n, plen, cfg.vocab_size, seed=1)
+    base = _run(cfg, rep, max_new)
+    spec_on = _run(cfg, rep, max_new, spec_tokens=spec)
+    ident = spec_on.outs == base.outs
+    sp = spec_on.tok_per_s / max(base.tok_per_s, 1e-9)
+    print(f"repetitive,spec_off,{base.tok_per_s:.1f},1.00,,")
+    print(f"repetitive,spec_on,{spec_on.tok_per_s:.1f},{sp:.2f}x,"
+          f"{spec_on.acceptance:.2f},{ident}")
+
+    adv = _workload("adversarial", n, plen, cfg.vocab_size, seed=2)
+    abase = _run(cfg, adv, max_new)
+    aspec = _run(cfg, adv, max_new, spec_tokens=spec)
+    aident = aspec.outs == abase.outs
+    asp = aspec.tok_per_s / max(abase.tok_per_s, 1e-9)
+    print(f"adversarial,spec_off,{abase.tok_per_s:.1f},1.00,,")
+    print(f"adversarial,spec_on,{aspec.tok_per_s:.1f},{asp:.2f}x,"
+          f"{aspec.acceptance:.2f},{aident}")
+
+    # async overlapped loop: same repetitive workload, sync vs async
+    asy = _run(cfg, rep, max_new, async_loop=True)
+    print("\nloop,wall_s,tok_per_s,device_wait_s,host_frac,identical")
+    print(f"sync,{base.wall_s:.2f},{base.tok_per_s:.1f},"
+          f"{base.device_wait_s:.2f},{base.host_overhead_frac:.2f},")
+    print(f"async,{asy.wall_s:.2f},{asy.tok_per_s:.1f},"
+          f"{asy.device_wait_s:.2f},{asy.host_overhead_frac:.2f},"
+          f"{asy.outs == base.outs}")
+
+    ok_speed = sp >= 1.5
+    ok_adv = asp >= 0.95
+    print(f"\nspeculative speedup {sp:.2f}x "
+          f"(target >=1.5x: {'OK' if ok_speed else 'MISS'}), "
+          f"adversarial {asp:.2f}x "
+          f"(floor >=0.95x: {'OK' if ok_adv else 'MISS'}), "
+          f"greedy byte-identity: {ident and aident}")
+    return [("spec_repetitive_speedup", sp),
+            ("spec_adversarial_ratio", asp),
+            ("spec_acceptance", spec_on.acceptance)]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI smoke)")
+    main(quick=ap.parse_args().quick)

@@ -17,8 +17,10 @@ import traceback
 from benchmarks import (bench_autoscaling, bench_chaos, bench_coldstart,
                         bench_hetero, bench_kernels, bench_kv_tiers,
                         bench_kvcache, bench_lora, bench_pd_disagg,
-                        bench_pd_pools, bench_routing, bench_slo, roofline)
+                        bench_pd_pools, bench_routing, bench_slo,
+                        bench_speculative, roofline)
 from repro.core.gateway.gateway import Gateway
+from repro.engine.runner import ModelRunner
 
 SUITES = [
     ("table1_distributed_kvcache", bench_kvcache.main),
@@ -33,6 +35,7 @@ SUITES = [
     ("slo_aware_scheduling", bench_slo.main),
     ("chaos_and_crash_recovery", bench_chaos.main),
     ("pallas_kernels", bench_kernels.main),
+    ("speculative_decoding", bench_speculative.main),
     ("roofline_from_dryrun", lambda quick=False: roofline.main("", quick)),
 ]
 
@@ -51,6 +54,7 @@ def main() -> None:
         print(f"\n===== {name} " + "=" * max(8, 60 - len(name)))
         t0 = time.time()
         shed0 = Gateway.total_shed
+        wait0 = ModelRunner.total_device_wait_s
         try:
             fn(quick=args.quick)
             # loud load shedding: a suite whose gateway rate limiter
@@ -58,6 +62,11 @@ def main() -> None:
             # (it served LESS than the offered load it reports against)
             shed = Gateway.total_shed - shed0
             note = f" [gateway shed {shed} request(s)!]" if shed else ""
+            # host/device split: how long this suite's real engines sat
+            # blocked on device readbacks (0 for sim-only suites)
+            wait = ModelRunner.total_device_wait_s - wait0
+            if wait > 0:
+                note += f" [device wait {wait:.1f}s]"
             print(f"----- {name} done in {time.time()-t0:.1f}s{note}")
         except Exception:
             traceback.print_exc()

@@ -107,6 +107,27 @@ class PerfModel:
         t_mem = bytes_moved / (self.dev.hbm_bw * self.dev.mbu_decode)
         return max(t_comp, t_mem)
 
+    def spec_step_time(self, batch: int, ctx_len: float,
+                       verify_tokens: int,
+                       prefill_tokens: int = 0) -> float:
+        """Speculative verification step: each decode row feeds its
+        last token plus draft tokens through ONE pass.  The
+        ``verify_tokens`` (total drafts across the batch) add FLOPs
+        like prefill tokens but, crucially, NO extra byte traffic —
+        the weights still stream once and the KV read is the same as a
+        plain decode step — which is exactly why speculation wins on
+        the bandwidth-bound decode roofline: the step emits
+        ``1 + accepted`` tokens per row for (almost) the memory time
+        of one.  Degenerates to ``mixed_step_time`` at
+        ``verify_tokens=0``."""
+        flops = 2.0 * self.n_active * (batch + verify_tokens
+                                       + prefill_tokens)
+        t_comp = flops / (self.dev.peak_flops * self.dev.mfu_prefill)
+        bytes_moved = (self.param_bytes
+                       + batch * self.kv_bytes_per_token * ctx_len)
+        t_mem = bytes_moved / (self.dev.hbm_bw * self.dev.mbu_decode)
+        return max(t_comp, t_mem)
+
     # ---------------------------------------------------- request level
     def request_time(self, bucket: WorkloadBucket, batch: int) -> float:
         """End-to-end time of one request at the given batching level."""

@@ -124,6 +124,16 @@ class AIRuntime:
             "kv_fetch_failures": float(m.kv_fetch_failures),
             "wasted_tokens": float(m.wasted_tokens),
             "ckpt_pages": float(m.ckpt_pages),
+            # speculative decoding: draft/accept counters + acceptance
+            # fraction (dashboards watch it to tune spec_tokens)
+            "spec_drafted_tokens": float(m.spec_drafted_tokens),
+            "spec_accepted_tokens": float(m.spec_accepted_tokens),
+            "spec_acceptance": float(m.spec_acceptance),
+            # host/device overlap: seconds blocked on readback and the
+            # non-overlapped host fraction of step wall time — the gap
+            # the async engine loop hides
+            "device_wait_s": float(m.device_wait_s),
+            "host_overhead_frac": float(m.host_overhead_frac),
         }
 
     # ------------------------------------------------- engine management

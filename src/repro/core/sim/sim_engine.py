@@ -42,6 +42,7 @@ from repro.core.optimizer.profiles import DEVICES, PerfModel
 from repro.core.sim.events import EventLoop
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
+from repro.engine.speculative import FixedLengthDrafter
 from repro.engine.scheduler import (EngineMetrics, Scheduler,
                                     SchedulerConfig)
 from repro.models.config import ModelConfig
@@ -94,6 +95,16 @@ class SimEngineConfig:
     # sequence tokens (0 disables), at most ckpt_budget_bytes per pass
     ckpt_interval_tokens: int = 0
     ckpt_budget_bytes: int = 0
+    # speculative n-gram decoding: max drafts per decode row (0
+    # disables) and the synthetic acceptance rate the sim resolves
+    # verification at.  The sim cannot KNOW acceptance (it has no
+    # model), so it prices the verified step with
+    # ``PerfModel.spec_step_time`` and emits ``accept_rate * drafts``
+    # accepted tokens — flowing through the SAME ``on_spec_batch``
+    # bookkeeping (EWMA backoff included) as the real engine, which is
+    # what keeps sim/real accounting in parity
+    spec_tokens: int = 0
+    spec_accept_rate: float = 0.7
 
     def scheduler_config(self) -> SchedulerConfig:
         """The shared Scheduler, two-phase or fused-mixed-batch — the
@@ -118,7 +129,8 @@ class SimEngineConfig:
             slo_preempt_headroom=self.slo_preempt_headroom,
             slo_preempt_cooldown_s=self.slo_preempt_cooldown_s,
             ckpt_interval_tokens=self.ckpt_interval_tokens,
-            ckpt_budget_bytes=self.ckpt_budget_bytes, **kw)
+            ckpt_budget_bytes=self.ckpt_budget_bytes,
+            spec_tokens=self.spec_tokens, **kw)
 
 
 class SimEngine:
@@ -163,6 +175,12 @@ class SimEngine:
             host_pool=self.host_pool,
             page_payload=(lambda pid: True),    # sim: cost model only
             page_bytes=self._page_bytes)
+        if self.sched.drafter is not None:
+            # sim tokens are synthetic zeros the n-gram matcher cannot
+            # usefully continue; swap in the content-free drafter so
+            # spec_accept_rate shapes acceptance (see FixedLengthDrafter)
+            self.sched.drafter = FixedLengthDrafter(
+                **vars(self.sched.drafter))
         self.slowdown_fn: Callable[[], float] = lambda: 1.0
         self._busy = False
         self._adapters: set = set()
@@ -275,7 +293,16 @@ class SimEngine:
             stream += getattr(r, "_fetch_stream_s", 0.0)
             r._fetch_head_s = 0.0           # type: ignore[attr-defined]
             r._fetch_stream_s = 0.0         # type: ignore[attr-defined]
-        if batch and out.prefills:
+        if out.spec:
+            # speculative verification: draft tokens add FLOPs but no
+            # extra weight/KV byte traffic — the roofline term the
+            # expected decode speedup (and admission parity with the
+            # real engine) rests on
+            ctx = sum(r.total_tokens for r in batch) / len(batch)
+            comp = self.perf.spec_step_time(
+                len(batch), ctx, sum(len(d) for d in out.spec),
+                chunk_total) / (self._speed * slow)
+        elif batch and out.prefills:
             # fused mixed batch: decode rows + budget-trimmed prefill
             # chunks in ONE pass, one roofline over the token batch
             ctx = sum(r.total_tokens for r in batch) / len(batch)
@@ -297,7 +324,24 @@ class SimEngine:
             if self.sched.note_prefill_progress(w.req, w.chunk_len):
                 self._finish_prefill(w.req, done_t)
         if batch:
-            self.sched.on_decode_batch(batch, [0] * len(batch), done_t)
+            if out.spec:
+                # synthetic acceptance: the accept-rate share of each
+                # row's drafts lands, plus the bonus token — routed
+                # through the same on_spec_batch bookkeeping (EWMA
+                # backoff, acceptance counters) as the real engine
+                rate = self.sc.spec_accept_rate
+                # accepted tokens ARE the draft prefix by definition;
+                # only the bonus/correction sample is synthetic.  The
+                # round() keeps short (1-token) drafts acceptable so
+                # the EWMA backoff sees the configured rate, not a
+                # floor()-induced zero
+                emitted = [list(d[:min(round(rate * len(d)), len(d))])
+                           + [0] for d in out.spec]
+                self.sched.on_spec_batch(batch, out.spec, emitted,
+                                         done_t)
+            else:
+                self.sched.on_decode_batch(batch, [0] * len(batch),
+                                           done_t)
         self.loop.after(dt, self._iterate)
 
     def _finish_prefill(self, req: Request, t: float) -> None:

@@ -46,11 +46,11 @@ from repro.core.kvcache.tiers import (CompressedPage, HostPagePool,
                                       validate_wire_dtype)
 from repro.engine import paged_model as PM
 from repro.engine.page_table import PageAllocator, chunk_hashes
-from repro.engine.request import Request
+from repro.engine.request import Request, RequestState
 from repro.engine.runner import ModelRunner
-from repro.engine.scheduler import (EngineMetrics, ScheduleOutput,  # noqa: F401
-                                    Scheduler, SchedulerConfig,
-                                    window_throughput)
+from repro.engine.scheduler import (EngineMetrics, PENDING_TOKEN,  # noqa: F401
+                                    ScheduleOutput, Scheduler,
+                                    SchedulerConfig, window_throughput)
 from repro.models.config import ModelConfig
 
 
@@ -97,6 +97,21 @@ class EngineConfig:
     # ckpt_budget_bytes (0 => unbounded)
     ckpt_interval_tokens: int = 0
     ckpt_budget_bytes: int = 0
+    # -- speculative n-gram decoding --
+    # max prompt-lookup draft tokens verified per decode row in one
+    # fused pass (0 disables).  Drafts spend step budget LAST and the
+    # per-request acceptance EWMA backs them off on low-acceptance
+    # outputs — see scheduler.SchedulerConfig.
+    spec_tokens: int = 0
+    spec_ngram_max: int = 3
+    spec_ngram_min: int = 1
+    spec_probe_interval: int = 50
+    # -- async overlapped step loop --
+    # dispatch step N+1's host scheduling + input prep while step N
+    # still runs on device (decode-only steps overlap; prefill/mixed/
+    # speculative steps resolve the in-flight tokens first).  Output
+    # tokens stay byte-identical; only readback is deferred one step.
+    async_loop: bool = False
 
     @property
     def step_token_budget(self) -> int:
@@ -121,7 +136,11 @@ class EngineConfig:
             slo_preempt_headroom=self.slo_preempt_headroom,
             slo_preempt_cooldown_s=self.slo_preempt_cooldown_s,
             ckpt_interval_tokens=self.ckpt_interval_tokens,
-            ckpt_budget_bytes=self.ckpt_budget_bytes, **kw)
+            ckpt_budget_bytes=self.ckpt_budget_bytes,
+            spec_tokens=self.spec_tokens,
+            spec_ngram_max=self.spec_ngram_max,
+            spec_ngram_min=self.spec_ngram_min,
+            spec_probe_interval=self.spec_probe_interval, **kw)
 
 
 class InferenceEngine:
@@ -155,6 +174,13 @@ class InferenceEngine:
             host_pool=self.host_pool,
             page_payload=self.runner.page_payload,
             page_bytes=self.runner.page_bytes)
+        # async overlapped loop: the ONE in-flight dispatch record —
+        # {reqs, tok_dev (device), idxs (placeholder positions)};
+        # resolved when the next step is dispatched (or at drain)
+        self._pending: Optional[dict] = None
+        # wall time spent inside step(): with runner.device_wait_s it
+        # yields host_overhead_frac — the gap the async loop hides
+        self._step_wall_s = 0.0
 
     # ----------------------------------------------------------- views
     @property
@@ -250,12 +276,26 @@ class InferenceEngine:
     # ------------------------------------------------------------- step
     def step(self) -> int:
         """One scheduler iteration.  Returns #tokens produced (sampled
-        output tokens: one per decode row, one per *completed* prefill —
-        an unfinished prefill chunk produces none)."""
-        out = self.sched.schedule(self.clock())
+        output tokens: one per decode row — several per row when a
+        speculative step verified drafts — one per *completed* prefill;
+        an unfinished prefill chunk produces none).  With
+        ``async_loop`` the count for an overlapped decode step is the
+        number DISPATCHED (read back when the next step is issued)."""
+        t0 = time.perf_counter()
+        try:
+            if self.ecfg.async_loop:
+                return self._step_async()
+            return self._exec(self.sched.schedule(self.clock()))
+        finally:
+            self._step_wall_s += time.perf_counter() - t0
+
+    def _exec(self, out: ScheduleOutput) -> int:
+        """Execute one declarative schedule synchronously."""
         if out.mode == "idle":
             return 0
         if out.mode == "decode":
+            if out.spec:
+                return self._step_spec(out)
             self._postprocess_decode(out.decode,
                                      self.runner.run_decode(out.decode))
             return len(out.decode)
@@ -263,6 +303,8 @@ class InferenceEngine:
             work = out.prefills[0]
             logits = self.runner.run_prefill(work)
             return 1 if self._advance_prefill(work, logits) else 0
+        if out.spec:
+            return self._step_spec(out)
         # mixed: one fused decode+prefill pass under the token budget
         dec_logits, pre_logits = self.runner.run_mixed(out)
         produced = 0
@@ -277,6 +319,99 @@ class InferenceEngine:
                                      dec_logits[:len(out.decode)])
             produced += len(out.decode)
         return produced
+
+    def _step_spec(self, out: ScheduleOutput) -> int:
+        """One speculative verification step: every decode row carries
+        its drafts as a short multi-query chunk, prefill chunks (when
+        live) ride the same fused pass; acceptance appends the model's
+        own samples so the output stream is byte-identical to plain
+        decoding."""
+        spec_logits, pre_logits = self.runner.run_spec(out)
+        produced = 0
+        if pre_logits is not None:
+            for i, work in enumerate(out.prefills):
+                if work.chunk_len == 0:
+                    continue
+                if self._advance_prefill(work, pre_logits[i][None]):
+                    produced += 1
+        emitted = self.runner.verify_drafts(spec_logits, out.decode,
+                                            out.spec)
+        produced += self.sched.on_spec_batch(out.decode, out.spec,
+                                             emitted, self.clock())
+        return produced
+
+    # ------------------------------------------------ async overlapped loop
+    def _step_async(self) -> int:
+        """Overlap host scheduling with device compute: a decode-only
+        step is dispatched (input prep + forward + on-device sampling)
+        WITHOUT waiting for the previous step's tokens — the scheduler
+        plans on PENDING placeholders and the previous dispatch is
+        resolved only after the new one is queued.  Any other step
+        shape (prefill chunks, speculative drafts, idle) is a sync
+        point: resolve first, re-plan on the real history, run the
+        normal path."""
+        out = self.sched.schedule(self.clock())
+        if self._overlappable(out):
+            return self._dispatch_async(out.decode)
+        if self._pending is not None:
+            self.drain_async()
+            # resolution patched real tokens (and may have finished or
+            # truncated requests) — the plan must be rebuilt on it
+            out = self.sched.schedule(self.clock())
+            if self._overlappable(out):
+                return self._dispatch_async(out.decode)
+        return self._exec(out)
+
+    @staticmethod
+    def _overlappable(out: ScheduleOutput) -> bool:
+        return out.mode == "decode" and not out.spec and bool(out.decode)
+
+    def _dispatch_async(self, reqs: List[Request]) -> int:
+        reqs = list(reqs)
+        tok_dev = self.runner.run_decode_async(reqs, self._pending)
+        idxs = self.sched.on_decode_provisional(reqs, self.clock())
+        prev, self._pending = self._pending, dict(
+            reqs=reqs, tok_dev=tok_dev, idxs=idxs)
+        if prev is not None:
+            self._resolve_async(prev)
+        return len(reqs)
+
+    def _resolve_async(self, rec: dict) -> None:
+        """Read back one dispatched step's sampled tokens and patch
+        them over the PENDING placeholders.  Stop-token finishes are
+        retroactive: the stop lands at its true position and anything
+        dispatched past it (at most the one in-flight step) is
+        truncated — output streams match the sync loop byte for byte.
+        A placeholder that vanished meanwhile (preempt reset, stop
+        truncation) is skipped by the guard."""
+        toks = self.runner.readback(rec["tok_dev"])
+        now = self.clock()
+        for i, (r, idx) in enumerate(zip(rec["reqs"], rec["idxs"])):
+            if (idx >= len(r.output_tokens)
+                    or r.output_tokens[idx] != PENDING_TOKEN):
+                continue
+            tok = int(toks[i])
+            r.output_tokens[idx] = tok
+            r._pending_toks = max(
+                getattr(r, "_pending_toks", 1) - 1, 0)
+            sp = r.sampling
+            if (self.sched.honor_stop_token and sp.stop_token is not None
+                    and tok == sp.stop_token):
+                if len(r.output_tokens) > idx + 1:
+                    # over-dispatched past the stop: drop the tail
+                    # (its placeholders die here; the later record's
+                    # patch guard skips the vanished indices)
+                    del r.output_tokens[idx + 1:]
+                    del r.token_times[idx:]
+                    r._pending_toks = 0
+                if r.state is RequestState.RUNNING:
+                    self.sched.maybe_finish(r, now)
+
+    def drain_async(self) -> None:
+        """Resolve the in-flight async dispatch (no-op when none)."""
+        rec, self._pending = self._pending, None
+        if rec is not None:
+            self._resolve_async(rec)
 
     def _advance_prefill(self, work, logits) -> bool:
         """Advance one prefill chunk; True when it produced a token
@@ -302,26 +437,46 @@ class InferenceEngine:
                     now)
             self.sched.deliver_handoff(req)
             return False
-        tok = self.runner.sample(logits, [req])[0]
+        tok = self.runner.sample(
+            logits, [req],
+            positions=[req.prompt_len + len(req.output_tokens)])[0]
         self.sched.finish_prefill(req, int(tok), now)
         self.sched.note_tokens(now, req.prompt_len + 1)
         return True
 
     def _postprocess_decode(self, reqs, logits) -> None:
-        new = self.runner.sample(logits, reqs)
+        # per-position sampling keys: the sample for a given (seed,
+        # absolute position) is the same whether this row is decoded
+        # alone, in any batch order, or as part of a speculative
+        # verification pass — the invariant byte-identity rests on
+        new = self.runner.sample(
+            logits, reqs,
+            positions=[r.prompt_len + len(r.output_tokens)
+                       for r in reqs])
         self.sched.on_decode_batch(reqs, new, self.clock())
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
             if not self.has_work:
-                return
+                # async loop: the final dispatch may still be in
+                # flight after the last request "finished" on a
+                # placeholder — resolve it before declaring idle
+                self.drain_async()
+                if not self.has_work:
+                    return
             self.step()
         raise RuntimeError("engine did not drain")
 
     # ------------------------------------------------------------- metrics
     def metrics(self) -> EngineMetrics:
-        return self.sched.metrics(self.clock(),
-                                  loaded_adapters=tuple(self.adapters))
+        m = self.sched.metrics(self.clock(),
+                               loaded_adapters=tuple(self.adapters))
+        m.device_wait_s = self.runner.device_wait_s
+        if self._step_wall_s > 0:
+            m.host_overhead_frac = min(max(
+                1.0 - self.runner.device_wait_s / self._step_wall_s,
+                0.0), 1.0)
+        return m
 
     def match_prefix_len(self, tokens) -> int:
         """Prefix-cache coverage for router scoring (non-mutating)."""

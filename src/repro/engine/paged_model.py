@@ -117,6 +117,32 @@ def _qkv_lora(p_attn, cfg, x, positions, lora, adapter_ids):
     return q, k, v
 
 
+def _qkv_lora_groups(p_attn, cfg, x, positions, lora, groups):
+    """Like ``_qkv_lora_mixed`` for a flattened token batch made of
+    chunk-shaped *groups*: ``groups`` is a static list of
+    ``(adapter_ids, n_chunks, chunk_width)`` covering the token dim in
+    order.  The adapter pair is gathered once per chunk, not per token
+    (all rows of a chunk share one request's adapter)."""
+    q, k, v = layers.attn_qkv(p_attn, cfg, x, positions)
+    if lora is not None:
+        d_model = x.shape[-1]
+
+        def delta(which, heads):
+            parts, off = [], 0
+            for aids, n, s in groups:
+                seg = x[0, off:off + n * s].reshape(n, s, d_model)
+                d_seg = _lora_delta(lora, which, seg, aids)
+                parts.append(d_seg.reshape(n * s, heads, cfg.head_dim))
+                off += n * s
+            return jnp.concatenate(parts)[None]
+        dq = delta("q", cfg.n_heads)
+        dv = delta("v", cfg.n_kv_heads)
+        sin, cos = layers.rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+        q = q + layers.apply_rope(dq, sin, cos)
+        v = v + dv
+    return q, k, v
+
+
 def _qkv_lora_mixed(p_attn, cfg, x, positions, lora, dec_adapter_ids,
                     pre_adapter_ids, n_dec, n_pre, s):
     """Like ``_qkv_lora`` for the flattened (1, B + K*S, d) mixed batch.
@@ -348,3 +374,168 @@ def mixed_step(params, pool: PagePool,
         [bidx, b + kidx * s + jnp.maximum(pre_chunk - 1, 0)])
     logits = M.unembed(params, cfg, x[0, sel][None])[0]        # (B+K, V)
     return logits[:b], logits[b:], PagePool(k_new, v_new)
+
+
+# ------------------------------------------------- speculative verification
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "page_size", "impl"),
+    donate_argnums=(1,))
+def spec_decode_step(params, pool: PagePool, spec_tokens: jax.Array,
+                     spec_ctx: jax.Array, spec_len: jax.Array,
+                     spec_block_tables: jax.Array, lora=None,
+                     adapter_ids: Optional[jax.Array] = None, *,
+                     cfg: ModelConfig, page_size: int, impl: str = "pallas"
+                     ) -> Tuple[jax.Array, PagePool]:
+    """One speculative decode step: every decode row is a short
+    multi-query chunk ``[last_token, draft_1..draft_d]`` verified in a
+    single pass.
+
+    spec_tokens: (B, SD) int32 — row i feeds its last sampled token at
+                 position ``spec_ctx[i]`` followed by the drafter's
+                 proposals (padded; ``spec_len`` valid, 0 = idle slot)
+    spec_ctx:    (B,) tokens already in the pages (== the last sampled
+                 token's position)
+    Returns logits for EVERY chunk row, (B, SD, V): row j is the
+    model's distribution after consuming drafts[:j], which is exactly
+    what acceptance needs — unlike ``mixed_step``, which only unembeds
+    each chunk's last row.  KV for all fed tokens (drafts included) is
+    scattered into the pages; rejected drafts leave stale slots past
+    the accepted length that attention masks out (lengths-bounded) and
+    the next step's real tokens overwrite in place — rollback costs
+    nothing.
+    """
+    b, sd = spec_tokens.shape
+    positions = spec_ctx[:, None] + jnp.arange(sd)[None]       # (B, SD)
+    positions_flat = positions.reshape(-1)
+    x = M.embed(params, cfg, spec_tokens.reshape(-1)[None])    # (1, B*SD, d)
+    bidx = jnp.arange(b)
+    in_range = jnp.arange(sd)[None] < spec_len[:, None]        # (B, SD)
+    ltype = cfg.layer_runs[0][0]
+
+    def body(x, xs):
+        p_l, kp_l, vp_l = xs
+        oob = kp_l.shape[0]
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _qkv_lora_groups(p_l["attn"], cfg, h,
+                                   positions_flat[None], lora,
+                                   [(adapter_ids, b, sd)])
+        pidx = jnp.where(in_range,
+                         spec_block_tables[bidx[:, None],
+                                           positions // page_size],
+                         oob)                                  # OOB -> drop
+        slot = positions % page_size
+        kp_l = kp_l.at[pidx.reshape(-1), slot.reshape(-1)].set(
+            k[0], mode="drop")
+        vp_l = vp_l.at[pidx.reshape(-1), slot.reshape(-1)].set(
+            v[0], mode="drop")
+        o = kops.paged_verify(
+            q[0].reshape(b, sd, cfg.n_heads, cfg.head_dim), kp_l, vp_l,
+            spec_block_tables, spec_ctx, spec_len, impl=impl)
+        a = layers.attn_out(p_l["attn"],
+                            o.reshape(b * sd, cfg.n_heads,
+                                      cfg.head_dim)[None])
+        x = x + a
+        h2 = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if ltype == MOE:
+            f, _aux = moe.moe_ffn(p_l["moe"], cfg.moe, h2, cfg.act)
+        else:
+            f = layers.mlp(p_l["mlp"], h2, cfg.act)
+        return x + f, (kp_l, vp_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["run_0"], pool.k,
+                                               pool.v))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = M.unembed(params, cfg, x)[0]                      # (B*SD, V)
+    return logits.reshape(b, sd, -1), PagePool(k_new, v_new)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "page_size", "impl"),
+    donate_argnums=(1,))
+def spec_mixed_step(params, pool: PagePool, spec_tokens: jax.Array,
+                    spec_ctx: jax.Array, spec_len: jax.Array,
+                    spec_block_tables: jax.Array,
+                    pre_tokens: jax.Array, pre_block_tables: jax.Array,
+                    pre_ctx: jax.Array, pre_chunk: jax.Array,
+                    lora=None,
+                    spec_adapter_ids: Optional[jax.Array] = None,
+                    pre_adapter_ids: Optional[jax.Array] = None, *,
+                    cfg: ModelConfig, page_size: int, impl: str = "pallas"
+                    ) -> Tuple[jax.Array, jax.Array, PagePool]:
+    """``spec_decode_step`` fused with prefill chunks: B speculative
+    decode chunks + K prefill chunks flattened into ONE pass (the
+    spec-enabled sibling of ``mixed_step``).  Both groups ride the
+    paged-prefill kernel — speculative lanes are just short chunks at a
+    dynamic context offset — and only the unembed differs: ALL spec
+    rows produce logits (verification needs every draft position), one
+    last-row logit per prefill chunk.  Returns
+    (spec logits (B, SD, V), prefill last-token logits (K, V), pool).
+    """
+    b, sd = spec_tokens.shape
+    kk, s = pre_tokens.shape
+    h_, hd = cfg.n_heads, cfg.head_dim
+    ltype = cfg.layer_runs[0][0]
+
+    spec_positions = spec_ctx[:, None] + jnp.arange(sd)[None]  # (B, SD)
+    pre_positions = pre_ctx[:, None] + jnp.arange(s)[None]     # (K, S)
+    tokens_flat = jnp.concatenate([spec_tokens.reshape(-1),
+                                   pre_tokens.reshape(-1)])
+    positions_flat = jnp.concatenate([spec_positions.reshape(-1),
+                                      pre_positions.reshape(-1)])
+    x = M.embed(params, cfg, tokens_flat[None])                # (1, T, d)
+    bidx = jnp.arange(b)
+    kidx = jnp.arange(kk)
+    in_spec = jnp.arange(sd)[None] < spec_len[:, None]         # (B, SD)
+    in_pre = jnp.arange(s)[None] < pre_chunk[:, None]          # (K, S)
+
+    def body(x, xs):
+        p_l, kp_l, vp_l = xs
+        oob = kp_l.shape[0]
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _qkv_lora_groups(p_l["attn"], cfg, h,
+                                   positions_flat[None], lora,
+                                   [(spec_adapter_ids, b, sd),
+                                    (pre_adapter_ids, kk, s)])
+        pidx_s = jnp.where(in_spec,
+                           spec_block_tables[bidx[:, None],
+                                             spec_positions // page_size],
+                           oob)
+        pidx_p = jnp.where(
+            in_pre,
+            pre_block_tables[kidx[:, None], pre_positions // page_size],
+            oob)
+        pidx = jnp.concatenate([pidx_s.reshape(-1), pidx_p.reshape(-1)])
+        slot = jnp.concatenate(
+            [(spec_positions % page_size).reshape(-1),
+             (pre_positions % page_size).reshape(-1)])
+        kp_l = kp_l.at[pidx, slot].set(k[0], mode="drop")
+        vp_l = vp_l.at[pidx, slot].set(v[0], mode="drop")
+        o_spec = kops.paged_verify(
+            q[0, :b * sd].reshape(b, sd, h_, hd), kp_l, vp_l,
+            spec_block_tables, spec_ctx, spec_len, impl=impl)
+        o_pre = kops.paged_prefill(
+            q[0, b * sd:].reshape(kk, s, h_, hd), kp_l, vp_l,
+            pre_block_tables, pre_ctx, pre_chunk, impl=impl)
+        o = jnp.concatenate([o_spec.reshape(b * sd, h_, hd),
+                             o_pre.reshape(kk * s, h_, hd)])[None]
+        a = layers.attn_out(p_l["attn"], o)
+        x = x + a
+        h2 = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if ltype == MOE:
+            f, _aux = moe.moe_ffn(p_l["moe"], cfg.moe, h2, cfg.act)
+        else:
+            f = layers.mlp(p_l["mlp"], h2, cfg.act)
+        return x + f, (kp_l, vp_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["run_0"], pool.k,
+                                               pool.v))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # every spec row + each prefill chunk's last valid row
+    sel = jnp.concatenate(
+        [jnp.arange(b * sd),
+         b * sd + kidx * s + jnp.maximum(pre_chunk - 1, 0)])
+    logits = M.unembed(params, cfg, x[0, sel][None])[0]        # (B*SD+K, V)
+    return (logits[:b * sd].reshape(b, sd, -1), logits[b * sd:],
+            PagePool(k_new, v_new))

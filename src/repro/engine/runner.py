@@ -21,6 +21,7 @@ fetched remote pages into local device pages.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -29,14 +30,19 @@ import numpy as np
 
 from repro.engine import paged_model as PM
 from repro.engine.request import Request
-from repro.engine.sampling import sample
+from repro.engine.sampling import row_keys, sample
 from repro.engine.scheduler import PrefillWork, ScheduleOutput
+from repro.engine.speculative import accept_length
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
 
 class ModelRunner:
     """Turns declarative schedules into jitted forward passes."""
+
+    # process-wide device-wait accumulator: benchmarks/run.py prints the
+    # per-suite delta (same pattern as Gateway.total_shed)
+    total_device_wait_s = 0.0
 
     def __init__(self, cfg: ModelConfig, ecfg, params=None, seed: int = 0):
         self.cfg, self.ecfg = cfg, ecfg
@@ -67,6 +73,16 @@ class ModelRunner:
         self._pre_chunk = np.zeros(kk1, np.int32)
         self._pre_aids = np.zeros(kk1, np.int32)
         self._pre_bts = np.full((kk1, nbmax), ecfg.num_pages, np.int32)
+        # speculative verification buffers: every decode row becomes a
+        # fixed-width chunk [last_token, draft_1..draft_d] (padding to
+        # the full width keeps the jitted spec step at ONE shape)
+        sd = 1 + max(getattr(ecfg, "spec_tokens", 0), 0)
+        self._spec_toks = np.zeros((b, sd), np.int32)
+        self._spec_ctx = np.zeros(b, np.int32)
+        self._spec_len = np.zeros(b, np.int32)
+        # seconds spent blocked on device readback (this runner / all
+        # runners) — the host-overhead signal the async loop shrinks
+        self.device_wait_s = 0.0
         # outputs of the most recent jitted call.  jnp.asarray may
         # zero-copy alias a host buffer on some backend/dtype combos
         # (CPU float32 does), so before REFILLING the persistent
@@ -76,8 +92,22 @@ class ModelRunner:
 
     def _sync_inflight(self) -> None:
         if self._inflight is not None:
+            t0 = time.perf_counter()
             jax.block_until_ready(self._inflight)
+            dt = time.perf_counter() - t0
+            self.device_wait_s += dt
+            ModelRunner.total_device_wait_s += dt
             self._inflight = None
+
+    def readback(self, arr) -> np.ndarray:
+        """Block on a device array and charge the wait to the
+        device-wait counters — the async loop's one sync point."""
+        t0 = time.perf_counter()
+        jax.block_until_ready(arr)
+        dt = time.perf_counter() - t0
+        self.device_wait_s += dt
+        ModelRunner.total_device_wait_s += dt
+        return np.asarray(arr)
 
     # ------------------------------------------------------------- LoRA
     def register_adapter(self, name: str, weights: dict = None) -> int:
@@ -113,16 +143,32 @@ class ModelRunner:
         return self._adapter_ids.get(req.lora_adapter or "", 0)
 
     # ---------------------------------------------------------- sampling
-    def sample(self, logits, reqs) -> np.ndarray:
+    def sample(self, logits, reqs, positions=None) -> np.ndarray:
+        """``positions`` (absolute index of the token being produced,
+        per row) switches to per-position keying (seed x position via
+        :func:`row_keys`): the sample then doesn't depend on batch
+        order or on how many positions one pass verifies — required
+        for speculative verification to match step-by-step decoding."""
         b = logits.shape[0]
         temps = np.zeros(b, np.float32)
         tops = np.ones(b, np.float32)
         for i, r in enumerate(reqs[:b]):
             temps[i] = r.sampling.temperature
             tops[i] = r.sampling.top_p
-        self._key, sub = jax.random.split(self._key)
-        return np.asarray(sample(logits, sub, jnp.asarray(temps),
-                                 top_k=0, top_p=jnp.asarray(tops)))
+        keys = None
+        if positions is not None:
+            seeds = np.zeros(b, np.int32)
+            pos = np.zeros(b, np.int32)     # pad to the logits batch
+            for i, r in enumerate(reqs[:b]):
+                seeds[i] = r.sampling.seed
+                pos[i] = positions[i]
+            keys = row_keys(jnp.asarray(seeds), jnp.asarray(pos))
+            sub = self._key     # unused by sample() when keys given
+        else:
+            self._key, sub = jax.random.split(self._key)
+        return self.readback(sample(logits, sub, jnp.asarray(temps),
+                                    top_k=0, top_p=jnp.asarray(tops),
+                                    keys=keys))
 
     # ------------------------------------------------------- input prep
     def _pages_for(self, n_tokens: int) -> int:
@@ -213,6 +259,152 @@ class ModelRunner:
             impl=ecfg.impl)
         self._inflight = logits
         return logits
+
+    # -------------------------------------------------- speculative step
+    def _spec_inputs(self, reqs: List[Request], spec: List[List[int]]):
+        self._sync_inflight()
+        ecfg = self.ecfg
+        nb = self._bt_width(max((self._pages_for(
+            r.prompt_len + len(r.output_tokens) + len(d))
+            for r, d in zip(reqs, spec)), default=1))
+        toks, ctx, slen = self._spec_toks, self._spec_ctx, self._spec_len
+        aids = self._dec_aids
+        bts = self._dec_bts[:, :nb]
+        toks[:] = 0
+        ctx[:] = 0
+        slen[:] = 0                         # 0 marks an idle lane
+        aids[:] = 0
+        bts[:] = ecfg.num_pages             # OOB scratch page
+        for i, (r, d) in enumerate(zip(reqs, spec)):
+            toks[i, 0] = r.output_tokens[-1]
+            toks[i, 1:1 + len(d)] = d
+            ctx[i] = r.prompt_len + len(r.output_tokens) - 1
+            slen[i] = 1 + len(d)
+            n = min(len(r.page_ids), nb)
+            bts[i, :n] = r.page_ids[:n]
+            aids[i] = self._aid(r)
+        return toks, ctx, slen, bts, aids
+
+    def run_spec(self, out: ScheduleOutput
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """One speculative verification pass.  Decode-only schedules
+        take :func:`PM.spec_decode_step` (no idle prefill lanes — the
+        fast path the 1.5x target depends on); schedules carrying live
+        prefill chunks fuse them via :func:`PM.spec_mixed_step`.
+        Returns (spec logits (B, SD, V), prefill logits (K, V) | None).
+        """
+        ecfg = self.ecfg
+        live = [w for w in out.prefills if w.chunk_len > 0]
+        if live:
+            pre_toks, pre_ctx, pre_chunk, pre_aids, pre_bts = \
+                self._prefill_inputs(out.prefills, out.pad_len)
+            toks, ctx, slen, bts, aids = self._spec_inputs(
+                out.decode, out.spec)
+            spec_logits, pre_logits, self.pool = PM.spec_mixed_step(
+                self.params, self.pool, jnp.asarray(toks),
+                jnp.asarray(ctx), jnp.asarray(slen), jnp.asarray(bts),
+                jnp.asarray(pre_toks), jnp.asarray(pre_bts),
+                jnp.asarray(pre_ctx), jnp.asarray(pre_chunk), self.lora,
+                jnp.asarray(aids), jnp.asarray(pre_aids), cfg=self.cfg,
+                page_size=ecfg.page_size, impl=ecfg.impl)
+            self._inflight = (spec_logits, pre_logits)
+            return spec_logits, pre_logits
+        toks, ctx, slen, bts, aids = self._spec_inputs(out.decode, out.spec)
+        spec_logits, self.pool = PM.spec_decode_step(
+            self.params, self.pool, jnp.asarray(toks), jnp.asarray(ctx),
+            jnp.asarray(slen), jnp.asarray(bts), self.lora,
+            jnp.asarray(aids), cfg=self.cfg, page_size=ecfg.page_size,
+            impl=ecfg.impl)
+        self._inflight = spec_logits
+        return spec_logits, None
+
+    def verify_drafts(self, spec_logits, reqs: List[Request],
+                      spec: List[List[int]]) -> List[List[int]]:
+        """Sample EVERY verification row with per-position keys and
+        accept each row's longest draft prefix that matches the model's
+        own samples.  Returns per-request emitted token lists (accepted
+        prefix + the bonus/correction token) — byte-identical to what
+        step-by-step decoding would have produced."""
+        b, sd, v = spec_logits.shape
+        temps = np.zeros(b * sd, np.float32)
+        tops = np.ones(b * sd, np.float32)
+        seeds = np.zeros(b * sd, np.int32)
+        pos = np.zeros(b * sd, np.int32)
+        for i, r in enumerate(reqs):
+            temps[i * sd:(i + 1) * sd] = r.sampling.temperature
+            tops[i * sd:(i + 1) * sd] = r.sampling.top_p
+            seeds[i * sd:(i + 1) * sd] = r.sampling.seed
+            base = r.prompt_len + len(r.output_tokens)
+            pos[i * sd:(i + 1) * sd] = base + np.arange(sd)
+        keys = row_keys(jnp.asarray(seeds), jnp.asarray(pos))
+        sampled = self.readback(sample(
+            spec_logits.reshape(b * sd, v), self._key,
+            jnp.asarray(temps), top_k=0, top_p=jnp.asarray(tops),
+            keys=keys)).reshape(b, sd)
+        emitted = []
+        for i, (r, d) in enumerate(zip(reqs, spec)):
+            m = accept_length(d, sampled[i, :len(d) + 1])
+            emitted.append([int(t) for t in sampled[i, :m + 1]])
+        return emitted
+
+    # ------------------------------------------------ async decode step
+    def run_decode_async(self, reqs: List[Request],
+                         prev: Optional[dict]) -> jax.Array:
+        """Dispatch a decode step WITHOUT blocking on the previous one.
+
+        Fresh input buffers (the persistent ones require a sync before
+        refill), a device-side gather for any input token still in
+        flight (``prev["tok_dev"]`` holds the previous async step's
+        sampled tokens, not yet read back — the host only has PENDING
+        placeholders for them), and on-device sampling with per-
+        position keys so the step's output is itself a device array the
+        NEXT step can consume without a sync.  Returns the sampled
+        tokens (device)."""
+        ecfg = self.ecfg
+        b = ecfg.max_batch
+        nb = self._bt_width(max((self._pages_for(
+            r.prompt_len + len(r.output_tokens)) for r in reqs),
+            default=1))
+        toks = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        bts = np.full((b, nb), ecfg.num_pages, np.int32)
+        active = np.zeros(b, bool)
+        aids = np.zeros(b, np.int32)
+        temps = np.zeros(b, np.float32)
+        tops = np.ones(b, np.float32)
+        seeds = np.zeros(b, np.int32)
+        rows: List[int] = []
+        srcs: List[int] = []
+        prev_rows = ({id(r): j for j, r in enumerate(prev["reqs"])}
+                     if prev else {})
+        for i, r in enumerate(reqs):
+            if getattr(r, "_pending_toks", 0) and id(r) in prev_rows:
+                rows.append(i)              # token still on device
+                srcs.append(prev_rows[id(r)])
+            else:
+                toks[i] = r.output_tokens[-1]
+            pos[i] = r.prompt_len + len(r.output_tokens) - 1
+            n = min(len(r.page_ids), nb)
+            bts[i, :n] = r.page_ids[:n]
+            active[i] = True
+            aids[i] = self._aid(r)
+            temps[i] = r.sampling.temperature
+            tops[i] = r.sampling.top_p
+            seeds[i] = r.sampling.seed
+        tok_in = jnp.asarray(toks)
+        if rows:
+            tok_in = tok_in.at[jnp.asarray(np.asarray(rows))].set(
+                prev["tok_dev"][jnp.asarray(np.asarray(srcs))])
+        logits, self.pool = PM.decode_batch(
+            self.params, self.pool, tok_in, jnp.asarray(pos),
+            jnp.asarray(bts), jnp.asarray(active), self.lora,
+            jnp.asarray(aids), cfg=self.cfg, page_size=ecfg.page_size,
+            impl=ecfg.impl)
+        keys = row_keys(jnp.asarray(seeds), jnp.asarray(pos + 1))
+        tok_dev = sample(logits, self._key, jnp.asarray(temps),
+                         top_k=0, top_p=jnp.asarray(tops), keys=keys)
+        self._inflight = tok_dev
+        return tok_dev
 
     def run_prefill(self, work: PrefillWork) -> jax.Array:
         """One (possibly chunked) prefill for ONE request (two-phase)."""

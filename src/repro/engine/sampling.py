@@ -1,4 +1,18 @@
-"""Token sampling: greedy / temperature / top-k / top-p, batched."""
+"""Token sampling: greedy / temperature / top-k / top-p, batched.
+
+Two keying modes:
+
+- legacy: one ``key`` split across the batch — fine for a fixed batch,
+  but the per-row streams depend on batch *order*, so permuting the
+  batch (or verifying several positions of one row in a single pass,
+  as speculative decoding does) changes the samples.
+- per-position (``keys``): one PRNG key per row derived from the
+  request's sampling seed and the *absolute token position* via
+  :func:`row_keys`.  Sampling then commutes with batch permutation and
+  with how many positions a single pass verifies — the property that
+  makes speculative verification byte-identical to step-by-step
+  decoding even at temperature > 0.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,10 +21,27 @@ import jax
 import jax.numpy as jnp
 
 
+@jax.jit
+def row_keys(seeds: jax.Array, positions: jax.Array) -> jax.Array:
+    """One PRNG key per row: fold the request's sampling seed, then the
+    absolute token position, into a fixed root key.  Depends on nothing
+    else — not batch order, not how many tokens a pass verifies."""
+    root = jax.random.PRNGKey(0)
+
+    def mk(s, p):
+        return jax.random.fold_in(jax.random.fold_in(root, s), p)
+
+    return jax.vmap(mk)(seeds.astype(jnp.uint32),
+                        positions.astype(jnp.uint32))
+
+
 @functools.partial(jax.jit, static_argnames=("top_k",))
 def sample(logits: jax.Array, key: jax.Array, temperature: jax.Array,
-           top_k: int = 0, top_p: jax.Array = None) -> jax.Array:
-    """logits: (B, V); temperature: (B,). temperature<=0 -> greedy."""
+           top_k: int = 0, top_p: jax.Array = None,
+           keys: jax.Array = None) -> jax.Array:
+    """logits: (B, V); temperature: (B,). temperature<=0 -> greedy.
+    ``keys`` (B, key_size), e.g. from :func:`row_keys`, overrides the
+    batch-order-dependent split of ``key``."""
     b, v = logits.shape
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1)
@@ -26,7 +57,8 @@ def sample(logits: jax.Array, key: jax.Array, temperature: jax.Array,
         cutoff_idx = jnp.sum(csum < top_p[:, None], axis=-1)
         cutoff = jnp.take_along_axis(sorted_, cutoff_idx[:, None], axis=-1)
         scaled = jnp.where(scaled >= cutoff, scaled, -jnp.inf)
-    keys = jax.random.split(key, b)
+    if keys is None:
+        keys = jax.random.split(key, b)
     sampled = jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(
         keys, scaled)
     return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)

@@ -85,10 +85,15 @@ from repro.core.kvcache.pool import KVPoolError
 from repro.core.kvcache.tiers import payload_nbytes
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
+from repro.engine.speculative import DraftController
 
 # sentinel: continuation admission found the checkpoint unrecoverable
 # (distinct from None = out of memory, retry later)
 _RECOMPUTE = object()
+
+# async overlapped loop: placeholder appended for a dispatched-but-not-
+# yet-read-back decode token (never a real token id; patched at readback)
+PENDING_TOKEN = -1
 
 
 def window_throughput(events, now: float, horizon: float = 10.0) -> float:
@@ -176,6 +181,18 @@ class EngineMetrics:
     kv_fetch_failures: int = 0
     wasted_tokens: int = 0
     ckpt_pages: int = 0
+    # speculative decoding: drafted vs model-confirmed verify tokens,
+    # steps that carried drafts, and the acceptance fraction — what the
+    # sim's expected-speedup pricing and the adaptive backoff key on
+    spec_drafted_tokens: int = 0
+    spec_accepted_tokens: int = 0
+    spec_steps: int = 0
+    spec_acceptance: float = 0.0
+    # host/device overlap observability (filled by the real engine):
+    # seconds blocked on device readback, and the fraction of step wall
+    # time spent on host-side work — the gap the async loop hides
+    device_wait_s: float = 0.0
+    host_overhead_frac: float = 0.0
 
 
 @dataclass
@@ -229,6 +246,17 @@ class SchedulerConfig:
     # minimum spacing between preemptions: bounds the decode work a
     # burst of urgent prefills can throw away
     slo_preempt_cooldown_s: float = 1.0
+    # -- speculative n-gram decoding (mixed_batching only) --
+    # max draft tokens proposed per decode row (0 disables).  Drafts
+    # spend step budget LAST — after decode tokens and prefill chunks —
+    # so prefill pressure naturally shrinks/starves them, and the
+    # per-request acceptance EWMA (DraftController) backs draft length
+    # off to 1 then 0 on low-acceptance outputs, re-probing every
+    # ``spec_probe_interval`` passes.
+    spec_tokens: int = 0
+    spec_ngram_max: int = 3
+    spec_ngram_min: int = 1
+    spec_probe_interval: int = 50
 
     @property
     def step_token_budget(self) -> int:
@@ -256,6 +284,10 @@ class ScheduleOutput:
     decode: List[Request] = field(default_factory=list)
     prefills: List[PrefillWork] = field(default_factory=list)
     pad_len: int = 0                            # chunk width (mixed)
+    # speculative drafts, parallel to ``decode`` (row i verifies
+    # ``spec[i]`` draft tokens; [] = plain decode row).  Empty overall
+    # when no row drafted — the runner then takes the non-spec path.
+    spec: List[List[int]] = field(default_factory=list)
 
 
 class SchedulerCore:
@@ -471,7 +503,16 @@ class Scheduler(SchedulerCore):
         self._m.update(host_hit_tokens=0, kv_bytes_offloaded=0,
                        kv_bytes_fetched=0, swap_out=0, swap_in=0,
                        kv_fetch_failures=0, wasted_tokens=0, ckpt_pages=0,
-                       crash_resumes=0)
+                       crash_resumes=0, spec_drafted_tokens=0,
+                       spec_accepted_tokens=0, spec_steps=0)
+        # speculative n-gram drafting: the controller owns the adaptive
+        # per-request draft-length policy (acceptance EWMA + probe)
+        self.drafter = DraftController(
+            max_draft=scfg.spec_tokens,
+            ngram_max=scfg.spec_ngram_max,
+            ngram_min=scfg.spec_ngram_min,
+            probe_interval=scfg.spec_probe_interval) \
+            if scfg.spec_tokens > 0 else None
         # pool-failure circuit breaker: after a failed fetch/publish
         # burst the scheduler stops talking to the pool until the
         # backoff deadline (exponential, reset on the next success)
@@ -868,8 +909,10 @@ class Scheduler(SchedulerCore):
         if not self.prefills:
             if not self.running:
                 return ScheduleOutput(mode="idle")
-            return ScheduleOutput(mode="decode",
-                                  decode=self.running[:scfg.max_batch])
+            dec = self.running[:scfg.max_batch]
+            spec = self._assign_drafts(
+                dec, scfg.step_token_budget - len(dec))
+            return ScheduleOutput(mode="decode", decode=dec, spec=spec)
         dec = self.running[:scfg.max_batch]
         # decode tokens spend the budget first; floor of 1 guarantees an
         # in-flight prefill always progresses (liveness under a budget
@@ -895,8 +938,32 @@ class Scheduler(SchedulerCore):
             # would carry max_batch dummy decode lanes of compute
             return ScheduleOutput(mode="prefill", prefills=works,
                                   pad_len=s)
+        # drafts spend whatever budget the prefill chunks left over —
+        # prefill admission can never be starved by drafting
+        spec = self._assign_drafts(dec, max(budget, 0))
         return ScheduleOutput(mode="mixed", decode=dec, prefills=works,
-                              pad_len=s)
+                              pad_len=s, spec=spec)
+
+    def _assign_drafts(self, dec: List[Request],
+                       budget: int) -> List[List[int]]:
+        """Prompt-lookup drafts for the decode rows, spending at most
+        the leftover ``budget`` (one token of budget per draft token).
+        Returns [] — the non-spec fast path — when no row drafted."""
+        if (self.drafter is None or not self.scfg.mixed_batching
+                or not dec or budget <= 0):
+            return []
+        spec, any_draft = [], False
+        for r in dec:
+            if getattr(r, "_pending_toks", 0):
+                # async loop: unresolved placeholder in the history —
+                # this schedule pass is a provisional plan, don't draft
+                spec.append([])
+                continue
+            d = self.drafter.propose(r, budget)
+            budget -= len(d)
+            any_draft = any_draft or bool(d)
+            spec.append(d)
+        return spec if any_draft else []
 
     def _admit_prefills(self, now: float) -> None:
         scfg = self.scfg
@@ -1063,6 +1130,77 @@ class Scheduler(SchedulerCore):
             self.maybe_finish(r, now)
         self.note_tokens(now, len(reqs))
 
+    def on_spec_batch(self, reqs: List[Request], spec: List[List[int]],
+                      emitted: List[List[int]], now: float) -> int:
+        """Record a speculative step's verified tokens.  Row ``i``
+        drafted ``spec[i]`` and the runner's verification emitted
+        ``emitted[i]`` model-sampled tokens (accepted prefix + the
+        bonus/correction sample).  Tokens append one at a time through
+        the same page-growth / finish checks as :meth:`on_decode_batch`
+        — a stop token mid-emission finishes the request and drops the
+        rest (byte-identity with step-by-step decoding); the rejected
+        drafts' stale KV slots are never attended (lengths-bounded
+        attention) and are overwritten when real tokens land there."""
+        total = 0
+        for r, drafts, toks in zip(reqs, spec, emitted):
+            accepted = max(min(len(toks) - 1, len(drafts)), 0)
+            if self.drafter is not None:
+                self.drafter.observe(r, len(drafts), accepted)
+            self._m["spec_drafted_tokens"] += len(drafts)
+            if drafts:
+                self._m["spec_steps"] += 1
+            appended = 0
+            for t in toks:
+                r.output_tokens.append(int(t))
+                r.token_times.append(now)
+                appended += 1
+                if self.maybe_finish(r, now):
+                    break
+                nxt = r.prompt_len + len(r.output_tokens)
+                if self.pages_for(nxt + 1) > len(r.page_ids):
+                    pid = self.alloc.allocate(1, now)
+                    if pid is None:
+                        self.preempt(r, now)
+                        break
+                    r.page_ids += pid
+            # only tokens that actually landed count as accepted work
+            self._m["spec_accepted_tokens"] += max(
+                min(appended - 1, accepted), 0)
+            total += appended
+        self.note_tokens(now, total)
+        return total
+
+    # ------------------------------------------- async overlapped loop
+    def on_decode_provisional(self, reqs: List[Request],
+                              now: float) -> List[int]:
+        """Bookkeeping for a decode step dispatched but not yet read
+        back (the async loop schedules step N+1 while N runs on
+        device).  Appends a :data:`PENDING_TOKEN` placeholder per row —
+        patched with the real token at readback — so page growth,
+        max_new_tokens finishes and the next schedule() pass all see
+        the correct sequence LENGTH immediately.  Stop-token finishes
+        cannot be predicted from a placeholder; the engine resolves
+        them retroactively at readback.  Returns each request's
+        placeholder index into ``output_tokens``."""
+        idxs = []
+        for r in reqs:
+            r.output_tokens.append(PENDING_TOKEN)
+            r.token_times.append(now)
+            r._pending_toks = getattr(r, "_pending_toks", 0) + 1  # type: ignore
+            idxs.append(len(r.output_tokens) - 1)
+            nxt = r.prompt_len + len(r.output_tokens)
+            if self.pages_for(nxt + 1) > len(r.page_ids):
+                pid = self.alloc.allocate(1, now)
+                if pid is None:
+                    self.preempt(r, now)
+                    continue
+                r.page_ids += pid
+            # max_new_tokens is count-predictable even on placeholders;
+            # stop tokens are handled at readback by the engine
+            self.maybe_finish(r, now)
+        self.note_tokens(now, len(reqs))
+        return idxs
+
     def maybe_finish(self, req: Request, now: float) -> bool:
         if not self.request_done(req):
             return False
@@ -1102,6 +1240,9 @@ class Scheduler(SchedulerCore):
         # from first_token_time, which stays: TTFT already happened)
         req.token_times = []
         req.prefill_done_tokens = 0
+        # any in-flight async placeholder died with the tokens; the
+        # engine's readback patch guard skips the vanished index
+        req._pending_toks = 0               # type: ignore[attr-defined]
         req.state = RequestState.QUEUED
 
     # ----------------------------------------------------- swap preemption
@@ -1117,7 +1258,11 @@ class Scheduler(SchedulerCore):
         scfg = self.scfg
         if (not scfg.swap_preemption or self.host_pool is None
                 or self.page_payload is None or not req.page_ids
-                or req.prefill_done_tokens < req.prompt_len):
+                or req.prefill_done_tokens < req.prompt_len
+                or getattr(req, "_pending_toks", 0)):
+            # a victim with unresolved async placeholders can't swap —
+            # the parked tokens would contain PENDING_TOKEN sentinels a
+            # resume could feed back to the model; drop-and-recompute
             return False
         n = len(req.page_ids)
         if not self.host_pool.can_hold(n * self.page_bytes):
@@ -1207,6 +1352,11 @@ class Scheduler(SchedulerCore):
         ps = self.scfg.page_size
         budget = self.scfg.ckpt_budget_bytes or float("inf")
         for req in self.running:
+            if getattr(req, "_pending_toks", 0):
+                # async loop: unresolved PENDING_TOKEN placeholders —
+                # hashing them would poison the recovery log; the next
+                # resolved pass checkpoints the real tokens
+                continue
             total = req.prompt_len + len(req.output_tokens)
             full = (total // ps) * ps
             if full - req.ckpt_tokens < iv:
@@ -1305,4 +1455,9 @@ class Scheduler(SchedulerCore):
             swap_in=self._m["swap_in"],
             kv_fetch_failures=self._m["kv_fetch_failures"],
             wasted_tokens=self._m["wasted_tokens"],
-            ckpt_pages=self._m["ckpt_pages"])
+            ckpt_pages=self._m["ckpt_pages"],
+            spec_drafted_tokens=self._m["spec_drafted_tokens"],
+            spec_accepted_tokens=self._m["spec_accepted_tokens"],
+            spec_steps=self._m["spec_steps"],
+            spec_acceptance=(self._m["spec_accepted_tokens"]
+                             / max(self._m["spec_drafted_tokens"], 1)))

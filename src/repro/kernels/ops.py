@@ -50,6 +50,21 @@ def paged_prefill(q, k_pages, v_pages, block_tables, ctx_lens, chunk_lens,
     return out[:, :s]
 
 
+def paged_verify(q, k_pages, v_pages, block_tables, ctx_lens, draft_lens,
+                 *, impl: str = "pallas"):
+    """Speculative-verification attention: each decode row is a short
+    multi-query chunk ``[last_token, draft_1..draft_d]`` at a dynamic
+    context offset — exactly the paged-prefill shape, so the lanes ride
+    :func:`paged_prefill` with ``block_q`` sized for the small draft
+    window (one q-block instead of a 128-wide tile mostly full of
+    padding).  ``draft_lens`` counts valid rows per lane (1 + accepted
+    drafts to verify; 0 marks an idle decode slot)."""
+    sd = q.shape[1]
+    return paged_prefill(q, k_pages, v_pages, block_tables, ctx_lens,
+                         draft_lens, block_q=min(_round_up(sd, 8), 32),
+                         impl=impl)
+
+
 def flash_attention(q, k, v, lengths, *, window: int = 0, q_offset: int = 0,
                     block_q: int = 128, block_k: int = 128,
                     impl: str = "pallas"):

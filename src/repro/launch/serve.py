@@ -163,6 +163,15 @@ def main() -> None:
                          "(0 disables): running decodes periodically "
                          "publish their KV pages so a crash rewinds to "
                          "the last checkpoint, not to token 0")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative n-gram decoding: max prompt-"
+                         "lookup draft tokens verified per decode row "
+                         "in one fused pass (0 disables); outputs stay "
+                         "byte-identical under greedy decoding")
+    ap.add_argument("--async-loop", action="store_true",
+                    help="overlap host scheduling/input prep for step "
+                         "N+1 with step N's device compute (decode "
+                         "steps dispatch before the previous readback)")
     args = ap.parse_args()
 
     if args.engines is not None and args.roles not in ("mixed", "auto"):
@@ -202,7 +211,9 @@ def main() -> None:
         ecfg_kw=dict(slo_aware=args.slo,
                      host_cache_gb=args.host_cache_gb,
                      wire_dtype=args.wire_dtype,
-                     ckpt_interval_tokens=args.ckpt_interval),
+                     ckpt_interval_tokens=args.ckpt_interval,
+                     spec_tokens=args.spec_tokens,
+                     async_loop=args.async_loop),
         gateway=gw, force_pool=args.chaos != "none")
     if args.chaos == "engine_crash" and not args.ckpt_interval:
         print("chaos: --ckpt-interval 0 — crashed decodes recompute "
@@ -276,6 +287,8 @@ def main() -> None:
             chaos_drill()
     while any(e.has_work for e in engines.values()) or manager.draining:
         pump()
+    for eng in engines.values():
+        eng.drain_async()       # resolve any in-flight async dispatch
 
     print(f"\nrouting ({args.policy}):", dict(gw.stats.per_engine))
     s = summarize([r for _, r in reqs])
@@ -294,6 +307,13 @@ def main() -> None:
             print(f"    tiers: swap_out={m.swap_out} swap_in={m.swap_in}"
                   f" offloaded={m.kv_bytes_offloaded >> 10}KiB"
                   f" fetched={m.kv_bytes_fetched >> 10}KiB")
+        if m.spec_drafted_tokens:
+            print(f"    spec: drafted={m.spec_drafted_tokens} "
+                  f"accepted={m.spec_accepted_tokens} "
+                  f"acceptance={m.spec_acceptance:.2f}")
+        if args.async_loop or m.device_wait_s:
+            print(f"    overlap: device_wait={m.device_wait_s:.2f}s "
+                  f"host_overhead_frac={m.host_overhead_frac:.2f}")
         if m.slo_by_class:
             rows = " ".join(
                 f"{c}: ttft={ta:.2f} itl={ia:.2f} n={n}"

@@ -1,0 +1,200 @@
+"""Speculative n-gram decoding + async overlapped loop.
+
+Unit layer: the prompt-lookup drafter, acceptance rule and adaptive
+backoff.  System layer: the real JAX engine must be BYTE-IDENTICAL
+under greedy sampling with speculation on/off and with the async loop
+on/off, never leak pages for rejected draft KV, never starve prefill,
+and keep sim/real spec accounting flowing through the same scheduler
+hook.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.sim import SimEngineConfig
+from repro.core.sim.sim_engine import SimEngine
+from repro.engine import (EngineConfig, InferenceEngine, Request,
+                          SamplingParams)
+from repro.engine.speculative import (DraftController, accept_length,
+                                      ngram_propose)
+
+# ----------------------------------------------------------- unit layer
+
+
+def test_ngram_propose_continues_recent_occurrence():
+    # trailing [5, 6] occurred earlier, continuation is [7, 8, 5]
+    hist = [5, 6, 7, 8, 5, 6]
+    assert ngram_propose(hist, 3) == [7, 8, 5]
+    # max_draft caps the proposal
+    assert ngram_propose(hist, 1) == [7]
+
+
+def test_ngram_propose_prefers_most_recent_match():
+    # trailing [2]: matches at idx 1 (-> 9) and idx 3 (-> 4); the most
+    # recent earlier occurrence wins
+    hist = [1, 2, 9, 2, 4, 2]
+    assert ngram_propose(hist, 1, ngram_max=1) == [4]
+
+
+def test_ngram_propose_no_match_or_budget_is_empty():
+    assert ngram_propose([1, 2, 3, 4], 3) == []          # no repeats
+    assert ngram_propose([5, 6, 5, 6], 0) == []          # no budget
+    assert ngram_propose([7], 3) == []                   # too short
+
+
+def test_accept_length_rules():
+    # sampled[j] is the model's token after drafts[:j]
+    assert accept_length([1, 2, 3], [1, 2, 3, 9]) == 3   # all accepted
+    assert accept_length([1, 2, 3], [1, 7, 0, 0]) == 1   # diverge at 1
+    assert accept_length([4], [9, 9]) == 0               # instant miss
+    assert accept_length([], [5]) == 0                   # plain decode
+
+
+def test_draft_controller_backoff_and_probe():
+    ctl = DraftController(max_draft=4, probe_interval=3)
+    req = Request(prompt_tokens=[1, 2, 1, 2],
+                  sampling=SamplingParams(max_new_tokens=64))
+    assert ctl.allowed(req) == 4                # optimistic start
+    for _ in range(8):                          # drafts keep missing
+        ctl.observe(req, drafted=4, accepted=0)
+    assert req._spec_ewma < ctl.min_threshold
+    assert ctl.allowed(req) == 1                # first call arms a probe
+    assert [ctl.allowed(req) for _ in range(3)] == [0, 0, 0]
+    assert ctl.allowed(req) == 1                # probe fires again
+    for _ in range(8):                          # output turned repetitive
+        ctl.observe(req, drafted=1, accepted=1)
+    assert ctl.allowed(req) == 4                # recovered to full drafts
+
+
+def test_draft_controller_caps_by_budget_and_room():
+    ctl = DraftController(max_draft=4)
+    req = Request(prompt_tokens=[5, 6, 5, 6],
+                  sampling=SamplingParams(max_new_tokens=3))
+    req.output_tokens = [5]
+    # room = 3 - 1 - 1 = 1: the draft may never write KV past the
+    # pages max_new_tokens reserved at admission
+    assert len(ctl.propose(req, budget=8)) <= 1
+    assert ctl.propose(req, budget=0) == []
+
+
+# --------------------------------------------------------- system layer
+
+REP_PROMPT = [5, 6, 7, 8] * 6
+
+
+def _engine(**kw):
+    cfg = get_reduced_config("qwen3-0.6b")
+    defaults = dict(num_pages=128, max_batch=4, max_pages_per_seq=16,
+                    chunk_size=16)
+    defaults.update(kw)
+    return cfg, InferenceEngine(cfg, EngineConfig(**defaults), seed=0)
+
+
+def _run(prompts, max_new=10, stop=None, **kw):
+    cfg, eng = _engine(**kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(
+            request_id=f"r{i}", prompt_tokens=list(p),
+            sampling=SamplingParams(max_new_tokens=max_new,
+                                    stop_token=stop)))
+    eng.run_until_idle()
+    outs = {r.request_id: list(r.output_tokens) for r in eng.finished}
+    return eng, outs
+
+
+@pytest.fixture(scope="module")
+def greedy_baseline():
+    rng = np.random.default_rng(3)
+    prompts = [REP_PROMPT, rng.integers(0, 64, 20).tolist(),
+               [9, 9, 3, 9, 9, 3, 9, 9]]
+    _, outs = _run(prompts)
+    return prompts, outs
+
+
+def test_spec_greedy_byte_identical(greedy_baseline):
+    prompts, base = greedy_baseline
+    eng, outs = _run(prompts, spec_tokens=4)
+    assert outs == base
+    m = eng.metrics()
+    assert m.spec_drafted_tokens > 0            # speculation actually ran
+    assert 0 < m.spec_accepted_tokens <= m.spec_drafted_tokens
+    # rejected draft KV needs no rollback and leaks nothing
+    assert eng.alloc.num_free == eng.alloc.num_pages
+
+
+def test_async_loop_greedy_byte_identical(greedy_baseline):
+    prompts, base = greedy_baseline
+    eng, outs = _run(prompts, async_loop=True)
+    assert outs == base
+    assert eng.alloc.num_free == eng.alloc.num_pages
+    assert eng.metrics().device_wait_s >= 0.0
+
+
+def test_spec_plus_async_byte_identical(greedy_baseline):
+    prompts, base = greedy_baseline
+    _, outs = _run(prompts, spec_tokens=4, async_loop=True)
+    assert outs == base
+
+
+def test_spec_stop_token_mid_draft(greedy_baseline):
+    """A stop token emitted inside an accepted draft burst must truncate
+    the output exactly where the sync engine stops."""
+    prompts, _ = greedy_baseline
+    _, base = _run(prompts, max_new=12, stop=6)
+    for kw in (dict(spec_tokens=4), dict(async_loop=True),
+               dict(spec_tokens=4, async_loop=True)):
+        _, outs = _run(prompts, max_new=12, stop=6, **kw)
+        assert outs == base, kw
+
+
+def test_spec_prefill_not_starved():
+    """Drafts spend step budget LAST: with a budget barely above the
+    decode row count, prefill chunks still make progress and every
+    request finishes."""
+    long_prompt = ([3, 1, 4, 1, 5, 9, 2, 6] * 8)[:60]
+    eng, outs = _run([REP_PROMPT, REP_PROMPT, long_prompt],
+                     max_new=8, spec_tokens=4, chunk_size=8)
+    assert len(outs) == 3 and all(len(o) == 8 for o in outs.values())
+    assert eng.metrics().finished_requests == 3
+
+
+def _sim(**kw):
+    from repro.configs import get_config
+    from repro.core.sim.events import EventLoop
+    loop = EventLoop()
+    cfg = get_config("deepseek-coder-7b")
+    eng = SimEngine(cfg, loop, SimEngineConfig(device_type="a10",
+                                               mixed_batching=True, **kw))
+    return loop, eng
+
+
+def test_sim_spec_accounting_parity():
+    """The simulator prices spec steps via the roofline and pushes
+    synthetic acceptance through the SAME ``on_spec_batch`` hook the
+    real engine uses, so sidecar counters mean the same thing in both
+    worlds."""
+    rate = 0.75
+    loop, eng = _sim(spec_tokens=4, spec_accept_rate=rate)
+    for i in range(8):
+        eng.submit(Request(request_id=f"s{i}",
+                           prompt_tokens=[1, 2, 3, 4] * 16,
+                           sampling=SamplingParams(max_new_tokens=48),
+                           arrival_time=0.0))
+    loop.run(until=1e6, stop_when=lambda: not eng.has_work)
+    m = eng.metrics()
+    assert m.finished_requests == 8
+    assert m.spec_drafted_tokens > 0
+    assert m.spec_steps > 0
+    assert 0 < m.spec_accepted_tokens <= m.spec_drafted_tokens
+    assert abs(m.spec_acceptance - rate) < 0.15
+
+
+def test_sim_spec_off_unchanged():
+    loop, eng = _sim()
+    eng.submit(Request(request_id="s", prompt_tokens=[1] * 32,
+                       sampling=SamplingParams(max_new_tokens=16),
+                       arrival_time=0.0))
+    loop.run(until=1e6, stop_when=lambda: not eng.has_work)
+    m = eng.metrics()
+    assert m.finished_requests == 1
+    assert m.spec_drafted_tokens == 0 and m.spec_steps == 0
