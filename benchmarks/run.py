@@ -21,6 +21,7 @@ from benchmarks import (bench_autoscaling, bench_chaos, bench_coldstart,
                         bench_speculative, roofline)
 from repro.core.gateway.gateway import Gateway
 from repro.engine.runner import ModelRunner
+from repro.engine.scheduler import Scheduler
 
 SUITES = [
     ("table1_distributed_kvcache", bench_kvcache.main),
@@ -55,6 +56,8 @@ def main() -> None:
         t0 = time.time()
         shed0 = Gateway.total_shed
         wait0 = ModelRunner.total_device_wait_s
+        lr0, lh0 = Gateway.total_lora_routed, Gateway.total_lora_hits
+        lm0 = Scheduler.total_lora_miss
         try:
             fn(quick=args.quick)
             # loud load shedding: a suite whose gateway rate limiter
@@ -67,6 +70,14 @@ def main() -> None:
             wait = ModelRunner.total_device_wait_s - wait0
             if wait > 0:
                 note += f" [device wait {wait:.1f}s]"
+            # multi-LoRA accounting: affinity hit rate of this suite's
+            # LoRA-tagged routes + scheduler-level adapter misses (a
+            # request that reached an engine without its adapter)
+            lr = Gateway.total_lora_routed - lr0
+            lm = Scheduler.total_lora_miss - lm0
+            if lr > 0:
+                lh = Gateway.total_lora_hits - lh0
+                note += f" [lora affinity {lh}/{lr}, miss {lm}]"
             print(f"----- {name} done in {time.time()-t0:.1f}s{note}")
         except Exception:
             traceback.print_exc()

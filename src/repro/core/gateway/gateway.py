@@ -57,6 +57,11 @@ class GatewayStats:
     routed: int = 0
     rejected_rpm: int = 0
     rejected_tpm: int = 0
+    # multi-LoRA routing: requests naming an adapter, and how many of
+    # them landed on an engine that already had it resident (the
+    # affinity hit rate is the headline routing metric of §3.2.1)
+    lora_routed: int = 0
+    lora_hits: int = 0
     per_engine: Dict[str, int] = field(default_factory=dict)
     # per-engine failure accounting: engine_id -> {failure kind -> n}
     # (crashes, quarantines, hedged re-routes) — the control plane's
@@ -69,6 +74,13 @@ class GatewayStats:
         engine — a bench that ignores this under-reports its load)."""
         return self.rejected_rpm + self.rejected_tpm
 
+    @property
+    def lora_affinity_hit_rate(self) -> float:
+        """Fraction of LoRA requests routed to an engine already
+        holding their adapter (1.0 when none were routed)."""
+        return self.lora_hits / self.lora_routed if self.lora_routed \
+            else 1.0
+
 
 class Gateway:
     FRONTEND_POOLS = FRONTEND_ROLES    # shared role taxonomy
@@ -79,6 +91,10 @@ class Gateway:
     # having served it (sim benches >10 rps must raise
     # ClusterConfig.rate_limit or their requests vanish here)
     total_shed: int = 0
+    # process-wide LoRA routing counters (same contract): run.py prints
+    # each suite's affinity hit rate next to its results
+    total_lora_routed: int = 0
+    total_lora_hits: int = 0
 
     def __init__(self, policy: str = "least-request",
                  default_limit: RateLimit = None,
@@ -93,6 +109,10 @@ class Gateway:
         # keeps draining; only NEW routing is blocked)
         self.cordoned: set = set()
         self.user_limits: Dict[str, RateLimit] = {}
+        # adapter registry (LoRAController): when attached, the gateway
+        # feeds it per-adapter arrivals (demand-driven replanning) and
+        # wires its endpoint view into the lora-affinity policy
+        self.lora_controller = None
         self._rpm: Dict[str, TokenBucket] = {}
         self._tpm: Dict[str, TokenBucket] = {}
         self.stats = GatewayStats()
@@ -186,6 +206,17 @@ class Gateway:
 
     def set_policy(self, name: str, **kw) -> None:
         self.policy = make_policy(name, **kw)
+        if self.lora_controller is not None \
+                and hasattr(self.policy, "set_endpoints"):
+            self.policy.set_endpoints(self.lora_controller.endpoints)
+
+    def attach_lora_controller(self, ctrl) -> None:
+        """Back the gateway with an adapter registry: routed LoRA
+        requests feed the controller's demand window, and the
+        lora-affinity policy learns the controller's real endpoints."""
+        self.lora_controller = ctrl
+        if hasattr(self.policy, "set_endpoints"):
+            self.policy.set_endpoints(ctrl.endpoints)
 
     # -------------------------------------------------------------- route
     def _buckets(self, user: str) -> Tuple[TokenBucket, TokenBucket]:
@@ -219,6 +250,21 @@ class Gateway:
             return None
         eid = self.policy.select(targets, tokens, lora_adapter,
                                  priority_class=priority_class)
+        if lora_adapter:
+            # affinity accounting: did the chosen engine already hold
+            # the adapter, or does this request pay a cold load?
+            self.stats.lora_routed += 1
+            Gateway.total_lora_routed += 1
+            try:
+                resident = lora_adapter in \
+                    targets[eid].metrics().loaded_adapters
+            except Exception:
+                resident = False
+            if resident:
+                self.stats.lora_hits += 1
+                Gateway.total_lora_hits += 1
+            if self.lora_controller is not None:
+                self.lora_controller.note_request(lora_adapter, now)
         self.stats.routed += 1
         self.stats.per_engine[eid] = self.stats.per_engine.get(eid, 0) + 1
         self.request_log.append(

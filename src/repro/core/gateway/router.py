@@ -226,18 +226,40 @@ class SLOAwarePolicy(RoutingPolicy):
 
 
 class LoRAAffinityPolicy(RoutingPolicy):
-    """LoRA-aware routing (paper §3.2.1): prefer engines that already
-    have the adapter loaded; tie-break least-request."""
+    """LoRA-aware routing (paper §3.2.1): pack requests for co-resident
+    adapters onto the same engine; tie-break least-request.
+
+    Two discovery sources, in order: the ``LoRAController``'s endpoint
+    view when a registry is attached (``set_endpoints`` — the
+    EndpointSlice analogue, wired by ``Gateway.attach_lora_controller``,
+    so the policy learns the controller's REAL placements instead of
+    static tags), then the engines' live ``loaded_adapters`` metrics
+    (which also cover adapters an engine auto-loaded past the plan).
+    A request whose adapter is resident nowhere falls back to
+    least-request — the chosen engine cold-loads it, and subsequent
+    requests find it through the metrics path."""
     name = "lora-affinity"
 
     def __init__(self):
         self._fallback = LeastRequestPolicy()
+        self._endpoints_fn: Optional[Callable[[str], List[str]]] = None
+
+    def set_endpoints(self, fn: Callable[[str], List[str]]) -> None:
+        """Attach the adapter-registry discovery view
+        (``LoRAController.endpoints``)."""
+        self._endpoints_fn = fn
 
     def select(self, engines, tokens, lora_adapter=None,
                priority_class="standard"):
         if lora_adapter:
-            having = {eid: e for eid, e in engines.items()
-                      if lora_adapter in e.metrics().loaded_adapters}
+            having = {}
+            if self._endpoints_fn is not None:
+                having = {eid: engines[eid]
+                          for eid in self._endpoints_fn(lora_adapter)
+                          if eid in engines}
+            if not having:
+                having = {eid: e for eid, e in engines.items()
+                          if lora_adapter in e.metrics().loaded_adapters}
             if having:
                 return self._fallback.select(having, tokens, lora_adapter)
         return self._fallback.select(engines, tokens, lora_adapter)

@@ -67,6 +67,18 @@ class PerfModel:
             per_layer = 2 * cfg.n_kv_heads * cfg.head_dim
         self.kv_bytes_per_token = per_layer * cfg.n_layers * kv_dtype_bytes
 
+    def lora_adapter_bytes(self, rank: int,
+                           bytes_per_param: int = 2) -> int:
+        """Artifact size of one q/v LoRA adapter (the bank
+        ``paged_model.init_lora`` holds: A_q/B_q down+up projections on
+        the query heads, A_v/B_v on the KV heads) — what a cold load
+        moves over the artifact tier and the host->device link."""
+        cfg = self.cfg
+        hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+        return bytes_per_param * (2 * cfg.d_model * rank
+                                  + rank * cfg.n_heads * hd
+                                  + rank * cfg.n_kv_heads * hd)
+
     def fits(self) -> bool:
         return self.param_bytes < self.dev.hbm_bytes * 0.9
 

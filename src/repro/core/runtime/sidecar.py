@@ -129,6 +129,18 @@ class AIRuntime:
             "spec_drafted_tokens": float(m.spec_drafted_tokens),
             "spec_accepted_tokens": float(m.spec_accepted_tokens),
             "spec_acceptance": float(m.spec_acceptance),
+            # high-density multi-LoRA: requests that queued behind a
+            # non-resident adapter (loud miss — never a silent base-
+            # model fallback), requests shed after the queue timeout,
+            # and the adapter-tier churn (cold loads, stall seconds,
+            # HBM-bank evictions, host-tier hits, residency)
+            "lora_miss": float(m.lora_miss),
+            "lora_shed": float(m.lora_shed),
+            "lora_cold_loads": float(m.lora_cold_loads),
+            "lora_cold_load_s": float(m.lora_cold_load_s),
+            "lora_evictions": float(m.lora_evictions),
+            "lora_host_hits": float(m.lora_host_hits),
+            "loaded_adapters": float(len(m.loaded_adapters)),
             # host/device overlap: seconds blocked on readback and the
             # non-overlapped host fraction of step wall time — the gap
             # the async engine loop hides

@@ -28,6 +28,7 @@ from repro.core.diagnostics.tools import (DiagnosticMonitor, FailureInjector,
                                           FaultKind, Telemetry)
 from repro.core.gateway.gateway import Gateway, RateLimit
 from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.lora.manager import AdapterSpec, LoRAController
 from repro.core.sim.chaos import ChaosSchedule
 from repro.core.orchestration.cluster import ClusterManager, PodState
 from repro.core.orchestration.pools import (AttainmentRebalancer,
@@ -82,6 +83,18 @@ class ClusterConfig:
     # client behavior across a gateway restart: deferred dispatches
     # retry this long after the gateway comes back
     gw_retry_delay_s: float = 0.25
+    # -- high-density multi-LoRA serving (paper §3.2.1) --
+    # register lora-0..lora-{n-1} with a LoRAController wired into the
+    # gateway (adapter registry + demand feed + lora-affinity
+    # endpoints) and replanned periodically against observed demand.
+    # 0 disables the adapter control plane.
+    lora_adapters: int = 0
+    # controller slot budget per pod; 0 => the engine config's
+    # max_adapters - 1 (slot 0 is the base model)
+    lora_slots_per_pod: int = 0
+    lora_replan_period_s: float = 2.0
+    lora_min_replicas: int = 1
+    lora_max_replicas: int = 4
 
 
 class ServingCluster:
@@ -152,6 +165,27 @@ class ServingCluster:
                 self.cold.note_cached(cfg.name, f"node-{i}", "local")
         for i in range(ccfg.num_engines):
             self._spawn_engine(ready=True, role=self.roles[i])
+        # adapter control plane: registry + density placement wired
+        # into the gateway (demand feed + lora-affinity endpoints);
+        # later-spawned engines join as pods in _spawn_engine
+        self.lora_ctrl: Optional[LoRAController] = None
+        self._lora_slots = 0
+        if ccfg.lora_adapters > 0:
+            ecfg = ccfg.engine or SimEngineConfig()
+            self._lora_slots = ccfg.lora_slots_per_pod \
+                or max(ecfg.max_adapters - 1, 1)
+            self.lora_ctrl = LoRAController(
+                min_replicas=ccfg.lora_min_replicas,
+                max_replicas=ccfg.lora_max_replicas)
+            for i in range(ccfg.lora_adapters):
+                # zipf-shaped prior; refresh_demand replaces it with
+                # gateway-observed rates once traffic flows
+                self.lora_ctrl.register(AdapterSpec(
+                    f"lora-{i}", cfg.name, requests_per_s=1.0 / (i + 1)))
+            for eid in self.engines:
+                self.lora_ctrl.add_pod(eid, capacity=self._lora_slots)
+            self.gateway.attach_lora_controller(self.lora_ctrl)
+            self.lora_ctrl.sync(self.engines)
 
     @staticmethod
     def _resolve_roles(ccfg: ClusterConfig) -> List[str]:
@@ -181,6 +215,9 @@ class ServingCluster:
         eng.slowdown_fn = (lambda e=eid: self.injector.slowdown_factor(e))
         self.engines[eid] = eng
         self.runtimes[eid] = AIRuntime(eng, pod_id=eid, node=node)
+        ctrl = getattr(self, "lora_ctrl", None)
+        if ctrl is not None:
+            ctrl.add_pod(eid, capacity=self._lora_slots)
         if ready:
             self.pool_mgr.add_engine(eid, eng, role)
         else:
@@ -203,6 +240,8 @@ class ServingCluster:
         # counting toward pool attainment after retirement
         eid = min(live, key=lambda e: self.engines[e].metrics().num_running)
         self.pool_mgr.remove_engine(eid)
+        if self.lora_ctrl is not None:
+            self.lora_ctrl.remove_pod(eid)
 
     @property
     def active_replicas(self) -> int:
@@ -265,6 +304,8 @@ class ServingCluster:
                 # finishes here, only queued work is re-routed
                 lost = eng.sched.takeover_waiting()
             self.pool_mgr.remove_engine(eid)
+            if self.lora_ctrl is not None:
+                self.lora_ctrl.remove_pod(eid)
             self._spawn_engine(ready=False, role=src_pool)
             self._redeliver_lost(lost, src_pool)
 
@@ -377,15 +418,31 @@ class ServingCluster:
             self.gateway.note_failure(eid, "hedged")
             self._redeliver_lost(reqs, src_pool, exclude={eid})
 
+    def _lora_replan(self) -> None:
+        """Demand-driven replanning: fold gateway-observed per-adapter
+        rates into the registry and drive live register/unregister on
+        healthy pods (engines defer unloads of in-flight adapters)."""
+        live = {eid: self.engines[eid] for eid in self.engines
+                if eid in self.gateway.engines
+                and self.engines[eid].healthy()}
+        self.lora_ctrl.refresh_demand(self.clock.now)
+        self.lora_ctrl.sync(live)
+
     def _autoscale(self) -> None:
         asc = self.ccfg.autoscaler
         if asc is None:
             return
         now = self.clock.now
         decision = asc.desired(now, self.metrics, self.active_replicas)
-        self.scale_history.append((now, self.active_replicas,
-                                   decision.desired))
-        delta = decision.desired - self.active_replicas
+        desired = decision.desired
+        if self.lora_ctrl is not None:
+            # adapter-count-aware floor: scale-in may never strand
+            # registered adapters without a slot to be served from
+            desired = max(desired, min(
+                self.lora_ctrl.desired_pods(self._lora_slots),
+                asc.max_replicas))
+        self.scale_history.append((now, self.active_replicas, desired))
+        delta = desired - self.active_replicas
         for _ in range(max(delta, 0)):
             # reuse a warm spare if one exists, else cold-start a new pod
             spare = [e for e in self.engines
@@ -417,6 +474,9 @@ class ServingCluster:
             self.loop.every(self.ccfg.hedge_period_s, self._hedge)
         if self.ccfg.autoscaler is not None:
             self.loop.every(self.ccfg.autoscale_period_s, self._autoscale)
+        if self.lora_ctrl is not None:
+            self.loop.every(self.ccfg.lora_replan_period_s,
+                            self._lora_replan)
         if self.disaggregated:
             self.loop.every(self.ccfg.pool_poll_period_s,
                             lambda: self.pool_mgr.poll(self.clock.now))
@@ -485,6 +545,19 @@ class ServingCluster:
         s["wasted_tokens"] = sum(m.wasted_tokens for m in agg)
         s["kv_fetch_failures"] = sum(m.kv_fetch_failures for m in agg)
         s["ckpt_pages"] = sum(m.ckpt_pages for m in agg)
+        # multi-LoRA serving: routing affinity + adapter-tier churn
+        if self.lora_ctrl is not None or self.gateway.stats.lora_routed:
+            s["lora_routed"] = self.gateway.stats.lora_routed
+            s["lora_affinity_hit_rate"] = \
+                self.gateway.stats.lora_affinity_hit_rate
+            s["lora_miss"] = sum(m.lora_miss for m in agg)
+            s["lora_shed"] = sum(m.lora_shed for m in agg)
+            s["lora_cold_loads"] = sum(m.lora_cold_loads for m in agg)
+            s["lora_cold_load_s"] = sum(m.lora_cold_load_s for m in agg)
+            s["lora_evictions"] = sum(m.lora_evictions for m in agg)
+        if self.lora_ctrl is not None:
+            s["lora_ctrl_loads"] = self.lora_ctrl.stats["loads"]
+            s["lora_ctrl_unloads"] = self.lora_ctrl.stats["unloads"]
         if self.ccfg.telemetry or self.ccfg.chaos is not None:
             s["diagnoses"] = len(self.diagnoses)
             s["quarantines"] = self.quarantines

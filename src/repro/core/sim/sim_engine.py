@@ -39,6 +39,7 @@ from typing import Callable, List, Optional
 from repro.core.kvcache.pool import DistributedKVPool, KVPoolError
 from repro.core.kvcache.tiers import HostPagePool, validate_wire_dtype
 from repro.core.optimizer.profiles import DEVICES, PerfModel
+from repro.core.runtime.sidecar import H2D_BW, TIER_BW
 from repro.core.sim.events import EventLoop
 from repro.engine.page_table import PageAllocator, chunk_hashes
 from repro.engine.request import Request, RequestState
@@ -95,6 +96,18 @@ class SimEngineConfig:
     # sequence tokens (0 disables), at most ckpt_budget_bytes per pass
     ckpt_interval_tokens: int = 0
     ckpt_budget_bytes: int = 0
+    # high-density multi-LoRA serving: HBM adapter slots (slot 0 is the
+    # base model, as in the real engine's bank) with LRU eviction into
+    # a bounded host tier; cold loads are priced from the adapter's
+    # byte size over the artifact/host tier bandwidths and stall the
+    # next step.  lora_autoload / lora_queue_timeout_s mirror
+    # EngineConfig — the shared Scheduler's adapter_ready gate keeps
+    # non-resident adapters loud on both data planes.
+    max_adapters: int = 8
+    lora_rank: int = 8
+    lora_autoload: bool = True
+    lora_queue_timeout_s: float = 30.0
+    host_adapter_slots: int = 32
     # speculative n-gram decoding: max drafts per decode row (0
     # disables) and the synthetic acceptance rate the sim resolves
     # verification at.  The sim cannot KNOW acceptance (it has no
@@ -121,6 +134,7 @@ class SimEngineConfig:
             mixed_batching=self.mixed_batching,
             max_prefills=self.max_prefills if self.mixed_batching else 1,
             token_budget=self.token_budget,
+            lora_queue_timeout_s=self.lora_queue_timeout_s,
             handoff_chunk_pages=self.handoff_chunk_pages,
             swap_preemption=self.swap_preemption,
             honor_stop_token=False,     # sim decode tokens are
@@ -174,7 +188,8 @@ class SimEngine:
             publish_page=self._publish_page,
             host_pool=self.host_pool,
             page_payload=(lambda pid: True),    # sim: cost model only
-            page_bytes=self._page_bytes)
+            page_bytes=self._page_bytes,
+            adapter_ready=lambda name: name in self._adapters)
         if self.sched.drafter is not None:
             # sim tokens are synthetic zeros the n-gram matcher cannot
             # usefully continue; swap in the content-free drafter so
@@ -183,20 +198,103 @@ class SimEngine:
                 **vars(self.sched.drafter))
         self.slowdown_fn: Callable[[], float] = lambda: 1.0
         self._busy = False
-        self._adapters: set = set()
+        # adapter tiering mirrored from the real ModelRunner: a bounded
+        # HBM bank (name -> LRU tick; slot 0 is the base model, hence
+        # max_adapters - 1 slots) cascading into a bounded host tier.
+        # The sim stores no weights — a cold load prices the adapter
+        # bytes over the artifact (or host) tier bandwidth and stalls
+        # the engine's next step by that time.
+        self._adapters: dict = {}
+        self._lru_tick = 0
+        self._host_adapters: dict = {}
+        self._deferred_unloads: set = set()
+        self._adapter_penalty_s = 0.0
+        self._adapter_bytes = self.perf.lora_adapter_bytes(
+            self.sc.lora_rank)
+        self._lora = dict(cold_loads=0, cold_load_s=0.0, evictions=0,
+                          host_hits=0)
         self._m: dict = {}              # sim-only counters (migrations)
         self.alive = True
 
     # ---------------------------------------------------------- contract
     def submit(self, req: Request) -> None:
+        if (req.lora_adapter and self.sc.lora_autoload
+                and req.lora_adapter not in self._adapters):
+            try:
+                self.register_adapter(req.lora_adapter)
+            except RuntimeError:
+                pass    # all slots pinned: queue behind adapter_ready
         self.sched.enqueue(req, self.loop.clock.now)
         self._kick()
 
+    def _adapters_in_use(self) -> set:
+        return {r.lora_adapter
+                for r in self.sched.running + self.sched.prefills
+                if r.lora_adapter}
+
+    def _touch_adapter(self, name: str) -> None:
+        self._lru_tick += 1
+        self._adapters[name] = self._lru_tick
+
     def register_adapter(self, name: str, weights=None) -> None:
-        self._adapters.add(name)
+        """Same tier semantics as ``ModelRunner.register_adapter``;
+        the weights are a cost, not arrays: host-tier hits pay the
+        host->device copy, artifact-store loads additionally pay the
+        local-tier fetch.  The stall lands on the next step."""
+        self._deferred_unloads.discard(name)
+        if name in self._adapters:
+            self._touch_adapter(name)
+            return
+        slots = max(self.sc.max_adapters - 1, 1)
+        if len(self._adapters) >= slots:
+            in_use = self._adapters_in_use()
+            victim = next(
+                (n for n in sorted(self._adapters,
+                                   key=self._adapters.get)
+                 if n not in in_use), None)
+            if victim is None:
+                raise RuntimeError(
+                    "adapter slots exhausted and every resident adapter "
+                    "is pinned by an in-flight batch")
+            self.unregister_adapter(victim)
+            self._lora["evictions"] += 1
+        cost = self._adapter_bytes / H2D_BW
+        if name in self._host_adapters:
+            self._host_adapters.pop(name)
+            self._lora["host_hits"] += 1
+        else:
+            cost += self._adapter_bytes / TIER_BW["local"]
+        self._touch_adapter(name)
+        self._lora["cold_loads"] += 1
+        self._lora["cold_load_s"] += cost
+        self._adapter_penalty_s += cost
+        self._kick()    # a gated request may now be admissible
 
     def unregister_adapter(self, name: str) -> None:
-        self._adapters.discard(name)
+        if name not in self._adapters:
+            return
+        if name in self._adapters_in_use():
+            # never disturb an in-flight batch: unload once it drains
+            self._deferred_unloads.add(name)
+            return
+        self._adapters.pop(name)
+        if self.sc.host_adapter_slots > 0:
+            self._host_adapters[name] = True
+            while len(self._host_adapters) > self.sc.host_adapter_slots:
+                self._host_adapters.pop(next(iter(self._host_adapters)))
+
+    def _flush_deferred_unloads(self) -> None:
+        if not self._deferred_unloads:
+            return
+        in_use = self._adapters_in_use()
+        for name in list(self._deferred_unloads):
+            if name not in in_use:
+                self._deferred_unloads.discard(name)
+                self.unregister_adapter(name)
+
+    @property
+    def adapters(self) -> List[str]:
+        return sorted(self._adapters)
 
     def match_prefix_len(self, tokens) -> int:
         return self.sched.match_prefix_len(tokens)
@@ -276,8 +374,16 @@ class SimEngine:
         if not self.alive or slow <= 0.0:
             self._busy = False        # dead engine: progress stops
             return
+        self._flush_deferred_unloads()
         out = self.sched.schedule(now)
         if not (out.prefills or out.decode):
+            if any(r.lora_adapter and r.lora_adapter not in self._adapters
+                   for r in self.sched.waiting):
+                # requests gated on a non-resident adapter: poll so the
+                # control plane's next sync (or the shed timeout) is
+                # observed even though no submit will re-kick us
+                self.loop.after(0.1, self._iterate)
+                return
             self._busy = False
             return
         batch = out.decode
@@ -316,6 +422,10 @@ class SimEngine:
             ctx = sum(r.total_tokens for r in batch) / len(batch)
             comp = self.perf.decode_step_time(len(batch), ctx) \
                 / (self._speed * slow)
+        # adapter cold loads stall the step like head-group KV fetches:
+        # the batch cannot run until the weights land on device
+        head += self._adapter_penalty_s
+        self._adapter_penalty_s = 0.0
         dt = self.sc.scheduler_overhead_s + head + max(comp, stream)
         done_t = now + dt
         for w in out.prefills:
@@ -374,7 +484,8 @@ class SimEngine:
         now = self.loop.clock.now
         # publish every full block of (prompt + generated) tokens
         seq = list(req.prompt_tokens) + [0] * len(req.output_tokens)
-        hashes = chunk_hashes(seq, self.sc.page_size)
+        hashes = chunk_hashes(seq, self.sc.page_size,
+                              req.lora_adapter or "")
         try:
             for h in hashes:
                 self.kv_pool.publish(h, True, self.engine_id, now,
@@ -396,6 +507,11 @@ class SimEngine:
 
     # ---------------------------------------------------------- metrics
     def metrics(self) -> EngineMetrics:
-        return self.sched.metrics(
+        m = self.sched.metrics(
             self.loop.clock.now,
             loaded_adapters=tuple(sorted(self._adapters)))
+        m.lora_cold_loads = self._lora["cold_loads"]
+        m.lora_cold_load_s = self._lora["cold_load_s"]
+        m.lora_evictions = self._lora["evictions"]
+        m.lora_host_hits = self._lora["host_hits"]
+        return m

@@ -18,6 +18,10 @@ Statistically matched stand-ins for the paper's datasets:
   * ``phase_shift``    — prefill-heavy half then decode-heavy half: the
     role-pool rebalancing testbed (bench_pd_pools) — any static P:D
     split is mis-sized for one of the two phases.
+  * ``lora_zipf``      — high-density multi-LoRA traffic: every request
+    tags one of N adapters with zipf-distributed popularity (a few hot
+    adapters, a long cold tail) — the adapter-tiering + LoRA-aware
+    routing testbed (bench_lora).
 """
 from __future__ import annotations
 
@@ -194,6 +198,32 @@ def phase_shift(duration_s: float, seed: int = 0,
         req = Request(prompt_tokens=_toks(rng, plen),
                       sampling=SamplingParams(max_new_tokens=olen),
                       arrival_time=t, priority_class=cls)
+        out.append(TimedRequest(t, req))
+    return out
+
+
+def lora_zipf(n_adapters: int, rate_rps: float, duration_s: float,
+              seed: int = 0, zipf_s: float = 1.1,
+              mean_prompt: float = 160.0, mean_output: float = 48.0,
+              prefix: str = "lora-") -> List[TimedRequest]:
+    """Thousand-adapter zipf trace: Poisson arrivals where each request
+    targets adapter ``{prefix}{i}`` drawn from a zipf(s) popularity
+    curve — a handful of hot adapters take most traffic while the long
+    tail stays cold, so adapter placement/tiering and affinity routing
+    (not raw capacity) decide hit rates and cold-load stalls."""
+    rng = np.random.default_rng(seed)
+    heat = 1.0 / (np.arange(1, n_adapters + 1) ** zipf_s)
+    heat /= heat.sum()
+    out, t = [], 0.0
+    while t < duration_s:
+        t += rng.exponential(1.0 / rate_rps)
+        a = int(rng.choice(n_adapters, p=heat))
+        plen = _lognormal_len(rng, mean_prompt, 0.6, 8, 1024)
+        olen = _lognormal_len(rng, mean_output, 0.5, 4, 256)
+        req = Request(prompt_tokens=_toks(rng, plen),
+                      sampling=SamplingParams(max_new_tokens=olen),
+                      arrival_time=t, user=f"u-{a}",
+                      lora_adapter=f"{prefix}{a}")
         out.append(TimedRequest(t, req))
     return out
 

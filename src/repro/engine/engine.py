@@ -67,6 +67,18 @@ class EngineConfig:
     dtype: str = "float32"
     lora_rank: int = 8
     max_adapters: int = 8
+    # -- high-density multi-LoRA serving --
+    # auto-register unknown adapters at submit (single-engine/dev
+    # ergonomics).  False => residency is the control plane's job
+    # (LoRAController.sync): requests queue behind the scheduler's
+    # adapter_ready gate until the adapter is loaded, or shed after
+    # lora_queue_timeout_s — never silently serving base-model outputs.
+    lora_autoload: bool = True
+    lora_queue_timeout_s: float = 30.0
+    # bounded host-DRAM adapter tier backing the HBM bank's LRU
+    # cascade (entries, not bytes — adapters are tiny next to KV);
+    # 0 disables (evictions drop to the name-keyed artifact store)
+    host_adapter_slots: int = 32
     # -- fused mixed-batch scheduler --
     mixed_batching: bool = True     # False => legacy two-phase scheduler
     max_prefills: int = 2           # concurrent PREFILLING requests
@@ -130,6 +142,7 @@ class EngineConfig:
             mixed_batching=self.mixed_batching,
             max_prefills=self.max_prefills,
             token_budget=self.token_budget, role=self.role,
+            lora_queue_timeout_s=self.lora_queue_timeout_s,
             handoff_chunk_pages=self.handoff_chunk_pages,
             swap_preemption=self.swap_preemption,
             slo_aware=self.slo_aware,
@@ -173,7 +186,12 @@ class InferenceEngine:
             publish_page=self._publish_page,
             host_pool=self.host_pool,
             page_payload=self.runner.page_payload,
-            page_bytes=self.runner.page_bytes)
+            page_bytes=self.runner.page_bytes,
+            adapter_ready=lambda name: name in self.runner.adapter_ids)
+        # unloads requested while the adapter still serves an in-flight
+        # batch are deferred (applied at the next step() once the last
+        # user drains) — the control plane must never disturb a batch
+        self._deferred_unloads: set = set()
         # async overlapped loop: the ONE in-flight dispatch record —
         # {reqs, tok_dev (device), idxs (placeholder positions)};
         # resolved when the next step is dispatched (or at drain)
@@ -225,11 +243,31 @@ class InferenceEngine:
         self.sched.handoff = fn
 
     # ------------------------------------------------------------- LoRA
+    def _adapters_in_use(self) -> set:
+        """Adapters pinned by admitted (in-flight) requests."""
+        return {r.lora_adapter
+                for r in self.sched.running + self.sched.prefills
+                if r.lora_adapter}
+
     def register_adapter(self, name: str, weights: dict = None) -> int:
-        return self.runner.register_adapter(name, weights)
+        self._deferred_unloads.discard(name)   # re-wanted before unload
+        return self.runner.register_adapter(
+            name, weights, pinned=self._adapters_in_use())
 
     def unregister_adapter(self, name: str) -> None:
+        if name in self._adapters_in_use():
+            self._deferred_unloads.add(name)
+            return
         self.runner.unregister_adapter(name)
+
+    def _flush_deferred_unloads(self) -> None:
+        if not self._deferred_unloads:
+            return
+        in_use = self._adapters_in_use()
+        for name in list(self._deferred_unloads):
+            if name not in in_use:
+                self._deferred_unloads.discard(name)
+                self.runner.unregister_adapter(name)
 
     @property
     def adapters(self) -> List[str]:
@@ -237,9 +275,12 @@ class InferenceEngine:
 
     # ------------------------------------------------------------- submit
     def submit(self, req: Request) -> None:
-        if req.lora_adapter and \
-                req.lora_adapter not in self.runner.adapter_ids:
-            self.register_adapter(req.lora_adapter)
+        if (req.lora_adapter and self.ecfg.lora_autoload
+                and req.lora_adapter not in self.runner.adapter_ids):
+            try:
+                self.register_adapter(req.lora_adapter)
+            except RuntimeError:
+                pass    # all slots pinned: queue behind adapter_ready
         self.sched.enqueue(req, self.clock())
 
     @property
@@ -283,6 +324,7 @@ class InferenceEngine:
         number DISPATCHED (read back when the next step is issued)."""
         t0 = time.perf_counter()
         try:
+            self._flush_deferred_unloads()
             if self.ecfg.async_loop:
                 return self._step_async()
             return self._exec(self.sched.schedule(self.clock()))
@@ -433,7 +475,8 @@ class InferenceEngine:
             self.sched.handoff_prefill(req, now)
             if self.kv_pool is not None:
                 self.kv_pool.flush_hashes(
-                    chunk_hashes(req.prompt_tokens, self.ecfg.page_size),
+                    chunk_hashes(req.prompt_tokens, self.ecfg.page_size,
+                                 req.lora_adapter or ""),
                     now)
             self.sched.deliver_handoff(req)
             return False
@@ -472,6 +515,10 @@ class InferenceEngine:
         m = self.sched.metrics(self.clock(),
                                loaded_adapters=tuple(self.adapters))
         m.device_wait_s = self.runner.device_wait_s
+        m.lora_cold_loads = self.runner.adapter_loads
+        m.lora_cold_load_s = self.runner.adapter_load_s
+        m.lora_evictions = self.runner.adapter_evictions
+        m.lora_host_hits = self.runner.adapter_host_hits
         if self._step_wall_s > 0:
             m.host_overhead_frac = min(max(
                 1.0 - self.runner.device_wait_s / self._step_wall_s,

@@ -14,10 +14,19 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
-def chunk_hashes(tokens: Sequence[int], page_size: int) -> List[str]:
-    """Rolling content hash per *full* page of the token prefix."""
+def chunk_hashes(tokens: Sequence[int], page_size: int,
+                 salt: str = "") -> List[str]:
+    """Rolling content hash per *full* page of the token prefix.
+
+    ``salt`` namespaces the hash chain — LoRA requests pass their
+    adapter name so KV computed under one adapter (the v-projection
+    changes cached values) can never be prefix-matched, pool-shared,
+    or swap-restored into a request running a different adapter.  Base
+    requests use the empty salt, keeping their hashes stable."""
     out = []
     h = hashlib.sha256()
+    if salt:
+        h.update(bytes(salt, "utf-8"))
     n_full = len(tokens) // page_size
     for i in range(n_full):
         chunk = tokens[i * page_size:(i + 1) * page_size]
@@ -130,14 +139,14 @@ class PageAllocator:
         info.block_hash = block_hash
         self.hash_index[block_hash] = page_id
 
-    def match_prefix(self, tokens: Sequence[int], now: float = 0.0
-                     ) -> Tuple[List[int], int]:
+    def match_prefix(self, tokens: Sequence[int], now: float = 0.0,
+                     salt: str = "") -> Tuple[List[int], int]:
         """Longest cached prefix -> (page_ids retained, tokens covered).
 
         Never matches the *entire* prompt (the last partial/full block is
         always recomputed so prefill produces at least one new token).
         """
-        hashes = chunk_hashes(tokens, self.page_size)
+        hashes = chunk_hashes(tokens, self.page_size, salt)
         matched: List[int] = []
         for i, h in enumerate(hashes):
             covered = (i + 1) * self.page_size
@@ -154,9 +163,9 @@ class PageAllocator:
             len(hashes) - len(matched), 0)
         return matched, len(matched) * self.page_size
 
-    def match_len(self, tokens: Sequence[int]) -> int:
+    def match_len(self, tokens: Sequence[int], salt: str = "") -> int:
         """Non-mutating variant for router scoring (no retain)."""
-        hashes = chunk_hashes(tokens, self.page_size)
+        hashes = chunk_hashes(tokens, self.page_size, salt)
         n = 0
         for i, h in enumerate(hashes):
             if (i + 1) * self.page_size >= len(tokens):

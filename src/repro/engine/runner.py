@@ -22,6 +22,7 @@ fetched remote pages into local device pages.
 from __future__ import annotations
 
 import time
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -56,6 +57,22 @@ class ModelRunner:
         self._adapter_ids: Dict[str, int] = {}
         self._free_adapter_slots = list(range(1, ecfg.max_adapters))
         self._key = jax.random.PRNGKey(seed + 1)
+        # adapter tiering (HBM bank <-> bounded host DRAM tier <->
+        # artifact store): weights are a pure function of (engine seed,
+        # adapter NAME) — never of the HBM slot — so eviction is always
+        # safe (re-load is byte-identical) and slot reuse can't leak.
+        # ``_adapter_base_key`` is separate from the sampling key
+        # stream, which ``sample`` mutates.
+        self._adapter_base_key = jax.random.PRNGKey(seed + 2)
+        self._adapter_lru: Dict[str, int] = {}
+        self._lru_tick = 0
+        self._host_adapters: Dict[str, dict] = {}
+        self._host_adapter_slots = int(
+            getattr(ecfg, "host_adapter_slots", 32))
+        self.adapter_loads = 0          # non-resident registers paid
+        self.adapter_load_s = 0.0       # wall seconds stalled on them
+        self.adapter_evictions = 0      # LRU HBM-bank evictions
+        self.adapter_host_hits = 0      # loads served from the host tier
         # persistent host input buffers (allocated once, refilled per
         # step; block tables are sliced to the bucketed width in use)
         b, kk = ecfg.max_batch, ecfg.max_prefills
@@ -110,26 +127,74 @@ class ModelRunner:
         return np.asarray(arr)
 
     # ------------------------------------------------------------- LoRA
-    def register_adapter(self, name: str, weights: dict = None) -> int:
-        """Dynamic high-density LoRA registration (paper §3.2.1)."""
+    def _adapter_key(self, name: str):
+        """The 'artifact store': adapter weights derive from the NAME,
+        so any tier can drop them and re-materialize byte-identically."""
+        return jax.random.fold_in(
+            self._adapter_base_key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+    def _touch_adapter(self, name: str) -> None:
+        self._lru_tick += 1
+        self._adapter_lru[name] = self._lru_tick
+
+    def register_adapter(self, name: str, weights: dict = None,
+                         pinned=()) -> int:
+        """Dynamic high-density LoRA registration (paper §3.2.1).
+
+        When the HBM bank is full, the least-recently-used resident
+        adapter not in ``pinned`` (adapters of in-flight batches) is
+        evicted into the bounded host tier.  Weights come from, in
+        order: the caller, the host tier, the artifact store
+        (:meth:`_adapter_key`).  The wall time of a non-resident load —
+        the cold-load stall — accumulates in ``adapter_load_s``."""
         if name in self._adapter_ids:
+            self._touch_adapter(name)
             return self._adapter_ids[name]
+        t0 = time.perf_counter()
         if not self._free_adapter_slots:
-            raise RuntimeError("adapter slots exhausted")
+            victim = next(
+                (n for n in sorted(self._adapter_ids,
+                                   key=lambda a: self._adapter_lru.get(a, 0))
+                 if n not in pinned), None)
+            if victim is None:
+                raise RuntimeError(
+                    "adapter slots exhausted and every resident adapter "
+                    "is pinned by an in-flight batch")
+            self.unregister_adapter(victim)
+            self.adapter_evictions += 1
         idx = self._free_adapter_slots.pop(0)
         if weights is None:
-            weights = PM.make_adapter(self.cfg, self.ecfg.lora_rank,
-                                      jax.random.fold_in(self._key, idx))
+            host = self._host_adapters.pop(name, None)
+            if host is not None:
+                weights = host
+                self.adapter_host_hits += 1
+            else:
+                weights = PM.make_adapter(self.cfg, self.ecfg.lora_rank,
+                                          self._adapter_key(name))
         self.lora = {k: self.lora[k].at[idx].set(weights[k])
                      for k in self.lora}
+        jax.block_until_ready(self.lora)
         self._adapter_ids[name] = idx
+        self._touch_adapter(name)
+        self.adapter_loads += 1
+        self.adapter_load_s += time.perf_counter() - t0
         return idx
 
     def unregister_adapter(self, name: str) -> None:
         idx = self._adapter_ids.pop(name, None)
-        if idx is not None:
-            self.lora = {k: self.lora[k].at[idx].set(0.0) for k in self.lora}
-            self._free_adapter_slots.append(idx)
+        if idx is None:
+            return
+        if self._host_adapter_slots > 0:
+            # LRU cascade: HBM victims fall into the bounded host tier;
+            # host overflow drops to the artifact store (safe — weights
+            # are name-keyed, so re-load is byte-identical)
+            self._host_adapters[name] = {
+                k: np.array(self.lora[k][idx]) for k in self.lora}
+            while len(self._host_adapters) > self._host_adapter_slots:
+                self._host_adapters.pop(next(iter(self._host_adapters)))
+        self._adapter_lru.pop(name, None)
+        self.lora = {k: self.lora[k].at[idx].set(0.0) for k in self.lora}
+        self._free_adapter_slots.append(idx)
 
     @property
     def adapters(self) -> List[str]:
@@ -140,7 +205,17 @@ class ModelRunner:
         return self._adapter_ids
 
     def _aid(self, req: Request) -> int:
-        return self._adapter_ids.get(req.lora_adapter or "", 0)
+        if not req.lora_adapter:
+            return 0
+        idx = self._adapter_ids.get(req.lora_adapter)
+        if idx is None:
+            # loud: a non-resident adapter must queue at admission
+            # (Scheduler.adapter_ready), never silently serve base
+            raise RuntimeError(
+                f"request {req.request_id} reached the data plane with "
+                f"non-resident adapter {req.lora_adapter!r}")
+        self._touch_adapter(req.lora_adapter)
+        return idx
 
     # ---------------------------------------------------------- sampling
     def sample(self, logits, reqs, positions=None) -> np.ndarray:

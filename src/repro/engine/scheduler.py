@@ -159,6 +159,18 @@ class EngineMetrics:
     prefix_hit_tokens: int = 0
     remote_hit_tokens: int = 0
     loaded_adapters: tuple = ()
+    # multi-LoRA serving: requests that hit the admission gate with a
+    # non-resident adapter (lora_miss), requests shed after waiting out
+    # ``lora_queue_timeout_s`` (lora_shed), and the adapter-tier churn
+    # the engine paid — non-resident loads, seconds stalled on them,
+    # HBM-bank evictions and host-tier hits (filled by the engine, like
+    # device_wait_s below)
+    lora_miss: int = 0
+    lora_shed: int = 0
+    lora_cold_loads: int = 0
+    lora_cold_load_s: float = 0.0
+    lora_evictions: int = 0
+    lora_host_hits: int = 0
     # SLO attainment: recent-window TTFT attainment fraction (1.0 when
     # nothing finished yet) + cumulative per-class rows of
     # (class, ttft_attainment, itl_attainment, finished)
@@ -212,6 +224,12 @@ class SchedulerConfig:
     honor_stop_token: bool = True
     # -- P/D disaggregation --
     role: str = "mixed"             # mixed | prefill | decode
+    # -- multi-LoRA serving --
+    # a request whose adapter is not resident (``adapter_ready`` hook)
+    # queues until the control plane loads it; after this many seconds
+    # in the queue it is shed (FAILED) instead of silently serving
+    # base-model outputs.  0 => queue forever.
+    lora_queue_timeout_s: float = 30.0
     # -- tiered KV cache / streaming handoff --
     # pool-handoff transfers are split into groups of this many pages;
     # only the head group blocks the tail recompute, later groups are
@@ -473,13 +491,19 @@ class Scheduler(SchedulerCore):
     """
 
     ROLES = ("mixed", "prefill", "decode")
+    # process-wide LoRA-miss counter across every Scheduler instance —
+    # benchmarks/run.py prints the per-suite delta so a suite whose
+    # requests queued (or shed) behind non-resident adapters says so
+    # next to its results
+    total_lora_miss: int = 0
 
     def __init__(self, scfg: SchedulerConfig, alloc: PageAllocator,
                  kv_pool=None, engine_id: str = "engine-0",
                  install_page: Optional[Callable] = None,
                  publish_page: Optional[Callable] = None,
                  host_pool=None, page_payload: Optional[Callable] = None,
-                 page_bytes: int = 0):
+                 page_bytes: int = 0,
+                 adapter_ready: Optional[Callable[[str], bool]] = None):
         super().__init__(honor_stop_token=scfg.honor_stop_token,
                          slo_classes=scfg.slo_classes)
         if scfg.role not in self.ROLES:
@@ -504,7 +528,15 @@ class Scheduler(SchedulerCore):
                        kv_bytes_fetched=0, swap_out=0, swap_in=0,
                        kv_fetch_failures=0, wasted_tokens=0, ckpt_pages=0,
                        crash_resumes=0, spec_drafted_tokens=0,
-                       spec_accepted_tokens=0, spec_steps=0)
+                       spec_accepted_tokens=0, spec_steps=0,
+                       lora_miss=0, lora_shed=0)
+        # multi-LoRA admission gate: ``adapter_ready(name) -> bool``
+        # reports adapter residency on this engine's data plane.  When
+        # set, a request naming a non-resident adapter queues (counted
+        # as a lora_miss, once) until the control plane loads it —
+        # never silently serving base-model outputs — and is shed after
+        # ``scfg.lora_queue_timeout_s`` in the queue.
+        self.adapter_ready = adapter_ready
         # speculative n-gram drafting: the controller owns the adaptive
         # per-request draft-length policy (acceptance EWMA + probe)
         self.drafter = DraftController(
@@ -585,7 +617,8 @@ class Scheduler(SchedulerCore):
 
     def _first_hash(self, req: Request) -> Optional[str]:
         hs = chunk_hashes(req.prompt_tokens[:self.scfg.page_size],
-                          self.scfg.page_size)
+                          self.scfg.page_size,
+                          req.lora_adapter or "")
         return hs[0] if hs else None
 
     # ------------------------------------------------------- SLO ordering
@@ -620,6 +653,23 @@ class Scheduler(SchedulerCore):
         for cand in candidates:
             if cand.state is RequestState.SWAPPED:
                 continue    # resumes through _try_resume, not admission
+            if (self.adapter_ready is not None and cand.lora_adapter
+                    and not self.adapter_ready(cand.lora_adapter)):
+                # loud LoRA miss: the adapter is not resident, so this
+                # request must wait for the control plane to load it
+                # (only this request — later waiters still get the
+                # slot), or be shed once it has waited out the timeout
+                if not getattr(cand, "_lora_missed", False):
+                    cand._lora_missed = True
+                    self._m["lora_miss"] += 1
+                    Scheduler.total_lora_miss += 1
+                if (scfg.lora_queue_timeout_s > 0
+                        and now - cand.arrival_time
+                        > scfg.lora_queue_timeout_s):
+                    cand.state = RequestState.FAILED
+                    self.waiting.remove(cand)
+                    self._m["lora_shed"] += 1
+                continue
             total = cand.prompt_len + cand.sampling.max_new_tokens
             if (scfg.max_pages_per_seq
                     and self.pages_for(total) > scfg.max_pages_per_seq):
@@ -629,7 +679,9 @@ class Scheduler(SchedulerCore):
             if (inflight_hashes
                     and cand.prompt_len > scfg.page_size
                     and self._first_hash(cand) in inflight_hashes
-                    and self.alloc.match_len(cand.prompt_tokens) == 0):
+                    and self.alloc.match_len(
+                        cand.prompt_tokens,
+                        cand.lora_adapter or "") == 0):
                 # cache-aware admission: a prompt sharing its leading
                 # block with an in-flight prefill waits for those pages
                 # to register so it can reuse them instead of
@@ -667,7 +719,7 @@ class Scheduler(SchedulerCore):
         matched_tokens = 0
         if scfg.prefix_caching:
             matched_pages, matched_tokens = self.alloc.match_prefix(
-                req.prompt_tokens, now)
+                req.prompt_tokens, now, req.lora_adapter or "")
         local_tokens = matched_tokens
         # the lower tiers work even when engine-local prefix caching is
         # off (the paper's "KV cache + Default" rows): cross-engine
@@ -719,7 +771,8 @@ class Scheduler(SchedulerCore):
         page's eviction later deletes the live entry, so it is
         additionally gated on ``prefix_caching``.)"""
         ps = self.scfg.page_size
-        hashes = chunk_hashes(req.prompt_tokens, ps)
+        hashes = chunk_hashes(req.prompt_tokens, ps,
+                              req.lora_adapter or "")
         pages, tokens, fetched = [], 0, []
         for i in range(have_tokens // ps, len(hashes)):
             if (i + 1) * ps >= req.prompt_len:
@@ -761,7 +814,7 @@ class Scheduler(SchedulerCore):
         npages = len(seq) // ps
         if npages == 0 or npages * ps != len(seq):
             return _RECOMPUTE       # rewind always leaves page-aligned
-        hashes = chunk_hashes(seq, ps)
+        hashes = chunk_hashes(seq, ps, req.lora_adapter or "")
         fetched: List[tuple] = []
         pages: List[int] = []
         missing = False
@@ -1058,7 +1111,8 @@ class Scheduler(SchedulerCore):
         the payload was materialized for nothing)."""
         if not self.scfg.prefix_caching and self.kv_pool is None:
             return
-        hashes = chunk_hashes(req.prompt_tokens, self.scfg.page_size)
+        hashes = chunk_hashes(req.prompt_tokens, self.scfg.page_size,
+                              req.lora_adapter or "")
         for i, h in enumerate(hashes):
             pid = req.page_ids[i]
             if (self.scfg.prefix_caching
@@ -1362,7 +1416,8 @@ class Scheduler(SchedulerCore):
             if full - req.ckpt_tokens < iv:
                 continue
             hashes = chunk_hashes(
-                req.prompt_tokens + req.output_tokens, ps)
+                req.prompt_tokens + req.output_tokens, ps,
+                req.lora_adapter or "")
             for i in range(req.ckpt_tokens // ps, full // ps):
                 if budget <= 0:
                     return
@@ -1445,6 +1500,8 @@ class Scheduler(SchedulerCore):
             prefix_hit_tokens=self._m["prefix_hit_tokens"],
             remote_hit_tokens=self._m["remote_hit_tokens"],
             loaded_adapters=loaded_adapters,
+            lora_miss=self._m["lora_miss"],
+            lora_shed=self._m["lora_shed"],
             slo_attainment=self.slo_attainment(now),
             slo_by_class=self.slo_class_stats(now),
             slo_itl_attainment=self.slo_itl_attainment(now),

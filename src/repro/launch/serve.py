@@ -39,6 +39,16 @@ the interactive/batch request mix and ``--policy slo-aware`` routes by
 per-class attainment instead of raw latency.  Per-class attainment is
 printed per engine (``benchmarks/bench_slo.py`` measures the same
 policy on the simulator).
+
+High-density multi-LoRA (paper §3.2.1): ``--adapters N`` registers N
+LoRA adapters with a :class:`LoRAController` (zipf-shaped demand
+prior), density-places them over the engines' HBM adapter banks, and
+tags every request with a zipf-drawn adapter.  ``--lora-policy``
+selects the gateway policy for the run (default ``lora-affinity`` —
+requests route to pods where their adapter is already resident; the
+controller's registry backs endpoint discovery).  Affinity hit rate,
+cold loads, and scheduler-level adapter misses are printed at the end
+(``benchmarks/bench_lora.py`` measures the same path at cluster scale).
 """
 from __future__ import annotations
 
@@ -50,6 +60,7 @@ import numpy as np
 from repro.configs import get_reduced_config
 from repro.core.gateway import Gateway
 from repro.core.kvcache.pool import DistributedKVPool
+from repro.core.lora.manager import AdapterSpec, LoRAController
 from repro.core.optimizer.gpu_optimizer import DemandBucket, split_roles
 from repro.core.optimizer.profiles import ProfileTable, WorkloadBucket
 from repro.core.orchestration.pools import (AttainmentRebalancer,
@@ -168,6 +179,15 @@ def main() -> None:
                          "lookup draft tokens verified per decode row "
                          "in one fused pass (0 disables); outputs stay "
                          "byte-identical under greedy decoding")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="register N LoRA adapters (zipf demand prior) "
+                         "with a LoRAController, density-place them "
+                         "over the engines and tag every request with "
+                         "a zipf-drawn adapter (0 disables)")
+    ap.add_argument("--lora-policy", default="lora-affinity",
+                    help="gateway routing policy when --adapters is "
+                         "set (default lora-affinity: route to pods "
+                         "where the adapter is already resident)")
     ap.add_argument("--async-loop", action="store_true",
                     help="overlap host scheduling/input prep for step "
                          "N+1 with step N's device compute (decode "
@@ -181,6 +201,9 @@ def main() -> None:
             and args.engines < 2:
         ap.error("--roles auto needs --engines >= 2 (one prefill AND "
                  "one decode pod)")
+    if args.adapters and args.roles != "mixed":
+        ap.error("--adapters needs --roles mixed (the P->D handoff "
+                 "path does not carry adapter state yet)")
     cfg = get_reduced_config(args.arch)
     t0 = time.monotonic()
     clock = lambda: time.monotonic() - t0      # noqa: E731
@@ -205,7 +228,8 @@ def main() -> None:
               f"pool wire={args.wire_dtype}"
               + (" (quantized; --wire-dtype fp for byte-exact)"
                  if args.wire_dtype == "int8" else ""))
-    gw = Gateway(policy=args.policy, clock=clock)
+    policy = args.lora_policy if args.adapters else args.policy
+    gw = Gateway(policy=policy, clock=clock)
     engines, manager, pool = build_engines(
         cfg, roles, clock,
         ecfg_kw=dict(slo_aware=args.slo,
@@ -215,6 +239,24 @@ def main() -> None:
                      spec_tokens=args.spec_tokens,
                      async_loop=args.async_loop),
         gateway=gw, force_pool=args.chaos != "none")
+    lora_ctrl = None
+    lora_heat = None
+    if args.adapters:
+        lora_ctrl = LoRAController(min_replicas=1, max_replicas=2)
+        for i in range(args.adapters):
+            lora_ctrl.register(AdapterSpec(
+                f"lora-{i}", cfg.name, requests_per_s=1.0 / (i + 1)))
+        slots = max(EngineConfig().max_adapters - 1, 1)
+        for eid in engines:
+            lora_ctrl.add_pod(eid, capacity=slots)
+        gw.attach_lora_controller(lora_ctrl)
+        lora_ctrl.sync(engines)
+        lora_heat = 1.0 / (np.arange(1, args.adapters + 1) ** 1.1)
+        lora_heat /= lora_heat.sum()
+        print(f"lora: {args.adapters} adapter(s) density-placed over "
+              f"{len(engines)} engine(s) ({slots} slots each), "
+              f"policy={policy}, controller loads="
+              f"{lora_ctrl.stats['loads']}")
     if args.chaos == "engine_crash" and not args.ckpt_interval:
         print("chaos: --ckpt-interval 0 — crashed decodes recompute "
               "from token 0 (set e.g. --ckpt-interval 16 to resume "
@@ -274,11 +316,15 @@ def main() -> None:
             0, cfg.vocab_size, max(args.prompt_len - 24, 4)).tolist()
         pclass = ("interactive" if rng.random() < args.interactive_frac
                   else "batch")
+        adapter = None
+        if args.adapters:
+            adapter = f"lora-{int(rng.choice(args.adapters, p=lora_heat))}"
         r = Request(prompt_tokens=prompt,
                     sampling=SamplingParams(max_new_tokens=args.max_new),
-                    arrival_time=clock(), priority_class=pclass)
+                    arrival_time=clock(), priority_class=pclass,
+                    lora_adapter=adapter)
         eid = gw.route(prompt, est_output_tokens=args.max_new,
-                       priority_class=pclass)
+                       lora_adapter=adapter, priority_class=pclass)
         engines[eid].submit(r)
         reqs.append((eid, r))
         # interleave a bit of serving with arrivals
@@ -290,7 +336,7 @@ def main() -> None:
     for eng in engines.values():
         eng.drain_async()       # resolve any in-flight async dispatch
 
-    print(f"\nrouting ({args.policy}):", dict(gw.stats.per_engine))
+    print(f"\nrouting ({policy}):", dict(gw.stats.per_engine))
     s = summarize([r for _, r in reqs])
     for k, v in s.items():
         print(f"  {k:22s} {v:.2f}" if isinstance(v, float) else
@@ -327,6 +373,14 @@ def main() -> None:
         print(f"  pool: puts={st.puts} hits={st.hits_local + st.hits_remote}"
               f" dup_drops={st.dup_puts_dropped}"
               f" bytes_stored={st.bytes_stored}")
+    if args.adapters:
+        cold = sum(e.runner.adapter_loads for e in engines.values())
+        stall = sum(e.runner.adapter_load_s for e in engines.values())
+        miss = sum(e.metrics().lora_miss for e in engines.values())
+        print(f"  lora: affinity_hits={gw.stats.lora_hits}"
+              f"/{gw.stats.lora_routed} "
+              f"(rate={gw.stats.lora_affinity_hit_rate:.2f}) "
+              f"cold_loads={cold} cold_load_s={stall:.2f} miss={miss}")
     if args.chaos != "none":
         wasted = sum(e.metrics().wasted_tokens for e in engines.values())
         ckpt = sum(e.metrics().ckpt_pages for e in engines.values())

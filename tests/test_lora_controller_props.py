@@ -1,0 +1,113 @@
+"""Property tests for LoRAController placement/sync invariants.
+
+Runs under real hypothesis when installed; the container falls back to
+the seeded-random subset in ``_hypothesis_fallback``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.lora.manager import AdapterSpec, LoRAController
+
+
+def _build(n_pods, capacity, n_adapters, min_replicas=1, max_replicas=4,
+           heat_exp=1.1):
+    ctrl = LoRAController(min_replicas=min_replicas,
+                          max_replicas=max_replicas)
+    for i in range(n_adapters):
+        ctrl.register(AdapterSpec(f"a-{i}", "base",
+                                  requests_per_s=1.0 / (i + 1) ** heat_exp))
+    for p in range(n_pods):
+        ctrl.add_pod(f"pod-{p}", capacity=capacity)
+    return ctrl
+
+
+@settings(max_examples=40)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 24))
+def test_plan_never_exceeds_pod_capacity(n_pods, capacity, n_adapters):
+    ctrl = _build(n_pods, capacity, n_adapters)
+    plan = ctrl.plan_placement()
+    assert set(plan) == set(ctrl.pods)
+    for pod_id, names in plan.items():
+        assert len(names) <= ctrl.pods[pod_id].capacity
+
+
+@settings(max_examples=40)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 24))
+def test_every_adapter_covered_when_capacity_suffices(
+        n_pods, capacity, n_adapters):
+    """Coverage-first: whenever total slots >= adapter count, NO
+    adapter is left unservable — hot replication only spends leftovers."""
+    ctrl = _build(n_pods, capacity, n_adapters)
+    plan = ctrl.plan_placement()
+    covered = {a for names in plan.values() for a in names}
+    if n_pods * capacity >= n_adapters:
+        assert covered == set(ctrl.adapters)
+    else:       # under-capacity: every slot is still spent
+        assert sum(len(v) for v in plan.values()) == n_pods * capacity
+
+
+@settings(max_examples=40)
+@given(st.integers(2, 6), st.integers(2, 4), st.integers(1, 8))
+def test_hot_adapter_gets_min_replicas_under_generous_capacity(
+        n_pods, min_replicas, n_adapters):
+    """With slack capacity the hottest adapter replicates to at least
+    min(min_replicas, n_pods) pods."""
+    want = min(min_replicas, n_pods)
+    ctrl = _build(n_pods, capacity=n_adapters * min_replicas,
+                  n_adapters=n_adapters, min_replicas=want)
+    plan = ctrl.plan_placement()
+    placed = sum(1 for names in plan.values() if "a-0" in names)
+    assert placed >= want
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 24))
+def test_sync_is_churn_free_under_unchanged_heat(
+        n_pods, capacity, n_adapters):
+    """Placement is sticky: a second sync with identical demand issues
+    zero load/unload actions."""
+    ctrl = _build(n_pods, capacity, n_adapters)
+    first = ctrl.sync({})
+    assert any(first.values()) == bool(n_adapters)
+    second = ctrl.sync({})
+    assert all(acts == [] for acts in second.values())
+    assert ctrl.stats["unloads"] == 0
+
+
+@settings(max_examples=25)
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(1, 24))
+def test_sync_reconciles_engine_drift(n_pods, capacity, n_adapters):
+    """A pod whose engine view drifted (LRU eviction / autoload past
+    the plan) is driven back to the planned state by the next sync."""
+    class FakeEngine:
+        def __init__(self):
+            self.adapters = []
+            self.calls = []
+
+        def register_adapter(self, name):
+            self.adapters.append(name)
+            self.calls.append(f"load:{name}")
+
+        def unregister_adapter(self, name):
+            self.adapters.remove(name)
+            self.calls.append(f"unload:{name}")
+
+    ctrl = _build(n_pods, capacity, n_adapters)
+    engines = {f"pod-{p}": FakeEngine() for p in range(n_pods)}
+    ctrl.sync(engines)
+    plan = {p: set(ctrl.pods[p].loaded) for p in ctrl.pods}
+    # drift: pod-0's engine dropped everything, pod-1 gained a stray
+    engines["pod-0"].adapters = []
+    engines["pod-1"].adapters = list(ctrl.pods["pod-1"].loaded) + ["stray"]
+    ctrl.register(AdapterSpec("stray", "base", requests_per_s=0.0))
+    ctrl.sync(engines)
+    for p, eng in engines.items():
+        assert set(eng.adapters) == set(ctrl.pods[p].loaded)
+        assert len(eng.adapters) <= capacity
+    restored = {a for e in engines.values() for a in e.adapters}
+    assert set(plan["pod-0"]) <= restored
