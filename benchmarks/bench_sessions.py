@@ -1,0 +1,219 @@
+"""Million-session serving: sticky sessions, SSD KV tier, event core.
+
+Four scenarios on the cluster simulator, all driven by the lazy
+``multi_round_qa`` trace (zipf-depth conversations, lognormal
+think-times, growing shared prefixes):
+
+1. ``scale``   — the headline: ≥100k concurrent sessions (~1M total in
+   full mode) under ``routing_policy="session"`` with request
+   retention off, reporting sessions/s, TTFT attainment and sim
+   events/wall-second.  Memory stays flat: the trace is generated
+   lazily and every finished Request streams into a StreamingSummary.
+2. ``routing`` — session-sticky routing vs a prefix-affinity-blind
+   baseline (least-request) on the same trace: stickiness converts
+   each round's growing conversation prefix into cache hits.
+3. ``ssd``     — host-DRAM-starved fleet with and without the SSD
+   write-behind tier: idle-session prefixes survive host pressure on
+   SSD instead of falling to recompute, so resumed turns keep their
+   TTFT advantage.
+4. ``event-core`` — same trace through the modern loop vs a faithful
+   reconstruction of the pre-PR hot path (per-route re-sorted engine
+   views, full EngineMetrics builds per engine per route, the
+   unconditional scrape pump, retained requests, per-event full-fleet
+   done() scans).  The headline is events/wall-second.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.gateway.router import RoutingPolicy
+from repro.core.sim import ClusterConfig, ServingCluster, SimEngineConfig
+from repro.core.sim.workloads import multi_round_qa
+
+ARCH = "deepseek-coder-7b"
+
+
+class _PrePRPrefixLoad(RoutingPolicy):
+    """The pre-PR prefix-load hot path, preserved verbatim for the
+    event-core A/B: sort the fleet on every call and build the full
+    EngineMetrics (windowed throughput, SLO stats) per engine."""
+    name = "prefix-load-prepr"
+
+    def __init__(self, load_weight: float = 0.02):
+        self.load_weight = load_weight
+
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard", session_id=None):
+        n = max(len(tokens), 1)
+        best, best_score = None, -1e18
+        for eid in sorted(engines):
+            e = engines[eid]
+            m = e.metrics()
+            cov = e.match_prefix_len(tokens) / n
+            score = cov - self.load_weight * (m.num_running
+                                              + m.num_waiting)
+            if score > best_score:
+                best, best_score = eid, score
+        return best
+
+
+def _legacyize(cluster: ServingCluster) -> None:
+    """Reconstruct the pre-PR event loop on a live cluster."""
+    cluster.gateway.cache_routable = False
+    cluster.gateway.policy = _PrePRPrefixLoad()
+    for e in cluster.engines.values():
+        e.on_busy_changed = None          # done() falls to full scans
+    cluster._busy_engines = 0
+    cluster.loop.every(cluster.ccfg.scrape_period_s, cluster._scrape)
+
+
+def _cluster(policy: str, engines: int, retain: bool = True,
+             **ecfg_kw) -> ServingCluster:
+    cfg = get_config(ARCH)
+    ekw = dict(device_type="a10", max_batch=48, chunk_size=512,
+               mixed_batching=True)
+    ekw.update(ecfg_kw)
+    ccfg = ClusterConfig(routing_policy=policy, num_engines=engines,
+                         engine=SimEngineConfig(**ekw),
+                         retain_requests=retain,
+                         ttft_slo_s={"standard": 1.0})
+    return ServingCluster(cfg, ccfg)
+
+
+# ------------------------------------------------------------ scenario 1
+def _run_scale(quick: bool) -> dict:
+    # sized so the fleet runs near (not past) capacity: one a10 sim
+    # engine sustains ~25 rps of this trace shape, and concurrency =
+    # session rate x mean session lifetime (~0.8 think-gaps/session)
+    n_sessions = 120_000 if quick else 1_000_000
+    rate = 450.0 if quick else 1200.0
+    cl = _cluster("session", engines=96 if quick else 256,
+                  retain=False, host_cache_gb=2.0)
+    tstats: dict = {}
+    wl = multi_round_qa(n_sessions, rate, seed=3, rounds_max=4,
+                        zipf_s=1.3, think_time_s=280.0 if quick
+                        else 420.0, sys_prompt=24,
+                        turn_tokens=12, output_tokens=4, stats=tstats)
+    t0 = time.time()
+    s = cl.run(wl, drain_s=120.0)
+    wall = max(time.time() - t0, 1e-9)
+    return dict(mode="quick" if quick else "full",
+                sessions=n_sessions,
+                peak_open_sessions=tstats.get("peak_open_sessions", 0),
+                finished=s["finished"],
+                sessions_per_s=n_sessions / s["completion_time_s"],
+                ttft_avg_ms=s["ttft_avg_ms"],
+                ttft_attainment=s.get("ttft_attainment", 0.0),
+                session_hits=s["session_hits"],
+                prefix_hit_tokens=s["prefix_hit_tokens"],
+                sim_events=s["sim_events"],
+                events_per_wall_s=s["sim_events"] / wall,
+                wall_s=wall)
+
+
+# ------------------------------------------------------------ scenario 2
+def _run_routing(policy: str, quick: bool) -> dict:
+    cl = _cluster(policy, engines=8, retain=False)
+    wl = multi_round_qa(1200 if quick else 4000, 60.0, seed=7,
+                        rounds_max=6, think_time_s=8.0, sys_prompt=256,
+                        turn_tokens=64, output_tokens=16)
+    s = cl.run(wl, drain_s=120.0)
+    return dict(mode=policy, finished=s["finished"],
+                ttft_avg_ms=s["ttft_avg_ms"],
+                ttft_attainment=s.get("ttft_attainment", 0.0),
+                prefix_hit_rate=s["prefix_hit_tokens"]
+                / max(s["prompt_tokens"], 1),
+                session_hits=s.get("session_hits", 0))
+
+
+# ------------------------------------------------------------ scenario 3
+def _run_ssd(ssd_gb: float, quick: bool) -> dict:
+    # device KV pinned small + a host tier too small for the working
+    # set: between rounds a session's pages cascade device -> host ->
+    # SSD, and the next round's prefix walk either hits SSD or pays
+    # full recompute
+    cl = _cluster("session", engines=2, num_pages=128,
+                  host_cache_gb=0.05, ssd_cache_gb=ssd_gb)
+    wl = multi_round_qa(120 if quick else 300, 2.5, seed=11,
+                        rounds_max=5, think_time_s=15.0,
+                        sys_prompt=600, turn_tokens=100,
+                        output_tokens=48)
+    s = cl.run(wl, drain_s=240.0)
+    return dict(mode=f"ssd={ssd_gb:g}GB" if ssd_gb else "no-ssd",
+                finished=s["finished"],
+                ttft_avg_ms=s["ttft_avg_ms"],
+                ttft_p99_ms=s["ttft_p99_ms"],
+                host_hit_tokens=s["host_hit_tokens"],
+                ssd_hit_tokens=s["ssd_hit_tokens"],
+                prefix_hit_tokens=s["prefix_hit_tokens"])
+
+
+# ------------------------------------------------------------ scenario 4
+def _run_loop(legacy: bool, quick: bool) -> dict:
+    # pre-PR arm retains every Request (it had no streaming summary);
+    # the modern arm streams finishes out
+    cl = _cluster("prefix-load", engines=16, retain=legacy)
+    if legacy:
+        _legacyize(cl)
+    wl = multi_round_qa(3000 if quick else 12000, 300.0, seed=3,
+                        rounds_max=4, think_time_s=10.0, sys_prompt=32,
+                        turn_tokens=16, output_tokens=4)
+    t0 = time.time()
+    s = cl.run(wl, drain_s=60.0)
+    wall = max(time.time() - t0, 1e-9)
+    return dict(mode="pre-PR-loop" if legacy else "event-core",
+                finished=s["finished"], sim_events=s["sim_events"],
+                wall_s=wall, events_per_wall_s=s["sim_events"] / wall)
+
+
+def _print(title: str, rows: list) -> None:
+    keys = [k for k in rows[0] if k != "mode"]
+    print(f"{title}: mode," + ",".join(keys))
+    for r in rows:
+        print("  " + str(r["mode"]) + "," + ",".join(
+            f"{r[k]:.1f}" if isinstance(r[k], float) else str(r[k])
+            for k in keys))
+
+
+def main(quick: bool = False):
+    out = {}
+    row = _run_scale(quick)
+    _print("session scale (sticky routing, streaming summary)", [row])
+    print(f"  derived,sessions_per_s={row['sessions_per_s']:.0f}"
+          f",events_per_wall_s={row['events_per_wall_s']:.0f}")
+    out["scale"] = [row]
+
+    rows = [_run_routing("least-request", quick),
+            _run_routing("session", quick)]
+    _print("sticky vs prefix-blind routing", rows)
+    blind, sticky = rows
+    print(f"  derived,prefix_hit_rate_gain="
+          f"{sticky['prefix_hit_rate'] - blind['prefix_hit_rate']:.3f}"
+          f",ttft_reduction_pct="
+          f"{100*(1-sticky['ttft_avg_ms']/max(blind['ttft_avg_ms'],1e-9)):.1f}")
+    out["routing"] = rows
+
+    rows = [_run_ssd(0.0, quick), _run_ssd(8.0, quick)]
+    _print("SSD write-behind tier (host DRAM starved)", rows)
+    off, on = rows
+    print(f"  derived,ssd_hit_tokens={on['ssd_hit_tokens']}"
+          f",resumed_ttft_reduction_pct="
+          f"{100*(1-on['ttft_avg_ms']/max(off['ttft_avg_ms'],1e-9)):.1f}")
+    out["ssd"] = rows
+
+    rows = [_run_loop(True, quick), _run_loop(False, quick)]
+    _print("event core (same trace)", rows)
+    old, new = rows
+    print(f"  derived,loop_speedup="
+          f"{new['events_per_wall_s']/max(old['events_per_wall_s'],1e-9):.1f}x")
+    out["loop"] = rows
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced scale (CI smoke; still >=100k sessions)")
+    main(quick=ap.parse_args().quick)

@@ -17,9 +17,10 @@ import traceback
 from benchmarks import (bench_autoscaling, bench_chaos, bench_coldstart,
                         bench_hetero, bench_kernels, bench_kv_tiers,
                         bench_kvcache, bench_lora, bench_pd_disagg,
-                        bench_pd_pools, bench_routing, bench_slo,
-                        bench_speculative, roofline)
+                        bench_pd_pools, bench_routing, bench_sessions,
+                        bench_slo, bench_speculative, roofline)
 from repro.core.gateway.gateway import Gateway
+from repro.core.sim.events import EventLoop
 from repro.engine.runner import ModelRunner
 from repro.engine.scheduler import Scheduler
 
@@ -33,6 +34,7 @@ SUITES = [
     ("pd_disaggregation_via_pool", bench_pd_disagg.main),
     ("pd_role_pools_rebalancing", bench_pd_pools.main),
     ("kv_tiers_swap_and_streaming", bench_kv_tiers.main),
+    ("million_session_serving", bench_sessions.main),
     ("slo_aware_scheduling", bench_slo.main),
     ("chaos_and_crash_recovery", bench_chaos.main),
     ("pallas_kernels", bench_kernels.main),
@@ -55,6 +57,7 @@ def main() -> None:
         print(f"\n===== {name} " + "=" * max(8, 60 - len(name)))
         t0 = time.time()
         shed0 = Gateway.total_shed
+        ev0 = EventLoop.total_events
         wait0 = ModelRunner.total_device_wait_s
         lr0, lh0 = Gateway.total_lora_routed, Gateway.total_lora_hits
         lm0 = Scheduler.total_lora_miss
@@ -78,7 +81,13 @@ def main() -> None:
             if lr > 0:
                 lh = Gateway.total_lora_hits - lh0
                 note += f" [lora affinity {lh}/{lr}, miss {lm}]"
-            print(f"----- {name} done in {time.time()-t0:.1f}s{note}")
+            # event-core throughput: fired sim events per wall-second
+            # of the whole suite (0 events for real-engine-only suites)
+            ev = EventLoop.total_events - ev0
+            wall = max(time.time() - t0, 1e-9)
+            if ev > 0:
+                note += f" [{ev} sim events, {ev / wall:,.0f}/wall-s]"
+            print(f"----- {name} done in {wall:.1f}s{note}")
         except Exception:
             traceback.print_exc()
             failures.append(name)

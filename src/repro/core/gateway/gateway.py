@@ -102,7 +102,17 @@ class Gateway:
         self.policy: RoutingPolicy = make_policy(policy, **policy_kw)
         self.default_limit = default_limit or RateLimit()
         self.clock = clock or (lambda: 0.0)
+        if hasattr(self.policy, "attach_clock"):
+            self.policy.attach_clock(self.clock)
         self.engines: Dict[str, object] = {}
+        # cached routable view: ``route()`` runs per request, so the
+        # frontend/cordon filter + id-ordering is computed once per
+        # fleet change, not per call.  ``cache_routable=False`` restores
+        # the rebuild-every-call behavior (bench_routing's baseline).
+        self.cache_routable = True
+        self._routable_cache: Optional[Dict[str, object]] = None
+        self._routable_key = None
+        self._fleet_version = 0
         self.engine_pool: Dict[str, str] = {}     # engine_id -> pool tag
         # quarantined engines: cordoned out of routable_engines() while
         # the DiagnosticMonitor's re-admit probe runs (in-flight work
@@ -113,8 +123,16 @@ class Gateway:
         # feeds it per-adapter arrivals (demand-driven replanning) and
         # wires its endpoint view into the lora-affinity policy
         self.lora_controller = None
-        self._rpm: Dict[str, TokenBucket] = {}
-        self._tpm: Dict[str, TokenBucket] = {}
+        # per-user rate-limit buckets, LRU-bounded: a million-session
+        # trace brings a million distinct users, and an unbounded map
+        # would hold two bucket objects per user forever.  Evicting the
+        # least-recently-routed user resets their bucket to full on
+        # return — indistinguishable from an idle user whose bucket
+        # refilled, so only sustained >max_user_buckets populations
+        # see any leniency.
+        self.max_user_buckets = 1 << 18
+        self._rpm: Dict[str, TokenBucket] = collections.OrderedDict()
+        self._tpm: Dict[str, TokenBucket] = collections.OrderedDict()
         self.stats = GatewayStats()
         # workload histogram for the GPU optimizer's Load Monitor
         self.request_log: collections.deque = collections.deque(maxlen=4096)
@@ -127,6 +145,11 @@ class Gateway:
         self._shed_log_at = float("-inf")
 
     # -------------------------------------------------------------- admin
+    def _fleet_changed(self) -> None:
+        """Invalidate the cached routable view (any admin mutation)."""
+        self._fleet_version += 1
+        self._routable_cache = None
+
     def register_engine(self, engine_id: str, handle,
                         pool: Optional[str] = None) -> None:
         """Register a target.  ``pool`` tags the serving role; untagged
@@ -134,15 +157,18 @@ class Gateway:
         self.engines[engine_id] = handle
         if pool is not None:
             self.engine_pool[engine_id] = pool
+        self._fleet_changed()
 
     def deregister_engine(self, engine_id: str) -> None:
         """Scale-down/remediation: the engine must become unroutable
         IMMEDIATELY, including from any per-policy state (attainment
-        EWMAs, prefix-affinity maps) that could still name it."""
+        EWMAs, prefix-affinity maps, session pins) that could still
+        name it."""
         self.engines.pop(engine_id, None)
         self.engine_pool.pop(engine_id, None)
         self.cordoned.discard(engine_id)
         self.policy.forget(engine_id)
+        self._fleet_changed()
 
     def cordon(self, engine_id: str, reason: str = "quarantine") -> None:
         """Quarantine: stop routing NEW work to the engine without
@@ -153,9 +179,11 @@ class Gateway:
             self.cordoned.add(engine_id)
             self.policy.forget(engine_id)
             self.note_failure(engine_id, reason)
+            self._fleet_changed()
 
     def uncordon(self, engine_id: str) -> None:
         self.cordoned.discard(engine_id)
+        self._fleet_changed()
 
     def note_failure(self, engine_id: str, kind: str) -> None:
         """Per-engine failure accounting (crash / quarantine / hedged)."""
@@ -168,20 +196,39 @@ class Gateway:
         must not leak routing onto the same pod as a decode member."""
         self.engine_pool[engine_id] = pool
         self.policy.forget(engine_id)
+        self._fleet_changed()
 
     def routable_engines(self) -> Dict[str, object]:
         """NEW requests go to frontend pools only (prefill/mixed) and
         never to a cordoned engine; untagged engines (no pool manager)
-        keep the legacy behavior."""
-        if not self.engine_pool:
-            if not self.cordoned:
-                return self.engines
-            return {eid: h for eid, h in self.engines.items()
+        keep the legacy behavior.
+
+        The returned view is CACHED and id-ordered: it is rebuilt only
+        when the fleet changes (register/deregister/retag/cordon — and
+        a length check catches direct ``cordoned`` mutation), so the
+        per-request routing path does no filtering or sorting.  Policies
+        rely on the id-ordering for deterministic tie-breaks."""
+        key = (self._fleet_version, len(self.engines),
+               len(self.engine_pool), len(self.cordoned))
+        if self.cache_routable and self._routable_cache is not None \
+                and self._routable_key == key:
+            return self._routable_cache
+        if not self.engine_pool and not self.cordoned:
+            view = {eid: self.engines[eid]
+                    for eid in sorted(self.engines)}
+        elif not self.engine_pool:
+            view = {eid: self.engines[eid]
+                    for eid in sorted(self.engines)
                     if eid not in self.cordoned}
-        return {eid: h for eid, h in self.engines.items()
-                if eid not in self.cordoned
-                and self.engine_pool.get(eid, "mixed")
-                in self.FRONTEND_POOLS}
+        else:
+            view = {eid: self.engines[eid]
+                    for eid in sorted(self.engines)
+                    if eid not in self.cordoned
+                    and self.engine_pool.get(eid, "mixed")
+                    in self.FRONTEND_POOLS}
+        self._routable_cache = view
+        self._routable_key = key
+        return view
 
     def straggler_engines(self, ratio: float = 0.5) -> List[str]:
         """Fleet-relative straggler detection: routable engines whose
@@ -206,6 +253,8 @@ class Gateway:
 
     def set_policy(self, name: str, **kw) -> None:
         self.policy = make_policy(name, **kw)
+        if hasattr(self.policy, "attach_clock"):
+            self.policy.attach_clock(self.clock)
         if self.lora_controller is not None \
                 and hasattr(self.policy, "set_endpoints"):
             self.policy.set_endpoints(self.lora_controller.endpoints)
@@ -222,19 +271,27 @@ class Gateway:
     def _buckets(self, user: str) -> Tuple[TokenBucket, TokenBucket]:
         if user not in self._rpm:
             lim = self.user_limits.get(user, self.default_limit)
+            if len(self._rpm) >= self.max_user_buckets:
+                old, _ = self._rpm.popitem(last=False)
+                self._tpm.pop(old, None)
             self._rpm[user] = TokenBucket(lim.rpm)
             self._tpm[user] = TokenBucket(lim.tpm)
+        else:
+            self._rpm.move_to_end(user)
         return self._rpm[user], self._tpm[user]
 
     def route(self, tokens: Sequence[int], user: str = "default",
               lora_adapter: Optional[str] = None,
               est_output_tokens: int = 64,
-              priority_class: str = "standard") -> Optional[str]:
+              priority_class: str = "standard",
+              session_id: Optional[str] = None) -> Optional[str]:
         """Admission + routing.  Returns engine id, or None if rejected
         (token-based rate limit) / no engine registered.
         ``priority_class`` is the request's SLO class — the slo-aware
-        policy routes by its per-class attainment/slack; other
-        policies ignore it."""
+        policy routes by its per-class attainment/slack; ``session_id``
+        is the multi-turn conversation key — the session policy pins
+        it to the engine holding the conversation's KV prefix; other
+        policies ignore them."""
         now = self.clock()
         targets = self.routable_engines()
         if not targets:
@@ -249,7 +306,8 @@ class Gateway:
             self._note_shed(user, now)
             return None
         eid = self.policy.select(targets, tokens, lora_adapter,
-                                 priority_class=priority_class)
+                                 priority_class=priority_class,
+                                 session_id=session_id)
         if lora_adapter:
             # affinity accounting: did the chosen engine already hold
             # the adapter, or does this request pay a cold load?

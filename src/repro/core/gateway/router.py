@@ -5,7 +5,7 @@ Implements exactly the paper's six policies over live engine metrics:
   random | throughput | least-request | least-kv-cache | least-latency |
   prefix-cache-aware
 
-plus two beyond-paper composites:
+plus three beyond-paper composites:
 
   * ``prefix-load`` — prefix affinity scored jointly with load (the
     direction the gateway-api-inference-extension work took); used in
@@ -17,16 +17,31 @@ plus two beyond-paper composites:
     most headroom.  Knobs: ``load_weight`` (queue-depth penalty),
     ``classes`` (TTFT/ITL target table, defaults to the scheduler's
     ``DEFAULT_SLO_CLASSES``).
+  * ``session`` — sticky multi-turn routing (production-stack's
+    ``routingLogic: "session"``): a bounded, TTL'd ``session_id ->
+    engine`` map pins every turn of a conversation to the engine
+    already holding its KV prefix; first turns, expired sessions and
+    sessions whose engine retired re-home through prefix affinity.
+    Knobs: ``max_sessions``, ``ttl_s``, ``load_weight``.
 
-Every ``select`` takes the request's ``priority_class`` keyword (the
-gateway forwards it); policies that don't differentiate classes simply
-ignore it.  Engines are anything exposing ``metrics() ->
-EngineMetrics`` and ``match_prefix_len(tokens) -> int`` — the real JAX
-engine, the slot engine and the cluster simulator's analytic engine
-all qualify.
+Every ``select`` takes the request's ``priority_class`` and
+``session_id`` keywords (the gateway forwards them); policies that
+don't differentiate simply ignore them.  Engines are anything exposing
+``metrics() -> EngineMetrics`` and ``match_prefix_len(tokens) -> int``
+— the real JAX engine, the slot engine and the cluster simulator's
+analytic engine all qualify.
+
+Hot-path note: ``select`` runs once per request, for every request, so
+no policy may sort the engine view per call.  The gateway hands
+policies a *cached, id-ordered* engine dict (rebuilt only when the
+fleet changes — see ``Gateway.routable_engines``) and the scoring
+loops below are single-pass argmin/argmax with an explicit
+``(score, engine_id)`` tie-break, which keeps selection deterministic
+for any insertion order of the dict.
 """
 from __future__ import annotations
 
+import collections
 import random as _random
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -39,7 +54,8 @@ class RoutingPolicy:
 
     def select(self, engines: Dict[str, object], tokens: Sequence[int],
                lora_adapter: Optional[str] = None,
-               priority_class: str = "standard") -> str:
+               priority_class: str = "standard",
+               session_id: Optional[str] = None) -> str:
         raise NotImplementedError
 
     def forget(self, engine_id: str) -> None:
@@ -56,20 +72,27 @@ class RandomPolicy(RoutingPolicy):
         self.rng = _random.Random(seed)
 
     def select(self, engines, tokens, lora_adapter=None,
-               priority_class="standard"):
-        return self.rng.choice(sorted(engines))
+               priority_class="standard", session_id=None):
+        # the gateway's cached routable view is id-ordered, so indexing
+        # into the dict directly is both O(n) and deterministic
+        keys = list(engines)
+        return keys[self.rng.randrange(len(keys))]
 
 
 class _MetricArgmin(RoutingPolicy):
     metric: Callable = None
 
     def select(self, engines, tokens, lora_adapter=None,
-               priority_class="standard"):
-        scored = {eid: self.metric(e.metrics())
-                  for eid, e in engines.items()}
-        lo = min(scored.values())
-        # deterministic tie-break on id
-        return min(eid for eid, s in scored.items() if s == lo)
+               priority_class="standard", session_id=None):
+        # single pass, deterministic (score, id) tie-break — no sort
+        best, best_s = None, None
+        metric = self.metric
+        for eid, e in engines.items():
+            s = metric(e.metrics())
+            if best_s is None or s < best_s \
+                    or (s == best_s and eid < best):
+                best, best_s = eid, s
+        return best
 
 
 class ThroughputPolicy(_MetricArgmin):
@@ -78,10 +101,32 @@ class ThroughputPolicy(_MetricArgmin):
     metric = staticmethod(lambda m: m.tokens_per_sec)
 
 
+def _queue_depth(e) -> int:
+    """Engine load for routing scores, off the cheap accessor when the
+    engine exposes one (the shared scheduler core does) — a full
+    metrics() build per engine per route is the single largest
+    per-request cost at large fleet sizes."""
+    qd = getattr(e, "queue_depth", None)
+    if qd is not None:
+        return qd
+    m = e.metrics()
+    return m.num_running + m.num_waiting
+
+
 class LeastRequestPolicy(_MetricArgmin):
     """Lowest number of admitted-but-unfinished requests."""
     name = "least-request"
     metric = staticmethod(lambda m: m.num_running + m.num_waiting)
+
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard", session_id=None):
+        best, best_s = None, None
+        for eid, e in engines.items():
+            s = _queue_depth(e)
+            if best_s is None or s < best_s \
+                    or (s == best_s and eid < best):
+                best, best_s = eid, s
+        return best
 
 
 class LeastKVCachePolicy(_MetricArgmin):
@@ -106,12 +151,13 @@ class PrefixCacheAwarePolicy(RoutingPolicy):
         self._fallback = LeastRequestPolicy()
 
     def select(self, engines, tokens, lora_adapter=None,
-               priority_class="standard"):
+               priority_class="standard", session_id=None):
         n = max(len(tokens), 1)
         best_eid, best_cov = None, 0.0
-        for eid in sorted(engines):
-            cov = engines[eid].match_prefix_len(tokens) / n
-            if cov > best_cov:
+        for eid, e in engines.items():
+            cov = e.match_prefix_len(tokens) / n
+            if cov > best_cov or (cov == best_cov and cov > 0.0
+                                  and eid < best_eid):
                 best_eid, best_cov = eid, cov
         if best_eid is not None and best_cov >= self.threshold:
             return best_eid
@@ -143,20 +189,18 @@ class PrefixLoadPolicy(RoutingPolicy):
         self._affinity: Dict[tuple, str] = {}
 
     def select(self, engines, tokens, lora_adapter=None,
-               priority_class="standard"):
+               priority_class="standard", session_id=None):
         n = max(len(tokens), 1)
         key = tuple(tokens[:self.AFFINITY_BLOCK])
         hint = self._affinity.get(key)
         best, best_score = None, -1e18
-        for eid in sorted(engines):
-            e = engines[eid]
-            m = e.metrics()
+        for eid, e in engines.items():
             cov = e.match_prefix_len(tokens) / n
-            load = m.num_running + m.num_waiting
-            score = cov - self.load_weight * load
+            score = cov - self.load_weight * _queue_depth(e)
             if eid == hint:
                 score += self.affinity_bonus
-            if score > best_score:
+            if score > best_score \
+                    or (score == best_score and eid < best):
                 best, best_score = eid, score
         if (key not in self._affinity
                 and len(self._affinity) >= self.MAX_AFFINITY):
@@ -196,13 +240,13 @@ class SLOAwarePolicy(RoutingPolicy):
         self._att_ewma: Dict[tuple, float] = {}
 
     def select(self, engines, tokens, lora_adapter=None,
-               priority_class="standard"):
+               priority_class="standard", session_id=None):
         cls = self.classes.get(priority_class) \
             or self.classes.get("standard") \
             or DEFAULT_SLO_CLASSES["standard"]
         best, best_score = None, -1e18
-        for eid in sorted(engines):
-            m = engines[eid].metrics()
+        for eid, eng in engines.items():
+            m = eng.metrics()
             att = m.slo_attainment
             for name, ttft_att, _itl_att, _n in m.slo_by_class:
                 if name == priority_class:
@@ -216,7 +260,8 @@ class SLOAwarePolicy(RoutingPolicy):
             slack_pressure = m.avg_queue_time / max(cls.ttft_s, 1e-9)
             load = m.num_running + m.num_waiting
             score = att - slack_pressure - self.load_weight * load
-            if score > best_score:
+            if score > best_score \
+                    or (score == best_score and eid < best):
                 best, best_score = eid, score
         return best
 
@@ -250,7 +295,7 @@ class LoRAAffinityPolicy(RoutingPolicy):
         self._endpoints_fn = fn
 
     def select(self, engines, tokens, lora_adapter=None,
-               priority_class="standard"):
+               priority_class="standard", session_id=None):
         if lora_adapter:
             having = {}
             if self._endpoints_fn is not None:
@@ -265,10 +310,86 @@ class LoRAAffinityPolicy(RoutingPolicy):
         return self._fallback.select(engines, tokens, lora_adapter)
 
 
+class SessionAffinityPolicy(RoutingPolicy):
+    """Sticky session routing for multi-turn serving (production-stack's
+    ``routingLogic: "session"`` / ``sessionKey: "x-user-id"`` shape).
+
+    A bounded, TTL'd ``session_id -> engine_id`` map pins every turn of
+    a conversation to the engine that served its previous turns — where
+    the session's KV prefix is already resident in the device cache or
+    its host/SSD tiers, so turn N admits with a warm prefix instead of
+    recomputing the whole growing history.  The map is only a routing
+    *hint*, never correctness state:
+
+    * first turn / expired TTL / map evicted under ``max_sessions`` —
+      the request routes through the :class:`PrefixLoadPolicy` fallback
+      (prefix affinity traded against load) and the winner is recorded;
+    * engine retired or migrated — ``forget`` purges every session
+      pinned to it, so the next turn re-homes through prefix affinity
+      with zero lost requests (a gateway restart, which loses the whole
+      map, degrades the same way: one fallback route per session).
+
+    All map operations are O(1); ``forget`` is O(sessions) but only
+    runs on fleet changes.
+    """
+    name = "session"
+
+    def __init__(self, max_sessions: int = 1 << 20,
+                 ttl_s: float = 1800.0, load_weight: float = 0.02):
+        self.max_sessions = max_sessions
+        self.ttl_s = ttl_s
+        self._fallback = PrefixLoadPolicy(load_weight=load_weight)
+        # session_id -> (engine_id, last_seen); dict order == LRU order
+        self._sessions: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()
+        self._clock = None
+        self.hits = 0          # routed by the sticky map
+        self.misses = 0        # first turn of a session
+        self.rehomed = 0       # mapping stale/retired -> prefix fallback
+
+    def attach_clock(self, clock) -> None:
+        """The gateway wires its clock in so TTL expiry shares the
+        cluster's notion of time (sim or wall)."""
+        self._clock = clock
+
+    def select(self, engines, tokens, lora_adapter=None,
+               priority_class="standard", session_id=None):
+        if session_id is None:
+            return self._fallback.select(engines, tokens, lora_adapter,
+                                         priority_class)
+        now = self._clock() if self._clock is not None else 0.0
+        ent = self._sessions.get(session_id)
+        if ent is not None:
+            eid, last = ent
+            if eid in engines and (self.ttl_s <= 0
+                                   or now - last <= self.ttl_s):
+                self._sessions[session_id] = (eid, now)
+                self._sessions.move_to_end(session_id)
+                self.hits += 1
+                return eid
+            del self._sessions[session_id]
+            self.rehomed += 1
+        else:
+            self.misses += 1
+        eid = self._fallback.select(engines, tokens, lora_adapter,
+                                    priority_class)
+        while len(self._sessions) >= self.max_sessions:
+            self._sessions.popitem(last=False)
+        self._sessions[session_id] = (eid, now)
+        return eid
+
+    def forget(self, engine_id: str) -> None:
+        stale = [sid for sid, (eid, _) in self._sessions.items()
+                 if eid == engine_id]
+        for sid in stale:
+            del self._sessions[sid]
+        self._fallback.forget(engine_id)
+
+
 POLICIES = {p.name: p for p in (
     RandomPolicy, ThroughputPolicy, LeastRequestPolicy, LeastKVCachePolicy,
     LeastLatencyPolicy, PrefixCacheAwarePolicy, PrefixLoadPolicy,
-    SLOAwarePolicy, LoRAAffinityPolicy)}
+    SLOAwarePolicy, LoRAAffinityPolicy, SessionAffinityPolicy)}
 
 
 def make_policy(name: str, **kw) -> RoutingPolicy:

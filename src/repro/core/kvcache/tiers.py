@@ -15,8 +15,21 @@ the pool handoff path speaks:
     PageAllocator` eviction cascade (victims fall into this tier
     instead of vanishing) and swap-based preemption (a preempted
     request's pages — prompt AND generated — park here under per-
-    request swap keys until resume).  Eviction is LRU; an SSD third
-    tier below it is a ROADMAP follow-up.
+    request swap keys until resume).  Eviction is LRU; host evictions
+    cascade into the :class:`SSDPagePool` below when one is wired via
+    ``on_evict``.
+
+``SSDPagePool``
+    The third tier: a bounded SSD page store below host DRAM with
+    *asynchronous write-behind* — ``put`` lands in a bounded in-RAM
+    dirty buffer and returns immediately; a writer drains it to the
+    backing store at SSD bandwidth (modelled ready-times on the
+    simulator, a daemon thread writing pickle files on the real
+    engine).  Idle-session prefixes and swapped-out requests survive
+    host pressure here and resume without recompute.  Entries are
+    never quantized (the swap path must stay byte-identical); when the
+    dirty buffer is full, new puts are *dropped* (it is a cache — the
+    page walk falls through to the distributed pool or recompute).
 
 int8 wire compression (``compress_page`` / ``decompress_page``)
     The distributed-pool handoff path quantizes page payloads to int8
@@ -135,6 +148,10 @@ class HostPagePool:
         self._entries: "collections.OrderedDict[str, tuple]" = \
             collections.OrderedDict()
         self.stats = HostTierStats()
+        # eviction cascade hook: on_evict(key, payload, size_bytes, now)
+        # fires for every capacity eviction (NOT explicit discards) so
+        # an SSDPagePool below can absorb the victim
+        self.on_evict = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -168,9 +185,11 @@ class HostPagePool:
             return False
         while (self.stats.bytes_stored + size_bytes
                > self.capacity_bytes) and self._entries:
-            _, (_, sz) = self._entries.popitem(last=False)
+            vk, (vp, sz) = self._entries.popitem(last=False)
             self.stats.bytes_stored -= sz
             self.stats.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(vk, vp, sz, now)
         self._entries[key] = (payload, size_bytes)
         self.stats.bytes_stored += size_bytes
         self.stats.puts += 1
@@ -194,3 +213,238 @@ class HostPagePool:
         ent = self._entries.pop(key, None)
         if ent is not None:
             self.stats.bytes_stored -= ent[1]
+
+
+# ----------------------------------------------------------------- ssd tier
+@dataclass
+class SSDTierStats:
+    puts: int = 0
+    dup_puts: int = 0
+    dropped_puts: int = 0        # write-behind buffer full => put dropped
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_stored: int = 0
+    bytes_written: int = 0       # cumulative bytes drained to the SSD
+
+
+class SSDPagePool:
+    """Bounded SSD page tier below host DRAM with asynchronous
+    write-behind.
+
+    ``put`` appends to a bounded in-RAM dirty buffer and returns
+    immediately; the writer drains it to the backing store at SSD
+    bandwidth.  Two backings share the class:
+
+    * **modelled** (``directory=None``, the simulator): each dirty
+      entry carries a ready-time computed from a single serial writer
+      draining at ``ssd_bw``; ``get``/``put`` lazily promote entries
+      whose ready-time has passed into the durable LRU store.
+    * **file-backed** (``directory=...``, the real engine): a daemon
+      thread pickles payloads to files under ``directory`` — reads are
+      byte-identical to what was written (payloads are never
+      quantized), which the swap-resume pin in tests/test_sessions.py
+      relies on.
+
+    Entries still in the dirty buffer are readable (they live in RAM);
+    when the buffer is full new puts are dropped and counted — it is a
+    cache, so the page walk just falls through to the next tier.
+    """
+
+    def __init__(self, capacity_bytes: int = 64 << 30,
+                 ssd_bw: float = 3.0e9,
+                 write_buffer_bytes: int = 256 << 20,
+                 directory: Optional[str] = None):
+        self.capacity_bytes = int(capacity_bytes)
+        self.ssd_bw = ssd_bw
+        self.write_buffer_bytes = int(write_buffer_bytes)
+        # durable store: key -> (payload_or_path, size_bytes); LRU order
+        self._entries: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()
+        # write-behind buffer: key -> (payload, size_bytes, ready_time)
+        self._dirty: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()
+        self._dirty_bytes = 0
+        self._writer_free_at = 0.0
+        self.stats = SSDTierStats()
+        self._dir = directory
+        self._lock = None
+        self._queue = None
+        if directory is not None:
+            import os
+            import queue
+            import threading
+            os.makedirs(directory, exist_ok=True)
+            self._lock = threading.Lock()
+            self._queue = queue.Queue()
+            t = threading.Thread(target=self._file_writer, daemon=True)
+            t.start()
+
+    # --------------------------------------------------------- internals
+    def _file_writer(self) -> None:
+        """Daemon thread: drain the dirty queue to pickle files."""
+        import os
+        import pickle
+        while True:
+            key, payload, size_bytes = self._queue.get()
+            path = os.path.join(
+                self._dir, f"{abs(hash(key)) :x}-{self.stats.puts}.kv")
+            with open(path, "wb") as f:
+                pickle.dump(payload, f, protocol=4)
+            with self._lock:
+                if key in self._dirty:           # not discarded meanwhile
+                    del self._dirty[key]
+                    self._dirty_bytes -= size_bytes
+                    self._store(key, path, size_bytes)
+                    self.stats.bytes_written += size_bytes
+                else:
+                    os.remove(path)
+            self._queue.task_done()
+
+    def _store(self, key: str, payload: Any, size_bytes: int) -> None:
+        """Insert into the durable LRU store, evicting to capacity."""
+        while (self.stats.bytes_stored + size_bytes
+               > self.capacity_bytes) and self._entries:
+            _, (vp, sz) = self._entries.popitem(last=False)
+            self.stats.bytes_stored -= sz
+            self.stats.evictions += 1
+            self._unlink(vp)
+        self._entries[key] = (payload, size_bytes)
+        self.stats.bytes_stored += size_bytes
+
+    def _unlink(self, payload: Any) -> None:
+        if self._dir is not None and isinstance(payload, str):
+            import os
+            try:
+                os.remove(payload)
+            except OSError:
+                pass
+
+    def _flush(self, now: float) -> None:
+        """Modelled backing: promote dirty entries whose write has
+        completed by ``now`` into the durable store."""
+        if self._dir is not None:
+            return                     # the thread does real draining
+        while self._dirty:
+            key, (payload, sz, ready) = next(iter(self._dirty.items()))
+            if ready > now:
+                break
+            del self._dirty[key]
+            self._dirty_bytes -= sz
+            self._store(key, payload, sz)
+            self.stats.bytes_written += sz
+
+    # ----------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._entries) + len(self._dirty)
+
+    def can_hold(self, nbytes: int) -> bool:
+        return nbytes <= self.capacity_bytes
+
+    def contains(self, key: str) -> bool:
+        if self._lock is not None:
+            with self._lock:
+                return key in self._dirty or key in self._entries
+        return key in self._dirty or key in self._entries
+
+    @property
+    def utilization(self) -> float:
+        return ((self.stats.bytes_stored + self._dirty_bytes)
+                / max(self.capacity_bytes, 1))
+
+    def keys(self):
+        if self._lock is not None:
+            with self._lock:
+                return list(self._dirty) + list(self._entries)
+        return list(self._dirty) + list(self._entries)
+
+    # ------------------------------------------------------------ put/get
+    def put(self, key: str, payload: Any, size_bytes: int,
+            now: float = 0.0) -> bool:
+        """Write-behind insert: lands in the dirty buffer and returns;
+        the writer drains it at SSD bandwidth.  Returns False when the
+        entry is too big or the dirty buffer is full (put dropped)."""
+        size_bytes = int(size_bytes)
+        if self._lock is not None:
+            with self._lock:
+                return self._put_locked(key, payload, size_bytes, now)
+        return self._put_locked(key, payload, size_bytes, now)
+
+    def _put_locked(self, key: str, payload: Any, size_bytes: int,
+                    now: float) -> bool:
+        self._flush(now)
+        if key in self._dirty or key in self._entries:
+            self.stats.dup_puts += 1
+            if key in self._entries:
+                self._entries.move_to_end(key)
+            return True
+        if size_bytes > self.capacity_bytes:
+            return False
+        if self._dirty_bytes + size_bytes > self.write_buffer_bytes:
+            self.stats.dropped_puts += 1
+            return False
+        if self._dir is None:
+            ready = max(now, self._writer_free_at) \
+                + size_bytes / self.ssd_bw
+            self._writer_free_at = ready
+            self._dirty[key] = (payload, size_bytes, ready)
+        else:
+            self._dirty[key] = (payload, size_bytes, 0.0)
+            self._queue.put((key, payload, size_bytes))
+        self._dirty_bytes += size_bytes
+        self.stats.puts += 1
+        return True
+
+    def get(self, key: str, now: float = 0.0) -> Optional[Any]:
+        """Fetch a payload: dirty-buffer entries are served from RAM,
+        durable entries from the backing store (file-backed entries are
+        unpickled — byte-identical to what was written)."""
+        if self._lock is not None:
+            with self._lock:
+                return self._get_locked(key, now)
+        return self._get_locked(key, now)
+
+    def _get_locked(self, key: str, now: float) -> Optional[Any]:
+        self._flush(now)
+        ent = self._dirty.get(key)
+        if ent is not None:
+            self.stats.hits += 1
+            return ent[0]
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        payload = ent[0]
+        if self._dir is not None and isinstance(payload, str):
+            import pickle
+            with open(payload, "rb") as f:
+                return pickle.load(f)
+        return payload
+
+    def discard(self, key: str) -> None:
+        if self._lock is not None:
+            with self._lock:
+                self._discard_locked(key)
+        else:
+            self._discard_locked(key)
+
+    def _discard_locked(self, key: str) -> None:
+        ent = self._dirty.pop(key, None)
+        if ent is not None:
+            self._dirty_bytes -= ent[1]
+            return
+        ent = self._entries.pop(key, None)
+        if ent is not None:
+            self.stats.bytes_stored -= ent[1]
+            self._unlink(ent[0])
+
+    def drain(self, timeout: float = 10.0) -> None:
+        """Block until every queued write has landed (file backing) or
+        force-complete all modelled writes — tests and engine shutdown
+        use this to make write-behind deterministic."""
+        if self._queue is not None:
+            self._queue.join()
+        else:
+            self._flush(float("inf"))

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 from repro.core.autoscaler.metrics import MetricStore
 from repro.core.autoscaler.policies import Autoscaler
@@ -39,7 +39,8 @@ from repro.core.runtime.sidecar import (AIRuntime, ColdStartManager,
                                         ModelArtifact)
 from repro.core.sim.events import EventLoop, SimClock
 from repro.core.sim.sim_engine import SimEngine, SimEngineConfig
-from repro.core.sim.workloads import TimedRequest, summarize
+from repro.core.sim.workloads import (StreamingSummary, TimedRequest,
+                                      summarize)
 from repro.models.config import ModelConfig
 
 
@@ -95,6 +96,15 @@ class ClusterConfig:
     lora_replan_period_s: float = 2.0
     lora_min_replicas: int = 1
     lora_max_replicas: int = 4
+    # -- million-session scale --
+    # False streams every finished Request into a StreamingSummary
+    # (engines' finish_sink) and drops the object, so memory stays flat
+    # no matter how many requests a run pushes through; summary() then
+    # reads the streaming twin instead of summarize(all_requests)
+    retain_requests: bool = True
+    # per-priority-class TTFT targets fed to the StreamingSummary so
+    # summary() can report ttft_attainment without retaining requests
+    ttft_slo_s: Optional[Dict[str, float]] = None
 
 
 class ServingCluster:
@@ -137,6 +147,15 @@ class ServingCluster:
         self.monitor = DiagnosticMonitor()
         self.diagnoses: List = []
         self.all_requests: List = []
+        self.stream_summary = (None if ccfg.retain_requests else
+                               StreamingSummary(ttft_slo_s=ccfg.ttft_slo_s))
+        # engines with a pending iteration event, maintained via the
+        # on_busy_changed edge callback — run()'s done() predicate
+        # checks this counter instead of scanning every engine's
+        # has_work after each event (the full scan only runs when the
+        # count hits zero, where it still catches dead engines whose
+        # queues are non-empty but whose iteration has stopped)
+        self._busy_engines = 0
         self.rejected: int = 0
         self.scale_history: List[tuple] = []
         # chaos / failure-handling accounting
@@ -213,6 +232,9 @@ class ServingCluster:
         eng = SimEngine(self.cfg, self.loop, ecfg, kv_pool=self.kv_pool,
                         engine_id=eid, node=node)
         eng.slowdown_fn = (lambda e=eid: self.injector.slowdown_factor(e))
+        eng.on_busy_changed = self._note_busy
+        if self.stream_summary is not None:
+            eng.sched.finish_sink = self.stream_summary.observe
         self.engines[eid] = eng
         self.runtimes[eid] = AIRuntime(eng, pod_id=eid, node=node)
         ctrl = getattr(self, "lora_ctrl", None)
@@ -229,6 +251,9 @@ class ServingCluster:
                             lambda: self.pool_mgr.add_engine(eid, eng,
                                                              role))
         return eid
+
+    def _note_busy(self, flag: bool) -> None:
+        self._busy_engines += 1 if flag else -1
 
     def _retire_engine(self) -> None:
         live = [e for e in self.engines if e in self.gateway.engines]
@@ -460,12 +485,32 @@ class ServingCluster:
             self._retire_engine()
 
     # ------------------------------------------------------------ run
-    def run(self, workload: List[TimedRequest],
+    def run(self, workload: Iterable[TimedRequest],
             drain_s: float = 600.0) -> dict:
-        for tr in workload:
-            self.all_requests.append(tr.request)
-            self.loop.schedule(tr.arrival, self._make_dispatch(tr))
-        self.loop.every(self.ccfg.scrape_period_s, self._scrape)
+        """Drive a workload to completion and return :meth:`summary`.
+
+        ``workload`` may be a list (every arrival scheduled up front,
+        the historical behavior) or any time-ordered iterator such as
+        :func:`~repro.core.sim.workloads.multi_round_qa` — iterators
+        are consumed lazily, one pending arrival at a time, so a
+        million-session trace never materializes in memory."""
+        self._last_arrival = 0.0
+        self._exhausted = False
+        if isinstance(workload, (list, tuple)):
+            for tr in workload:
+                self._ingest(tr)
+                self.loop.schedule(tr.arrival, self._make_dispatch(tr))
+            self._last_arrival = (workload[-1].arrival if workload
+                                  else 0.0)
+            self._exhausted = True
+        else:
+            self._feed(iter(workload))
+        # the scrape pump exists to feed the autoscaler's MetricStore
+        # and the telemetry->diagnosis path (chaos forces telemetry
+        # on); with neither consumer it's pure O(fleet x sim-seconds)
+        # overhead per run, so don't schedule it
+        if self.ccfg.autoscaler is not None or self.ccfg.telemetry:
+            self.loop.every(self.ccfg.scrape_period_s, self._scrape)
         if self.ccfg.chaos is not None:
             for ev in self.ccfg.chaos:
                 self.loop.schedule(ev.at, (lambda e=ev:
@@ -485,15 +530,48 @@ class ServingCluster:
                 self.rebalancer.cfg.period_s,
                 lambda: self.rebalancer.step(self.clock.now,
                                              self.pool_mgr))
-        end = workload[-1].arrival + drain_s if workload else drain_s
-
         def done() -> bool:
-            return self.clock.now > end or (
-                self.clock.now > (workload[-1].arrival if workload else 0)
-                and not any(e.has_work for e in self.engines.values()))
+            if not self._exhausted:
+                return False
+            if self.clock.now > self._last_arrival + drain_s:
+                return True
+            if self.clock.now <= self._last_arrival:
+                return False
+            if self._busy_engines > 0:
+                # some engine has an iteration pending: certainly not
+                # done, no need to touch the fleet (the hot path at
+                # million-session scale)
+                return False
+            return not any(e.has_work for e in self.engines.values())
 
+        # iterator workloads have no a-priori end time: the done()
+        # predicate (checked after every event) supplies the cap once
+        # the source runs dry
+        end = (self._last_arrival + drain_s
+               if isinstance(workload, (list, tuple)) else float("inf"))
         self.loop.run(until=end, stop_when=done)
         return self.summary()
+
+    def _ingest(self, tr: TimedRequest) -> None:
+        if self.ccfg.retain_requests:
+            self.all_requests.append(tr.request)
+
+    def _feed(self, it) -> None:
+        """Pull ONE workload item and schedule its dispatch; the next
+        pull rides on that dispatch event (arrivals are time-ordered,
+        so at most one undelivered arrival is ever in the heap)."""
+        tr = next(it, None)
+        if tr is None:
+            self._exhausted = True
+            return
+        self._ingest(tr)
+        self._last_arrival = tr.arrival
+        dispatch = self._make_dispatch(tr)
+
+        def fire():
+            dispatch()
+            self._feed(it)
+        self.loop.schedule(tr.arrival, fire)
 
     def _make_dispatch(self, tr: TimedRequest) -> Callable:
         def dispatch():
@@ -509,7 +587,8 @@ class ServingCluster:
                 tr.request.prompt_tokens, user=tr.request.user,
                 lora_adapter=tr.request.lora_adapter,
                 est_output_tokens=tr.request.sampling.max_new_tokens,
-                priority_class=tr.request.priority_class)
+                priority_class=tr.request.priority_class,
+                session_id=tr.request.session_id)
             if eid is None:
                 self.rejected += 1
                 return
@@ -517,12 +596,20 @@ class ServingCluster:
         return dispatch
 
     def summary(self) -> dict:
-        s = summarize(self.all_requests)
+        s = (self.stream_summary.summary()
+             if self.stream_summary is not None
+             else summarize(self.all_requests))
         s["rejected"] = self.rejected
+        s["sim_events"] = self.loop.events_fired
         # loud load shedding: surface the gateway's rate-limit drops in
         # every cluster summary so benches can't under-report load
         s["shed_requests"] = self.gateway.stats.shed
         s["routing_policy"] = self.ccfg.routing_policy
+        pol = self.gateway.policy
+        if getattr(pol, "name", "") == "session":
+            s["session_hits"] = pol.hits
+            s["session_misses"] = pol.misses
+            s["session_rehomed"] = pol.rehomed
         if self.kv_pool is not None:
             st = self.kv_pool.stats
             s["pool_hits"] = st.hits_local + st.hits_remote
@@ -534,8 +621,9 @@ class ServingCluster:
         s["prefix_hit_tokens"] = sum(m.prefix_hit_tokens for m in agg)
         s["remote_hit_tokens"] = sum(m.remote_hit_tokens for m in agg)
         s["preemptions"] = sum(m.preemptions for m in agg)
-        # tiered-KV pressure: host-tier hits, swap traffic, wire bytes
+        # tiered-KV pressure: host/SSD-tier hits, swap traffic, wire bytes
         s["host_hit_tokens"] = sum(m.host_hit_tokens for m in agg)
+        s["ssd_hit_tokens"] = sum(m.ssd_hit_tokens for m in agg)
         s["swap_out"] = sum(m.swap_out for m in agg)
         s["swap_in"] = sum(m.swap_in for m in agg)
         s["kv_bytes_offloaded"] = sum(m.kv_bytes_offloaded for m in agg)

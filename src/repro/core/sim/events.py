@@ -15,10 +15,16 @@ class SimClock:
 
 
 class EventLoop:
+    # process-wide fired-event counter across every EventLoop instance —
+    # benchmarks/run.py prints each suite's sim events/wall-second from
+    # the per-suite delta, the scalability headline of the event core
+    total_events: int = 0
+
     def __init__(self, clock: Optional[SimClock] = None):
         self.clock = clock or SimClock()
         self._heap: List[Tuple[float, int, Callable]] = []
         self._seq = itertools.count()
+        self.events_fired = 0
 
     def schedule(self, t: float, fn: Callable) -> None:
         heapq.heappush(self._heap, (max(t, self.clock.now),
@@ -43,6 +49,8 @@ class EventLoop:
                 heapq.heappush(self._heap, (t, next(self._seq), fn))
                 break
             self.clock.now = t
+            self.events_fired += 1
+            EventLoop.total_events += 1
             fn()
             if stop_when is not None and stop_when():
                 break

@@ -37,7 +37,8 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 from repro.core.kvcache.pool import DistributedKVPool, KVPoolError
-from repro.core.kvcache.tiers import HostPagePool, validate_wire_dtype
+from repro.core.kvcache.tiers import (HostPagePool, SSDPagePool,
+                                      validate_wire_dtype)
 from repro.core.optimizer.profiles import DEVICES, PerfModel
 from repro.core.runtime.sidecar import H2D_BW, TIER_BW
 from repro.core.sim.events import EventLoop
@@ -81,6 +82,13 @@ class SimEngineConfig:
     wire_dtype: str = "fp16"
     handoff_chunk_pages: int = 4
     swap_preemption: bool = True
+    # SSD third tier below host DRAM (0 disables): host evictions
+    # cascade into a write-behind SSD pool whose dirty queue drains at
+    # ``ssd_bw``; the page walk and swap resume read back at the same
+    # modelled bandwidth.  Idle-session prefixes survive host pressure
+    # here instead of falling to recompute.
+    ssd_cache_gb: float = 0.0
+    ssd_bw: float = 3.0e9
     # 0 => size the device page count from HBM minus params (default);
     # a positive override pins it (small-KV preemption benchmarks)
     num_pages: int = 0
@@ -180,6 +188,11 @@ class SimEngine:
         if self.sc.host_cache_gb > 0:
             self.host_pool = HostPagePool(
                 capacity_bytes=int(self.sc.host_cache_gb * (1 << 30)))
+        self.ssd_pool = None
+        if self.sc.ssd_cache_gb > 0 and self.host_pool is not None:
+            self.ssd_pool = SSDPagePool(
+                capacity_bytes=int(self.sc.ssd_cache_gb * (1 << 30)),
+                ssd_bw=self.sc.ssd_bw)
         self.sched = Scheduler(
             self.sc.scheduler_config(),
             PageAllocator(max(num_pages, 16), self.sc.page_size),
@@ -189,7 +202,8 @@ class SimEngine:
             host_pool=self.host_pool,
             page_payload=(lambda pid: True),    # sim: cost model only
             page_bytes=self._page_bytes,
-            adapter_ready=lambda name: name in self._adapters)
+            adapter_ready=lambda name: name in self._adapters,
+            ssd_pool=self.ssd_pool)
         if self.sched.drafter is not None:
             # sim tokens are synthetic zeros the n-gram matcher cannot
             # usefully continue; swap in the content-free drafter so
@@ -198,6 +212,10 @@ class SimEngine:
                 **vars(self.sched.drafter))
         self.slowdown_fn: Callable[[], float] = lambda: 1.0
         self._busy = False
+        # busy-transition hook: the cluster keeps a busy-engine COUNT
+        # from these edges so its per-event done() predicate is O(1)
+        # instead of scanning every engine's has_work
+        self.on_busy_changed: Optional[Callable[[bool], None]] = None
         # adapter tiering mirrored from the real ModelRunner: a bounded
         # HBM bank (name -> LRU tick; slot 0 is the base model, hence
         # max_adapters - 1 slots) cascading into a bounded host tier.
@@ -299,6 +317,12 @@ class SimEngine:
     def match_prefix_len(self, tokens) -> int:
         return self.sched.match_prefix_len(tokens)
 
+    @property
+    def queue_depth(self) -> int:
+        """Cheap routing-load accessor (== metrics() num_running +
+        num_waiting) — see SchedulerCore.queue_depth."""
+        return self.sched.queue_depth
+
     def healthy(self) -> bool:
         return self.alive and self.slowdown_fn() > 0.0
 
@@ -338,8 +362,14 @@ class SimEngine:
     # ---------------------------------------------------------- scheduling
     def _kick(self) -> None:
         if not self._busy and self.has_work:
-            self._busy = True
+            self._set_busy(True)
             self.loop.after(0.0, self._iterate)
+
+    def _set_busy(self, flag: bool) -> None:
+        if self._busy != flag:
+            self._busy = flag
+            if self.on_busy_changed is not None:
+                self.on_busy_changed(flag)
 
     def _install_page(self, pid: int, payload, req: Request,
                       now: float, source: str = "pool",
@@ -347,7 +377,8 @@ class SimEngine:
         """Payload hook for the shared Scheduler's page walk: the sim
         stores no arrays — each fetched page attributes a transfer-time
         cost to the request.  Host-tier pages move raw bytes at
-        ``dram_bw``; pool pages move wire bytes (int8-compressed when
+        ``dram_bw``; SSD-tier pages read back at the modelled
+        ``ssd_bw``; pool pages move wire bytes (int8-compressed when
         configured) at ``network_bw``.  Head-group pages charge
         ``_fetch_head_s`` (they gate the tail recompute); streamed
         groups charge ``_fetch_stream_s``, which ``_iterate`` overlaps
@@ -355,6 +386,8 @@ class SimEngine:
         nbytes = nbytes or self._page_bytes
         if source == "host":
             cost = nbytes / self.host_pool.dram_bw
+        elif source == "ssd":
+            cost = nbytes / self.ssd_pool.ssd_bw
         else:
             cost = nbytes / self.kv_pool.network_bw
         attr = "_fetch_stream_s" if stream else "_fetch_head_s"
@@ -372,7 +405,7 @@ class SimEngine:
         now = self.loop.clock.now
         slow = self.slowdown_fn()
         if not self.alive or slow <= 0.0:
-            self._busy = False        # dead engine: progress stops
+            self._set_busy(False)     # dead engine: progress stops
             return
         self._flush_deferred_unloads()
         out = self.sched.schedule(now)
@@ -384,7 +417,7 @@ class SimEngine:
                 # observed even though no submit will re-kick us
                 self.loop.after(0.1, self._iterate)
                 return
-            self._busy = False
+            self._set_busy(False)
             return
         batch = out.decode
         chunk_total = sum(w.chunk_len for w in out.prefills)

@@ -22,12 +22,25 @@ Statistically matched stand-ins for the paper's datasets:
     tags one of N adapters with zipf-distributed popularity (a few hot
     adapters, a long cold tail) — the adapter-tiering + LoRA-aware
     routing testbed (bench_lora).
+  * ``multi_round_qa`` — million-session multi-turn traffic: a LAZY
+    generator (the other workloads materialize lists — at 1M sessions
+    that alone would dominate memory) of zipf-deep sessions whose turns
+    are separated by lognormal think-times.  Every request carries its
+    ``session_id`` so the gateway's sticky session policy can pin the
+    conversation to the engine holding its KV prefix.
+
+``summarize`` reduces a finished-request list to the benchmark
+headline dict; :class:`StreamingSummary` is its streaming twin for
+runs too large to hold every Request — ``observe()`` each finish and
+drop the object, exact percentiles below a size threshold and
+log-histogram approximations (tolerance-pinned) above it.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -228,6 +241,87 @@ def lora_zipf(n_adapters: int, rate_rps: float, duration_s: float,
     return out
 
 
+def multi_round_qa(n_sessions: int, session_rate_rps: float,
+                   seed: int = 0, rounds_max: int = 8,
+                   zipf_s: float = 1.3, think_time_s: float = 20.0,
+                   sys_prompt: int = 64, turn_tokens: int = 48,
+                   output_tokens: int = 32,
+                   stats: Optional[dict] = None
+                   ) -> Iterator[TimedRequest]:
+    """Million-session multi-round QA: a lazy, time-ordered generator.
+
+    New sessions open as a Poisson stream at ``session_rate_rps``; each
+    runs ``1 + min(zipf(zipf_s), rounds_max - 1)`` rounds (a few deep
+    power-user conversations, a long tail of one-shots) separated by
+    lognormal think-times around ``think_time_s``.  Turn *r*'s prompt
+    is the whole conversation so far — system prompt, every earlier
+    turn and reply, plus the new turn — so consecutive rounds share a
+    growing prefix and routing the session back to the same engine
+    converts that prefix into cache hits.
+
+    Memory discipline (this trace runs at ~1M sessions): per-session
+    token history is NOT stored.  A session's token stream is
+    regenerated deterministically from ``(seed, session index)`` at
+    every emission — a counter-mix over the token index, NOT a
+    Generator construction per emit, which would dominate the whole
+    simulator's per-request cost — so the generator's live state is
+    one heap entry per session with a pending round: O(concurrent
+    sessions), not O(total tokens).  Every request carries
+    ``session_id``/``user``.
+
+    ``stats`` (optional dict) is updated in place with
+    ``open_sessions`` (sessions currently between rounds — the live
+    heap size) and ``peak_open_sessions``, so million-session benches
+    can report concurrency without a second pass over the trace.
+    """
+    rng = np.random.default_rng(seed)
+    mu = math.log(max(think_time_s, 1e-3)) - 0.32    # lognormal mean fix
+    per_round = turn_tokens + output_tokens
+
+    def _emit(sid: int, rnd: int, t: float) -> TimedRequest:
+        n = sys_prompt + rnd * per_round + turn_tokens
+        # deterministic per-(seed, session, index) token stream: the
+        # tokens only need to be stable and session-unique (they are
+        # cache keys, not text), so a 64-bit mix beats an rng here
+        idx = np.arange(n, dtype=np.uint64)
+        salt = ((seed * 0x5851F42D + sid) * 0x9E3779B97F4A7C15) \
+            & (2**64 - 1)
+        x = idx + np.uint64(salt)
+        x ^= x >> np.uint64(30)
+        x *= np.uint64(0xBF58476D1CE4E5B9)
+        x ^= x >> np.uint64(27)
+        prompt = (x % np.uint64(VOCAB)).astype(np.int64).tolist()
+        req = Request(prompt_tokens=prompt,
+                      sampling=SamplingParams(
+                          max_new_tokens=output_tokens),
+                      arrival_time=t, session_id=f"s{sid}",
+                      user=f"s{sid}")
+        return TimedRequest(t, req)
+
+    heap: list = []         # (next_arrival, sid, round, total_rounds)
+    started = 0
+    next_start = rng.exponential(1.0 / session_rate_rps)
+    while started < n_sessions or heap:
+        if started < n_sessions and (not heap
+                                     or next_start <= heap[0][0]):
+            sid, t, rnd = started, next_start, 0
+            nrounds = 1 + min(int(rng.zipf(zipf_s)), rounds_max - 1) \
+                if rounds_max > 1 else 1
+            started += 1
+            next_start += rng.exponential(1.0 / session_rate_rps)
+        else:
+            t, sid, rnd, nrounds = heapq.heappop(heap)
+        yield _emit(sid, rnd, t)
+        if rnd + 1 < nrounds:
+            heapq.heappush(
+                heap, (t + rng.lognormal(mu, 0.8), sid, rnd + 1,
+                       nrounds))
+        if stats is not None:
+            stats["open_sessions"] = len(heap)
+            stats["peak_open_sessions"] = max(
+                stats.get("peak_open_sessions", 0), len(heap))
+
+
 # ------------------------------------------------------------------ summary
 def percentile(vals: List[float], p: float) -> float:
     if not vals:
@@ -261,3 +355,138 @@ def summarize(requests: List[Request], span_s: Optional[float] = None
         "latency_p99_s": percentile([r.total_latency for r in done], 99),
         "completion_time_s": span,
     }
+
+
+class StreamingDist:
+    """Bounded streaming distribution: exact values (np.percentile
+    parity) up to ``exact_max`` samples, then a one-time conversion to
+    a fixed log-spaced histogram over [lo, hi].  Histogram percentiles
+    carry a relative error bounded by one bin's width —
+    ``(hi/lo)**(1/bins) - 1`` (~1.3% at the defaults), pinned by
+    tests/test_sessions.py — while memory stays O(bins) no matter how
+    many samples stream in."""
+
+    def __init__(self, exact_max: int = 100_000, bins: int = 2048,
+                 lo: float = 1e-6, hi: float = 1e5):
+        self.exact_max = exact_max
+        self.bins = bins
+        self._log_lo = math.log(lo)
+        self._scale = bins / (math.log(hi) - self._log_lo)
+        self._lo, self._hi = lo, hi
+        self._vals: Optional[List[float]] = []
+        self._hist: Optional[np.ndarray] = None
+        self.count = 0
+        self.total = 0.0
+
+    @property
+    def rel_tolerance(self) -> float:
+        """Worst-case relative percentile error once histogrammed."""
+        return (self._hi / self._lo) ** (1.0 / self.bins) - 1.0
+
+    def _bin(self, v: float) -> int:
+        v = min(max(v, self._lo), self._hi)
+        return min(int((math.log(v) - self._log_lo) * self._scale),
+                   self.bins - 1)
+
+    def _to_hist(self) -> None:
+        self._hist = np.zeros(self.bins, dtype=np.int64)
+        for v in self._vals:
+            self._hist[self._bin(v)] += 1
+        self._vals = None
+
+    def add(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if self._hist is None:
+            self._vals.append(v)
+            if len(self._vals) > self.exact_max:
+                self._to_hist()
+        else:
+            self._hist[self._bin(v)] += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, p: float) -> float:
+        if not self.count:
+            return 0.0
+        if self._hist is None:
+            return percentile(self._vals, p)
+        target = (p / 100.0) * (self.count - 1)
+        cum = np.cumsum(self._hist)
+        i = int(np.searchsorted(cum, target + 1))
+        i = min(i, self.bins - 1)
+        # geometric bin midpoint (log-spaced edges)
+        lo_e = math.exp(self._log_lo + i / self._scale)
+        hi_e = math.exp(self._log_lo + (i + 1) / self._scale)
+        return math.sqrt(lo_e * hi_e)
+
+
+class StreamingSummary:
+    """Streaming twin of :func:`summarize`: ``observe(req)`` extracts
+    each finished request's metrics and lets the object go, so a 1M-
+    request run keeps O(exact_max + bins) state instead of every
+    Request.  Wire it as ``SchedulerCore.finish_sink`` (what
+    ``ClusterConfig.retain_requests=False`` does) and read
+    ``summary()`` — same keys as ``summarize`` plus attainment rows
+    when ``ttft_slo_s`` targets are given."""
+
+    def __init__(self, exact_max: int = 100_000,
+                 ttft_slo_s: Optional[Dict[str, float]] = None):
+        self.ttft_ms = StreamingDist(exact_max)
+        self.itl_ms = StreamingDist(exact_max)
+        self.latency_s = StreamingDist(exact_max)
+        self.finished = 0
+        self.prompt_tokens = 0
+        self.decode_tokens = 0
+        self.t0 = float("inf")
+        self.t1 = 0.0
+        self.ttft_slo_s = ttft_slo_s or {}
+        self.slo_seen = 0
+        self.slo_ok = 0
+
+    def observe(self, req: Request) -> None:
+        if req.finish_time <= 0:
+            return
+        self.finished += 1
+        self.prompt_tokens += req.prompt_len
+        self.decode_tokens += len(req.output_tokens)
+        self.t0 = min(self.t0, req.arrival_time)
+        self.t1 = max(self.t1, req.finish_time)
+        ttft = req.ttft
+        self.ttft_ms.add(ttft * 1000)
+        for gap in req.itl:
+            self.itl_ms.add(gap * 1000)
+        self.latency_s.add(req.total_latency)
+        target = self.ttft_slo_s.get(req.priority_class)
+        if target is not None:
+            self.slo_seen += 1
+            self.slo_ok += int(ttft <= target)
+
+    @property
+    def ttft_attainment(self) -> float:
+        return self.slo_ok / self.slo_seen if self.slo_seen else 1.0
+
+    def summary(self, span_s: Optional[float] = None) -> dict:
+        if not self.finished:
+            return {"finished": 0}
+        span = span_s or max(self.t1 - self.t0, 1e-9)
+        out = {
+            "finished": self.finished,
+            "prompt_tokens": self.prompt_tokens,
+            "decode_tokens": self.decode_tokens,
+            "total_tput_tok_s": (self.prompt_tokens
+                                 + self.decode_tokens) / span,
+            "decode_tput_tok_s": self.decode_tokens / span,
+            "ttft_avg_ms": self.ttft_ms.mean,
+            "ttft_p99_ms": self.ttft_ms.percentile(99),
+            "itl_avg_ms": self.itl_ms.mean,
+            "itl_p99_ms": self.itl_ms.percentile(99),
+            "latency_avg_s": self.latency_s.mean,
+            "latency_p99_s": self.latency_s.percentile(99),
+            "completion_time_s": span,
+        }
+        if self.slo_seen:
+            out["ttft_attainment"] = self.ttft_attainment
+        return out

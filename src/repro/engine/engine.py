@@ -37,12 +37,14 @@ consult the pool by block hash; newly filled pages are published back.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 from repro.core.kvcache.tiers import (CompressedPage, HostPagePool,
-                                      compress_page, decompress_page,
+                                      SSDPagePool, compress_page,
+                                      decompress_page,
                                       validate_wire_dtype)
 from repro.engine import paged_model as PM
 from repro.engine.page_table import PageAllocator, chunk_hashes
@@ -89,6 +91,13 @@ class EngineConfig:
     # host-DRAM tier capacity; 0 disables the tier (no eviction
     # cascade, drop-and-recompute preemption — the pre-tier engine)
     host_cache_gb: float = 0.0
+    # SSD third tier below host DRAM; 0 disables.  Host-tier evictions
+    # cascade into it via asynchronous write-behind (a daemon thread
+    # pickling payloads under ``ssd_dir``), and the admission walk /
+    # swap resume consult it after host, before the distributed pool.
+    # Payloads are never quantized — SSD resume is byte-identical.
+    ssd_cache_gb: float = 0.0
+    ssd_dir: Optional[str] = None   # None => a per-engine temp dir
     # wire format for distributed-pool page payloads: "fp" publishes
     # the raw arrays (byte-exact), "int8" quantizes with per-layer
     # scales (≈4x fewer handoff bytes, parity within
@@ -178,6 +187,16 @@ class InferenceEngine:
         if ecfg.host_cache_gb > 0:
             self.host_pool = HostPagePool(
                 capacity_bytes=int(ecfg.host_cache_gb * (1 << 30)))
+        # SSD third tier (write-behind, file-backed): host evictions
+        # cascade here so idle-session prefixes and parked swap entries
+        # survive host pressure and resume byte-identically
+        self.ssd_pool = None
+        if ecfg.ssd_cache_gb > 0 and self.host_pool is not None:
+            ssd_dir = ecfg.ssd_dir or tempfile.mkdtemp(
+                prefix=f"kv-ssd-{engine_id}-")
+            self.ssd_pool = SSDPagePool(
+                capacity_bytes=int(ecfg.ssd_cache_gb * (1 << 30)),
+                directory=ssd_dir)
         self.sched = Scheduler(
             ecfg.scheduler_config(),
             PageAllocator(ecfg.num_pages, ecfg.page_size),
@@ -187,7 +206,8 @@ class InferenceEngine:
             host_pool=self.host_pool,
             page_payload=self.runner.page_payload,
             page_bytes=self.runner.page_bytes,
-            adapter_ready=lambda name: name in self.runner.adapter_ids)
+            adapter_ready=lambda name: name in self.runner.adapter_ids,
+            ssd_pool=self.ssd_pool)
         # unloads requested while the adapter still serves an in-flight
         # batch are deferred (applied at the next step() once the last
         # user drains) — the control plane must never disturb a batch
@@ -528,3 +548,9 @@ class InferenceEngine:
     def match_prefix_len(self, tokens) -> int:
         """Prefix-cache coverage for router scoring (non-mutating)."""
         return self.sched.match_prefix_len(tokens)
+
+    @property
+    def queue_depth(self) -> int:
+        """Cheap routing-load accessor (== metrics() num_running +
+        num_waiting) — see SchedulerCore.queue_depth."""
+        return self.sched.queue_depth

@@ -44,6 +44,10 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     lora_adapter: Optional[str] = None
     user: str = "default"
+    # multi-turn conversation id: the gateway's session routing policy
+    # pins every turn of a session to the engine holding its KV prefix
+    # (None => single-shot request, routed by the configured policy)
+    session_id: Optional[str] = None
     arrival_time: float = 0.0
     # SLO priority class (scheduler.DEFAULT_SLO_CLASSES keys):
     # interactive | standard | batch — picks the TTFT/ITL targets the

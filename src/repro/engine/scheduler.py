@@ -183,6 +183,7 @@ class EngineMetrics:
     # tiered-KV transfer accounting (host tier + pool wire): tier
     # pressure signals for the rebalancer and dashboards
     host_hit_tokens: int = 0        # admission tokens served from host tier
+    ssd_hit_tokens: int = 0         # tokens served from the SSD tier
     kv_bytes_offloaded: int = 0     # device -> host (cascade + swap-out)
     kv_bytes_fetched: int = 0       # host/pool -> device (walk + swap-in)
     swap_out: int = 0               # preemptions that swapped (not dropped)
@@ -321,6 +322,11 @@ class SchedulerCore:
         self.slo_classes = slo_classes or default_slo_classes()
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
+        # million-request runs: when set, finished requests stream into
+        # this callable (e.g. a StreamingSummary observer) instead of
+        # accumulating in ``finished`` — stats without holding every
+        # Request object for the whole run
+        self.finish_sink: Optional[Callable[[Request], None]] = None
         self._m = dict(admitted=0, finished=0, preemptions=0,
                        prefix_hit_tokens=0, remote_hit_tokens=0)
         self._lat_ewma = 0.0
@@ -358,7 +364,10 @@ class SchedulerCore:
     def note_finished(self, req: Request, now: float) -> None:
         req.finish_time = now
         req.state = RequestState.FINISHED
-        self.finished.append(req)
+        if self.finish_sink is not None:
+            self.finish_sink(req)
+        else:
+            self.finished.append(req)
         self._m["finished"] += 1
         self._lat_ewma = (0.9 * self._lat_ewma + 0.1 * req.total_latency
                           if self._lat_ewma else req.total_latency)
@@ -503,7 +512,8 @@ class Scheduler(SchedulerCore):
                  publish_page: Optional[Callable] = None,
                  host_pool=None, page_payload: Optional[Callable] = None,
                  page_bytes: int = 0,
-                 adapter_ready: Optional[Callable[[str], bool]] = None):
+                 adapter_ready: Optional[Callable[[str], bool]] = None,
+                 ssd_pool=None):
         super().__init__(honor_stop_token=scfg.honor_stop_token,
                          slo_classes=scfg.slo_classes)
         if scfg.role not in self.ROLES:
@@ -522,9 +532,14 @@ class Scheduler(SchedulerCore):
         # record); ``page_bytes`` is the raw per-page payload size the
         # transfer counters and capacity checks use.
         self.host_pool = host_pool
+        # SSD third tier below host DRAM: host-tier capacity evictions
+        # cascade into it (write-behind), and the admission walk/swap
+        # resume consult it after host, before the distributed pool
+        self.ssd_pool = ssd_pool
         self.page_payload = page_payload
         self.page_bytes = int(page_bytes)
-        self._m.update(host_hit_tokens=0, kv_bytes_offloaded=0,
+        self._m.update(host_hit_tokens=0, ssd_hit_tokens=0,
+                       kv_bytes_offloaded=0,
                        kv_bytes_fetched=0, swap_out=0, swap_in=0,
                        kv_fetch_failures=0, wasted_tokens=0, ckpt_pages=0,
                        crash_resumes=0, spec_drafted_tokens=0,
@@ -554,6 +569,10 @@ class Scheduler(SchedulerCore):
             # eviction cascade: device-cache victims fall into the host
             # tier (same block hashes) instead of being dropped
             alloc.on_evict = self._cascade_evict
+            if ssd_pool is not None:
+                # ...and host-tier victims fall one more level, into
+                # the SSD write-behind tier, instead of being dropped
+                host_pool.on_evict = self._host_evict
         self.prefills: List[Request] = []      # concurrent PREFILLING
         self.running: List[Request] = []
         # P/D handoff: host-provided delivery callable (a decode engine's
@@ -757,11 +776,11 @@ class Scheduler(SchedulerCore):
                    ) -> Tuple[List[int], int, List[tuple]]:
         """Extend a local prefix hit with pages from the lower tiers:
         walk the prompt's block hashes past the locally covered prefix,
-        checking host DRAM before the distributed pool (device -> host
-        -> distributed is the admission order) and allocating a local
-        page per hit.  The tail block is never fetched (prefill must
-        produce at least one new token), and the walk stops at the
-        first miss in BOTH tiers.
+        checking host DRAM, then the SSD tier, then the distributed
+        pool (device -> host -> SSD -> distributed is the admission
+        order) and allocating a local page per hit.  The tail block is
+        never fetched (prefill must produce at least one new token),
+        and the walk stops at the first miss in EVERY tier.
 
         Payload installation and hash registration are DEFERRED — the
         (page, hash, payload, source) tuples are returned for the
@@ -777,16 +796,7 @@ class Scheduler(SchedulerCore):
         for i in range(have_tokens // ps, len(hashes)):
             if (i + 1) * ps >= req.prompt_len:
                 break
-            payload, source, nbytes = None, "host", self.page_bytes
-            if self.host_pool is not None:
-                payload = self.host_pool.get(hashes[i], now)
-            if payload is None and self.kv_pool is not None:
-                payload = self._pool_fetch(hashes[i], now)
-                # stored wire size, NOT the raw page: int8-compressed
-                # payloads move (and are charged as) fewer bytes
-                nbytes = (self.kv_pool.size_of(hashes[i])
-                          or self.page_bytes)
-                source = "pool"
+            payload, source, nbytes = self._tier_fetch(hashes[i], now)
             if payload is None:
                 break
             pids = self.alloc.allocate(1, now)
@@ -797,6 +807,27 @@ class Scheduler(SchedulerCore):
             pages.append(pids[0])
             tokens += ps
         return pages, tokens, fetched
+
+    def _tier_fetch(self, block_hash: str, now: float) -> Tuple:
+        """One block's tier walk below the device: host DRAM, then the
+        SSD write-behind tier, then the distributed pool.  Returns
+        ``(payload, source, nbytes)`` with ``payload=None`` on a miss
+        in every tier."""
+        payload, source, nbytes = None, "host", self.page_bytes
+        if self.host_pool is not None:
+            payload = self.host_pool.get(block_hash, now)
+        if payload is None and self.ssd_pool is not None:
+            payload = self.ssd_pool.get(block_hash, now)
+            if payload is not None:
+                source = "ssd"
+        if payload is None and self.kv_pool is not None:
+            payload = self._pool_fetch(block_hash, now)
+            # stored wire size, NOT the raw page: int8-compressed
+            # payloads move (and are charged as) fewer bytes
+            nbytes = (self.kv_pool.size_of(block_hash)
+                      or self.page_bytes)
+            source = "pool"
+        return payload, source, nbytes
 
     def _admit_continuation(self, req: Request, now: float):
         """Admit a crash-rewound decode victim by restoring its
@@ -819,14 +850,7 @@ class Scheduler(SchedulerCore):
         pages: List[int] = []
         missing = False
         for i in range(npages):
-            payload, source, nbytes = None, "host", self.page_bytes
-            if self.host_pool is not None:
-                payload = self.host_pool.get(hashes[i], now)
-            if payload is None and self.kv_pool is not None:
-                payload = self._pool_fetch(hashes[i], now)
-                nbytes = (self.kv_pool.size_of(hashes[i])
-                          or self.page_bytes)
-                source = "pool"
+            payload, source, nbytes = self._tier_fetch(hashes[i], now)
             if payload is None:
                 missing = True
                 break
@@ -925,6 +949,8 @@ class Scheduler(SchedulerCore):
                 self.alloc.register_hash(pid, h)
             if source == "pool":
                 self._m["remote_hit_tokens"] += ps
+            elif source == "ssd":
+                self._m["ssd_hit_tokens"] += ps
             else:
                 self._m["host_hit_tokens"] += ps
             self._m["kv_bytes_fetched"] += nbytes
@@ -939,6 +965,16 @@ class Scheduler(SchedulerCore):
         if self.host_pool.put(block_hash, self.page_payload(pid),
                               self.page_bytes, now):
             self._m["kv_bytes_offloaded"] += self.page_bytes
+
+    def _host_evict(self, key: str, payload, nbytes: int,
+                    now: float) -> None:
+        """HostPagePool eviction hook: a host-tier victim (cache page
+        OR parked swap entry) falls into the SSD write-behind tier
+        instead of dropping — idle-session prefixes survive host
+        pressure and resume from SSD."""
+        if self.ssd_pool.contains(key):
+            return
+        self.ssd_pool.put(key, payload, nbytes, now)
 
     # ------------------------------------------------------- schedule
     def schedule(self, now: float) -> ScheduleOutput:
@@ -1336,16 +1372,22 @@ class Scheduler(SchedulerCore):
 
     def _drop_swap(self, req: Request) -> None:
         for i in range(getattr(req, "_swap_pages", 0)):
-            self.host_pool.discard(self._swap_key(req, i))
+            key = self._swap_key(req, i)
+            self.host_pool.discard(key)
+            if self.ssd_pool is not None:
+                self.ssd_pool.discard(key)
         req._swap_pages = 0                 # type: ignore[attr-defined]
 
     def _try_resume(self, now: float) -> None:
         """Swap SWAPPED requests back in (preemption order — they sit
         at the front of ``waiting``): re-allocate their pages, install
         the parked payloads and rejoin the decode batch mid-sequence.
-        A request whose swap entries the bounded tier already evicted
-        falls back to recompute admission (still byte-identical under
-        greedy decoding — just slower)."""
+        Swap entries the host tier evicted under pressure are looked up
+        in the SSD tier below it (host evictions cascade there), so an
+        idle session's resume stays a transfer, not a recompute.  Only
+        when an entry is gone from BOTH tiers does the request fall
+        back to recompute admission (still byte-identical under greedy
+        decoding — just slower)."""
         if self.host_pool is None:
             return
         for req in [r for r in self.waiting
@@ -1354,8 +1396,16 @@ class Scheduler(SchedulerCore):
                     >= self.scfg.max_batch):
                 break
             need = getattr(req, "_swap_pages", 0)
-            entries = [self.host_pool.get(self._swap_key(req, i), now)
-                       for i in range(need)]
+            entries, sources = [], []
+            for i in range(need):
+                key = self._swap_key(req, i)
+                payload = self.host_pool.get(key, now)
+                source = "host"
+                if payload is None and self.ssd_pool is not None:
+                    payload = self.ssd_pool.get(key, now)
+                    source = "ssd"
+                entries.append(payload)
+                sources.append(source)
             if not need or any(e is None for e in entries):
                 self._drop_swap(req)
                 self._reset_recompute(req)   # stays queued; try_admit
@@ -1363,13 +1413,19 @@ class Scheduler(SchedulerCore):
             fresh = self.alloc.allocate(need, now)
             if fresh is None:
                 continue        # no memory yet — stay swapped
-            for i, (pid, payload) in enumerate(zip(fresh, entries)):
+            for i, (pid, payload, source) in enumerate(
+                    zip(fresh, entries, sources)):
                 if self.install_page is not None:
                     self.install_page(
-                        pid, payload, req, now, source="host",
+                        pid, payload, req, now, source=source,
                         stream=False,
                         nbytes=payload_nbytes(payload, self.page_bytes))
-                self.host_pool.discard(self._swap_key(req, i))
+                if source == "ssd":
+                    self._m["ssd_hit_tokens"] += self.scfg.page_size
+                key = self._swap_key(req, i)
+                self.host_pool.discard(key)
+                if self.ssd_pool is not None:
+                    self.ssd_pool.discard(key)
             req._swap_pages = 0             # type: ignore[attr-defined]
             req.page_ids = fresh
             req.state = RequestState.RUNNING
@@ -1485,6 +1541,16 @@ class Scheduler(SchedulerCore):
         """Prefix-cache coverage for router scoring (non-mutating)."""
         return self.alloc.match_len(tokens)
 
+    @property
+    def queue_depth(self) -> int:
+        """Admitted-but-unfinished load, equal to the metrics()
+        num_running + num_waiting sum — a cheap accessor so routing
+        policies scoring load per request don't pay for a full
+        EngineMetrics build (windowed throughput, SLO stats) per
+        engine per route."""
+        return (len(self.running) + len(self.prefills)
+                + len(self.waiting))
+
     def metrics(self, now: float,
                 loaded_adapters: tuple = ()) -> EngineMetrics:
         return EngineMetrics(
@@ -1506,6 +1572,7 @@ class Scheduler(SchedulerCore):
             slo_by_class=self.slo_class_stats(now),
             slo_itl_attainment=self.slo_itl_attainment(now),
             host_hit_tokens=self._m["host_hit_tokens"],
+            ssd_hit_tokens=self._m["ssd_hit_tokens"],
             kv_bytes_offloaded=self._m["kv_bytes_offloaded"],
             kv_bytes_fetched=self._m["kv_bytes_fetched"],
             swap_out=self._m["swap_out"],

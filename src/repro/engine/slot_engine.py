@@ -79,6 +79,13 @@ class SlotEngine:
     def match_prefix_len(self, tokens) -> int:
         return 0                     # no token-addressable KV (SSM note)
 
+    @property
+    def queue_depth(self) -> int:
+        """Cheap routing-load accessor (== metrics() num_running +
+        num_waiting)."""
+        return (sum(r is not None for r in self.slots)
+                + len(self.core.waiting))
+
     def register_adapter(self, name, weights=None):   # parity no-op
         pass
 

@@ -154,6 +154,11 @@ def main() -> None:
                     help="host-DRAM KV tier per engine (GB): device "
                          "evictions cascade into it and preemption "
                          "swaps instead of recomputing; 0 disables")
+    ap.add_argument("--ssd-cache-gb", type=float, default=0.0,
+                    help="file-backed SSD KV tier per engine (GB) below "
+                         "the host tier: host evictions write behind to "
+                         "SSD and prefix walks fall device -> host -> "
+                         "SSD before recompute; 0 disables")
     ap.add_argument("--wire-dtype", default="int8",
                     choices=("fp", "int8"),
                     help="pool-handoff wire format: 'int8' quantizes "
@@ -225,6 +230,7 @@ def main() -> None:
         # loudly: the wire is lossy (parity within the pinned
         # tolerance), pass --wire-dtype fp for byte-exact handoffs
         print(f"kv tiers: host_cache={args.host_cache_gb}GB/engine, "
+              f"ssd_cache={args.ssd_cache_gb}GB/engine, "
               f"pool wire={args.wire_dtype}"
               + (" (quantized; --wire-dtype fp for byte-exact)"
                  if args.wire_dtype == "int8" else ""))
@@ -234,6 +240,7 @@ def main() -> None:
         cfg, roles, clock,
         ecfg_kw=dict(slo_aware=args.slo,
                      host_cache_gb=args.host_cache_gb,
+                     ssd_cache_gb=args.ssd_cache_gb,
                      wire_dtype=args.wire_dtype,
                      ckpt_interval_tokens=args.ckpt_interval,
                      spec_tokens=args.spec_tokens,
@@ -348,6 +355,7 @@ def main() -> None:
               f"prefix_hit_tokens={m.prefix_hit_tokens} "
               f"remote_hit_tokens={m.remote_hit_tokens} "
               f"host_hit_tokens={m.host_hit_tokens} "
+              f"ssd_hit_tokens={m.ssd_hit_tokens} "
               f"kv_util={m.kv_utilization:.2f}")
         if m.swap_out or m.kv_bytes_offloaded:
             print(f"    tiers: swap_out={m.swap_out} swap_in={m.swap_in}"

@@ -1,0 +1,345 @@
+"""Million-session serving: sticky session routing, the SSD KV
+write-behind tier, and the streaming run plumbing.
+
+The load-bearing pins are the real-JAX byte-identity ones: a swap
+victim whose pages were pushed OUT of the host tier into the SSD tier
+must resume decoding byte-identically to a never-preempted run, and a
+prefix re-offered after cascading device -> host -> SSD must be served
+from the SSD tier with the same outputs as a cold recompute."""
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.core.gateway.gateway import Gateway, RateLimit
+from repro.core.gateway.router import SessionAffinityPolicy
+from repro.core.kvcache.tiers import SSDPagePool
+from repro.core.sim import ClusterConfig, ServingCluster, SimEngineConfig
+from repro.core.sim.workloads import (StreamingDist, StreamingSummary,
+                                      multi_round_qa, percentile,
+                                      summarize)
+from repro.engine import (EngineConfig, InferenceEngine, Request,
+                          RequestState, SamplingParams)
+
+ENGINE_KW = dict(page_size=8, num_pages=64, max_batch=4,
+                 max_pages_per_seq=16, chunk_size=16)
+
+
+class _FakeEngine:
+    def __init__(self, depth=0, cov=0):
+        self.queue_depth = depth
+        self._cov = cov
+
+    def match_prefix_len(self, tokens):
+        return min(self._cov, len(tokens))
+
+
+# --------------------------------------------------------- policy unit
+def test_session_policy_sticky_then_rehomes_on_retire():
+    pol = SessionAffinityPolicy()
+    engines = {"a": _FakeEngine(depth=5), "b": _FakeEngine(depth=0)}
+    toks = list(range(32))
+    first = pol.select(engines, toks, session_id="s1")
+    assert first == "b"                      # fallback: emptier engine
+    # sticky even when the pinned engine becomes the busier one
+    engines["b"].queue_depth = 50
+    for _ in range(5):
+        assert pol.select(engines, toks, session_id="s1") == "b"
+    assert pol.hits == 5 and pol.misses == 1
+    # engine retires: the stale pin re-homes through the fallback
+    del engines["b"]
+    assert pol.select(engines, toks, session_id="s1") == "a"
+    assert pol.rehomed == 1
+    assert pol.select(engines, toks, session_id="s1") == "a"  # re-pinned
+    # forget() purges every session pinned to a retired engine
+    pol.select(engines, toks, session_id="s2")
+    pol.forget("a")
+    assert len(pol._sessions) == 0
+
+
+def test_session_policy_ttl_and_lru_bounds():
+    now = [0.0]
+    pol = SessionAffinityPolicy(max_sessions=3, ttl_s=10.0)
+    pol.attach_clock(lambda: now[0])
+    engines = {"a": _FakeEngine(), "b": _FakeEngine()}
+    pol.select(engines, [1], session_id="s1")
+    now[0] = 11.0                            # past TTL: stale pin dies
+    pol.select(engines, [1], session_id="s1")
+    assert pol.rehomed == 1
+    # LRU bound: the table never exceeds max_sessions
+    for i in range(10):
+        pol.select(engines, [1], session_id=f"t{i}")
+    assert len(pol._sessions) == 3
+    # requests without a session flow through untouched
+    assert pol.select(engines, [1], session_id=None) in engines
+    assert len(pol._sessions) == 3
+
+
+def test_routable_view_cache_tracks_direct_cordon_clear():
+    """The cached routable view must refresh on ``cordoned.clear()``
+    (the gateway-restart path mutates the set directly)."""
+    gw = Gateway(policy="least-request",
+                 default_limit=RateLimit(rpm=1e9, tpm=1e12))
+    gw.register_engine("e0", _FakeEngine())
+    gw.register_engine("e1", _FakeEngine())
+    assert set(gw.routable_engines()) == {"e0", "e1"}
+    gw.cordon("e0")
+    assert set(gw.routable_engines()) == {"e1"}
+    gw.cordoned.clear()                      # direct mutation
+    assert set(gw.routable_engines()) == {"e0", "e1"}
+    # and the cached view is id-ordered for policy determinism
+    assert list(gw.routable_engines()) == ["e0", "e1"]
+
+
+# ------------------------------------------------------- cluster churn
+def _session_cluster(**ccfg_kw):
+    kw = dict(routing_policy="session", num_engines=4,
+              engine=SimEngineConfig(device_type="a10", max_batch=16,
+                                     chunk_size=512,
+                                     mixed_batching=True),
+              retain_requests=False, ttft_slo_s={"standard": 2.0})
+    kw.update(ccfg_kw)
+    return ServingCluster(get_config("deepseek-coder-7b"),
+                          ClusterConfig(**kw))
+
+
+def test_cluster_session_stickiness_survives_retire_and_restart():
+    """Mid-trace an engine retires gracefully AND the gateway restarts
+    (wiping the session table): every request still finishes (zero
+    lost), stickiness resumes, and re-homed turns go through the
+    prefix-affinity fallback instead of erroring."""
+    cl = _session_cluster()
+    wl = list(multi_round_qa(60, 8.0, seed=5, rounds_max=5,
+                             think_time_s=3.0, sys_prompt=64,
+                             turn_tokens=32, output_tokens=8))
+    cl.loop.after(4.0, cl._retire_engine)
+    cl.loop.after(8.0, lambda: cl._gateway_restart(0.5))
+    s = cl.run(wl, drain_s=300.0)
+    assert s["finished"] + s["rejected"] == len(wl)   # zero lost
+    assert s["rejected"] == 0
+    assert cl.gw_restarts == 1
+    assert s["session_hits"] > 0
+    assert cl.active_replicas == 3                    # retire stuck
+    # the post-restart policy is a fresh session table, still routing
+    assert cl.gateway.policy.name == "session"
+
+
+def test_cluster_streaming_summary_and_busy_count_paths():
+    """retain_requests=False: no Request accumulates anywhere, the
+    summary comes from the StreamingSummary, and the busy-count done()
+    predicate drains the run to the same finished count as the
+    retained path."""
+    wl = list(multi_round_qa(40, 10.0, seed=9, rounds_max=4,
+                             think_time_s=2.0, sys_prompt=48,
+                             turn_tokens=24, output_tokens=8))
+    cl_ret = _session_cluster(retain_requests=True)
+    s_ret = cl_ret.run(list(wl), drain_s=300.0)
+    cl_str = _session_cluster()
+    s_str = cl_str.run(list(wl), drain_s=300.0)
+    assert s_str["finished"] == s_ret["finished"] == len(wl)
+    assert cl_str.all_requests == []
+    assert all(len(e.sched.finished) == 0
+               for e in cl_str.engines.values())
+    assert s_str["ttft_attainment"] > 0
+    assert abs(s_str["ttft_avg_ms"] - s_ret["ttft_avg_ms"]) < 1e-6
+    assert cl_str._busy_engines == 0                 # balanced edges
+
+
+# ------------------------------------------------------- SSD pool unit
+def test_ssd_pool_write_behind_and_bounds():
+    pool = SSDPagePool(capacity_bytes=256, ssd_bw=64.0,
+                       write_buffer_bytes=128)
+    assert pool.put("k0", "p0", 64, now=0.0)         # ready at t=1.0
+    assert pool.get("k0", now=0.5) == "p0"           # dirty-buffer hit
+    assert pool.stats.hits == 1
+    # dirty buffer full: further puts are DROPPED (it's a cache)
+    assert pool.put("k1", "p1", 64, now=0.0)
+    assert not pool.put("k2", "p2", 64, now=0.0)
+    assert pool.stats.dropped_puts == 1
+    # the modelled serial writer drains at ssd_bw: k0 at 1s, k1 at 2s
+    assert pool.get("k0", now=1.5) == "p0"           # durable now
+    assert pool.put("k2", "p2", 64, now=1.5)         # buffer freed
+    assert pool.get("k9", now=2.0) is None
+    assert pool.stats.misses == 1
+    # LRU bound on the durable store
+    for i in range(3, 9):
+        assert pool.put(f"k{i}", f"p{i}", 64, now=10.0 + i)
+    pool.drain()
+    assert len(pool) == 4                            # 256 / 64
+    assert pool.stats.evictions > 0
+    assert not pool.put("huge", "x", 512, now=50.0)  # can never fit
+    pool.discard("k8")
+    assert pool.get("k8", now=60.0) is None
+
+
+def test_ssd_pool_file_backed_roundtrip(tmp_path):
+    """File-backed mode: payloads pickle to disk via the write-behind
+    thread and un-pickle byte-identically (numpy KV tuples)."""
+    pool = SSDPagePool(capacity_bytes=1 << 20,
+                       directory=str(tmp_path))
+    rng = np.random.default_rng(0)
+    k = rng.standard_normal((2, 8, 2, 4)).astype(np.float32)
+    v = rng.standard_normal((2, 8, 2, 4)).astype(np.float32)
+    assert pool.put("page", (k, v), k.nbytes + v.nbytes, now=0.0)
+    pool.drain()
+    got_k, got_v = pool.get("page", now=1.0)
+    np.testing.assert_array_equal(got_k, k)
+    np.testing.assert_array_equal(got_v, v)
+    assert pool.stats.bytes_written == k.nbytes + v.nbytes
+    pool.discard("page")
+    assert pool.get("page", now=2.0) is None
+
+
+# --------------------------------------------------- streaming summary
+def test_streaming_summary_matches_exact_within_tolerance():
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(4000):
+        r = Request(request_id=f"r{i}",
+                    prompt_tokens=[1] * int(rng.integers(8, 64)))
+        r.arrival_time = float(rng.uniform(0, 50))
+        r.first_token_time = r.arrival_time + float(
+            rng.lognormal(-1.0, 1.0))
+        r.token_times = [r.first_token_time + 0.05 * j
+                         for j in range(6)]
+        r.output_tokens = [2] * 6
+        r.finish_time = r.token_times[-1]
+        reqs.append(r)
+    exact = summarize(reqs)
+    ss = StreamingSummary(exact_max=50,          # force the histogram
+                          ttft_slo_s={"standard": 0.5})
+    for r in reqs:
+        ss.observe(r)
+    approx = ss.summary()
+    tol = ss.ttft_ms.rel_tolerance * 2 + 0.01    # pinned bin error
+    for key in exact:
+        a, b = exact[key], approx[key]
+        assert abs(a - b) <= 1e-9 + tol * abs(a), (key, a, b)
+    # attainment matches a direct count
+    want = sum(r.ttft <= 0.5 for r in reqs) / len(reqs)
+    assert abs(approx["ttft_attainment"] - want) < 1e-9
+
+
+def test_streaming_dist_histogram_percentiles_pinned():
+    rng = np.random.default_rng(4)
+    vals = rng.lognormal(1.0, 1.5, 20000).tolist()
+    d = StreamingDist(exact_max=100)
+    for v in vals:
+        d.add(v)
+    for p in (50, 90, 99):
+        exact = percentile(vals, p)
+        assert abs(d.percentile(p) - exact) <= 0.03 * exact
+
+
+# ------------------------------------------------------------ workload
+def test_multi_round_qa_trace_properties():
+    stats = {}
+    trs = list(multi_round_qa(50, 20.0, seed=2, rounds_max=5,
+                              think_time_s=4.0, stats=stats))
+    assert all(trs[i].arrival <= trs[i + 1].arrival
+               for i in range(len(trs) - 1))
+    # deterministic regeneration (no stored history)
+    trs2 = list(multi_round_qa(50, 20.0, seed=2, rounds_max=5,
+                               think_time_s=4.0))
+    assert [t.request.prompt_tokens for t in trs] \
+        == [t.request.prompt_tokens for t in trs2]
+    by_sid = {}
+    for t in trs:
+        by_sid.setdefault(t.request.session_id, []).append(
+            t.request.prompt_tokens)
+    assert len(by_sid) == 50
+    for rounds in by_sid.values():           # rounds share a growing prefix
+        for a, b in zip(rounds, rounds[1:]):
+            assert b[:len(a)] == a and len(b) > len(a)
+    assert stats["peak_open_sessions"] > 0
+
+
+# --------------------------------------------- real-JAX SSD tier pins
+def _ssd_engine(host_pages, **kw):
+    cfg = get_reduced_config("qwen3-0.6b")
+    probe = InferenceEngine(cfg, EngineConfig(**ENGINE_KW), seed=0)
+    page_bytes = probe.runner.page_bytes
+    defaults = dict(ENGINE_KW,
+                    host_cache_gb=host_pages * page_bytes / (1 << 30),
+                    ssd_cache_gb=0.1)
+    defaults.update(kw)
+    return cfg, InferenceEngine(cfg, EngineConfig(**defaults), seed=0), \
+        page_bytes
+
+
+def _greedy_reference(cfg, prompt, max_new, **kw):
+    defaults = dict(ENGINE_KW)
+    defaults.update(kw)
+    eng = InferenceEngine(cfg, EngineConfig(**defaults), seed=0)
+    ref = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=max_new))
+    eng.submit(ref)
+    eng.run_until_idle()
+    return ref.output_tokens
+
+
+def test_ssd_tier_swap_resume_byte_identical_real_engine():
+    """A preempted request whose swap pages were pushed host -> SSD
+    resumes from the SSD tier and finishes byte-identically to the
+    never-preempted run."""
+    cfg, eng, page_bytes = _ssd_engine(host_pages=6)
+    rng = np.random.default_rng(51)
+    prompt = rng.integers(0, cfg.vocab_size, 20).tolist()
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=8))
+    eng.submit(req)
+    for _ in range(200):
+        if len(req.output_tokens) >= 3:
+            break
+        eng.step()
+    generated = list(req.output_tokens)
+    eng.sched.preempt(req, eng.clock())
+    assert req.state is RequestState.SWAPPED
+    # pressure the host tier until the victim's swap pages cascade
+    # into the SSD write-behind pool
+    swap_keys = [k for k in eng.host_pool.keys()
+                 if str(k).startswith("swap/")]
+    assert swap_keys
+    for i in range(12):
+        eng.host_pool.put(f"fill{i}", ("fill", i), page_bytes,
+                          eng.clock())
+    assert all(k not in eng.host_pool.keys() for k in swap_keys)
+    eng.ssd_pool.drain()
+    assert any(eng.ssd_pool.contains(k) for k in swap_keys)
+    eng.run_until_idle()
+    assert req.state is RequestState.FINISHED
+    assert req.output_tokens[:len(generated)] == generated
+    assert req.output_tokens == _greedy_reference(cfg, prompt, 8)
+    m = eng.metrics()
+    assert m.ssd_hit_tokens > 0
+    assert m.swap_in == 1
+
+
+def test_ssd_tier_serves_evicted_prefix_real_engine():
+    """Device -> host -> SSD cascade: a prefix evicted through BOTH
+    upper tiers is served from SSD on re-offer, byte-identically to a
+    cold recompute."""
+    cfg, eng, page_bytes = _ssd_engine(host_pages=2, num_pages=24)
+    rng = np.random.default_rng(52)
+    shared = rng.integers(0, cfg.vocab_size, 24).tolist()
+    first = Request(prompt_tokens=list(shared),
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(first)
+    eng.run_until_idle()
+    # pressure: long distinct prompts evict the shared pages from the
+    # device cache into the 2-page host tier, which cascades to SSD
+    for i in range(4):
+        filler = Request(
+            prompt_tokens=rng.integers(0, cfg.vocab_size, 120).tolist(),
+            sampling=SamplingParams(max_new_tokens=2))
+        eng.submit(filler)
+        eng.run_until_idle()
+    eng.ssd_pool.drain()
+    assert eng.ssd_pool.stats.puts > 0
+    again = Request(prompt_tokens=list(shared),
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(again)
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m.ssd_hit_tokens >= eng.ecfg.page_size
+    assert again.output_tokens == first.output_tokens
+    assert again.output_tokens == _greedy_reference(cfg, shared, 4,
+                                                    num_pages=24)
