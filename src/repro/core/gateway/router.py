@@ -42,8 +42,9 @@ for any insertion order of the dict.
 from __future__ import annotations
 
 import collections
+import heapq
 import random as _random
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.engine.engine import EngineMetrics  # metric surface contract
 from repro.engine.scheduler import DEFAULT_SLO_CLASSES
@@ -331,26 +332,77 @@ class SessionAffinityPolicy(RoutingPolicy):
 
     All map operations are O(1); ``forget`` is O(sessions) but only
     runs on fleet changes.
+
+    Predictive promotion: each pin also carries a think-time EWMA (the
+    observed turn-to-turn arrival gap), so the tier promoter can
+    prefetch a returning session's SSD pages back into host DRAM
+    *before* the predicted turn lands.  When ``promote_lead_s > 0``,
+    every turn with a usable EWMA pushes ``(predicted_arrival - lead,
+    session, engine)`` onto a bounded schedule heap;
+    :meth:`due_promotions` pops the entries whose fire time has passed,
+    lazily dropping stale ones (session re-touched, expired or
+    re-homed since the push — the recorded ``last_seen`` stamp no
+    longer matches the pin).  The heap is capacity-bounded: under
+    overload new predictions are skipped (``promote_skipped``), never
+    queued without limit.
     """
     name = "session"
 
+    EWMA_ALPHA = 0.4             # think-time smoothing
+    MAX_PROMOTE_HEAP = 1 << 16   # bounded promoter schedule
+
     def __init__(self, max_sessions: int = 1 << 20,
-                 ttl_s: float = 1800.0, load_weight: float = 0.02):
+                 ttl_s: float = 1800.0, load_weight: float = 0.02,
+                 promote_lead_s: float = 0.0):
         self.max_sessions = max_sessions
         self.ttl_s = ttl_s
+        self.promote_lead_s = promote_lead_s
         self._fallback = PrefixLoadPolicy(load_weight=load_weight)
-        # session_id -> (engine_id, last_seen); dict order == LRU order
+        # session_id -> (engine_id, last_seen, think_ewma_or_None);
+        # dict order == LRU order
         self._sessions: "collections.OrderedDict[str, tuple]" = \
             collections.OrderedDict()
+        # promotion schedule: (fire_at, session_id, last_seen_stamp)
+        self._promote_heap: list = []
         self._clock = None
         self.hits = 0          # routed by the sticky map
         self.misses = 0        # first turn of a session
         self.rehomed = 0       # mapping stale/retired -> prefix fallback
+        self.promote_skipped = 0   # heap full => prediction dropped
 
     def attach_clock(self, clock) -> None:
         """The gateway wires its clock in so TTL expiry shares the
         cluster's notion of time (sim or wall)."""
         self._clock = clock
+
+    def think_ewma(self, session_id: str) -> Optional[float]:
+        """The session's smoothed turn-to-turn gap (None before the
+        second turn) — the promoter's arrival predictor."""
+        ent = self._sessions.get(session_id)
+        return ent[2] if ent is not None else None
+
+    def _schedule_promotion(self, session_id: str, now: float,
+                            ewma: float) -> None:
+        if len(self._promote_heap) >= self.MAX_PROMOTE_HEAP:
+            self.promote_skipped += 1
+            return
+        fire_at = max(now, now + ewma - self.promote_lead_s)
+        heapq.heappush(self._promote_heap, (fire_at, session_id, now))
+
+    def due_promotions(self, now: float,
+                       limit: int = 256) -> List[Tuple[str, str]]:
+        """Pop up to ``limit`` due ``(session_id, engine_id)`` pairs.
+        An entry is live only while its recorded ``last_seen`` stamp
+        still matches the pin — a session that was touched again,
+        evicted or re-homed since the push is silently dropped."""
+        out: List[Tuple[str, str]] = []
+        heap = self._promote_heap
+        while heap and heap[0][0] <= now and len(out) < limit:
+            _, sid, stamp = heapq.heappop(heap)
+            ent = self._sessions.get(sid)
+            if ent is not None and ent[1] == stamp:
+                out.append((sid, ent[0]))
+        return out
 
     def select(self, engines, tokens, lora_adapter=None,
                priority_class="standard", session_id=None):
@@ -360,12 +412,18 @@ class SessionAffinityPolicy(RoutingPolicy):
         now = self._clock() if self._clock is not None else 0.0
         ent = self._sessions.get(session_id)
         if ent is not None:
-            eid, last = ent
+            eid, last, ewma = ent
             if eid in engines and (self.ttl_s <= 0
                                    or now - last <= self.ttl_s):
-                self._sessions[session_id] = (eid, now)
+                gap = now - last
+                ewma = gap if ewma is None else \
+                    ((1 - self.EWMA_ALPHA) * ewma
+                     + self.EWMA_ALPHA * gap)
+                self._sessions[session_id] = (eid, now, ewma)
                 self._sessions.move_to_end(session_id)
                 self.hits += 1
+                if self.promote_lead_s > 0:
+                    self._schedule_promotion(session_id, now, ewma)
                 return eid
             del self._sessions[session_id]
             self.rehomed += 1
@@ -375,12 +433,12 @@ class SessionAffinityPolicy(RoutingPolicy):
                                     priority_class)
         while len(self._sessions) >= self.max_sessions:
             self._sessions.popitem(last=False)
-        self._sessions[session_id] = (eid, now)
+        self._sessions[session_id] = (eid, now, None)
         return eid
 
     def forget(self, engine_id: str) -> None:
-        stale = [sid for sid, (eid, _) in self._sessions.items()
-                 if eid == engine_id]
+        stale = [sid for sid, ent in self._sessions.items()
+                 if ent[0] == engine_id]
         for sid in stale:
             del self._sessions[sid]
         self._fallback.forget(engine_id)

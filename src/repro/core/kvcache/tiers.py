@@ -42,10 +42,13 @@ int8 wire compression (``compress_page`` / ``decompress_page``)
 from __future__ import annotations
 
 import collections
+import logging
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
+
+log = logging.getLogger("repro.kvtiers")
 
 # pinned round-trip bound: |x - dequant(quant(x))| <= this * max|x| per
 # scale group (symmetric int8 with round-to-nearest => half an LSB)
@@ -249,7 +252,12 @@ class SSDPagePool:
     Entries still in the dirty buffer are readable (they live in RAM);
     when the buffer is full new puts are dropped and counted — it is a
     cache, so the page walk just falls through to the next tier.
+    Drops are LOUD (like gateway sheds): accumulated and logged at most
+    once per ``DROP_LOG_WINDOW_S`` so a saturated write-behind buffer
+    shows up in bench output instead of silently degrading reuse.
     """
+
+    DROP_LOG_WINDOW_S = 10.0      # at most one dropped-put log per window
 
     def __init__(self, capacity_bytes: int = 64 << 30,
                  ssd_bw: float = 3.0e9,
@@ -267,6 +275,10 @@ class SSDPagePool:
         self._dirty_bytes = 0
         self._writer_free_at = 0.0
         self.stats = SSDTierStats()
+        # windowed dropped-put logging state (see _note_drop)
+        self._drop_window = 0
+        self._drop_t0 = 0.0
+        self._drop_log_at = float("-inf")
         self._dir = directory
         self._lock = None
         self._queue = None
@@ -305,12 +317,36 @@ class SSDPagePool:
         """Insert into the durable LRU store, evicting to capacity."""
         while (self.stats.bytes_stored + size_bytes
                > self.capacity_bytes) and self._entries:
-            _, (vp, sz) = self._entries.popitem(last=False)
+            vk, (vp, sz) = self._entries.popitem(last=False)
             self.stats.bytes_stored -= sz
             self.stats.evictions += 1
             self._unlink(vp)
+            self._evicted(vk)
         self._entries[key] = (payload, size_bytes)
         self.stats.bytes_stored += size_bytes
+
+    def _evicted(self, key: str) -> None:
+        """Hook: a key left the pool (capacity eviction or discard).
+        The host-shared subclass drops its writer-origin record here."""
+
+    def _note_drop(self, now: float) -> None:
+        """Dropped write-behind puts must be LOUD: accumulate and log
+        at most once per DROP_LOG_WINDOW_S with the running total, so a
+        full dirty buffer reads as a capacity problem, not light KV
+        reuse."""
+        if self._drop_window == 0:
+            self._drop_t0 = now
+        self._drop_window += 1
+        if now >= self._drop_log_at:
+            log.warning(
+                "ssd write-behind dropped %d put(s) over the last %.1fs "
+                "(total dropped=%d, dirty=%d/%d bytes) — raise "
+                "write_buffer_bytes or SSD bandwidth if reuse matters",
+                self._drop_window, max(now - self._drop_t0, 0.0),
+                self.stats.dropped_puts, self._dirty_bytes,
+                self.write_buffer_bytes)
+            self._drop_window = 0
+            self._drop_log_at = now + self.DROP_LOG_WINDOW_S
 
     def _unlink(self, payload: Any) -> None:
         if self._dir is not None and isinstance(payload, str):
@@ -382,6 +418,7 @@ class SSDPagePool:
             return False
         if self._dirty_bytes + size_bytes > self.write_buffer_bytes:
             self.stats.dropped_puts += 1
+            self._note_drop(now)
             return False
         if self._dir is None:
             ready = max(now, self._writer_free_at) \
@@ -434,11 +471,13 @@ class SSDPagePool:
         ent = self._dirty.pop(key, None)
         if ent is not None:
             self._dirty_bytes -= ent[1]
+            self._evicted(key)
             return
         ent = self._entries.pop(key, None)
         if ent is not None:
             self.stats.bytes_stored -= ent[1]
             self._unlink(ent[0])
+            self._evicted(key)
 
     def drain(self, timeout: float = 10.0) -> None:
         """Block until every queued write has landed (file backing) or
@@ -448,3 +487,157 @@ class SSDPagePool:
             self._queue.join()
         else:
             self._flush(float("inf"))
+
+
+# ------------------------------------------------------- host-shared ssd tier
+class SharedSSDPool(SSDPagePool):
+    """Host-level shared SSD tier: every engine on the host attaches a
+    :class:`SharedSSDView` to ONE content-addressed pool, so a prefix
+    evicted by engine A is an SSD hit for engine B instead of a
+    duplicate file.  Block hashes are engine-independent (token content
+    + page size + adapter), which is what makes cross-engine sharing
+    sound; swap keys (``swap/<rid>/<i>``) carry the request id and stay
+    effectively engine-private.
+
+    One write-behind drain path is shared (the single daemon thread /
+    modelled serial writer of the base class); per-engine accounting
+    lives on the views.  The pool remembers each key's first writer so
+    a hit can be classified same-engine vs cross-engine, and counts the
+    puts (and bytes) that deduplicated against another engine's copy —
+    the headline dedupe metric."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._origin: Dict[str, str] = {}     # key -> first-writer engine
+        self._views: Dict[str, "SharedSSDView"] = {}
+        self.dedup_puts = 0       # puts absorbed by another engine's copy
+        self.dedup_bytes = 0      # bytes those puts would have written
+
+    def view(self, engine_id: str) -> "SharedSSDView":
+        """The engine's handle on the shared pool (one per engine,
+        cached — accounting accumulates across reattaches)."""
+        v = self._views.get(engine_id)
+        if v is None:
+            v = self._views[engine_id] = SharedSSDView(self, engine_id)
+        return v
+
+    @property
+    def dedupe_ratio(self) -> float:
+        """Fraction of distinct-content put attempts that were absorbed
+        by a copy some OTHER engine already wrote (0.0 when nothing was
+        shared)."""
+        return self.dedup_puts / max(self.stats.puts + self.dedup_puts, 1)
+
+    def _evicted(self, key: str) -> None:
+        self._origin.pop(key, None)
+
+    # per-view entry points: classification must happen under the same
+    # lock as the put/get so concurrent engine threads stay consistent
+    def put_from(self, view: "SharedSSDView", key: str, payload: Any,
+                 size_bytes: int, now: float = 0.0) -> bool:
+        size_bytes = int(size_bytes)
+        if self._lock is not None:
+            with self._lock:
+                return self._put_from_locked(view, key, payload,
+                                             size_bytes, now)
+        return self._put_from_locked(view, key, payload, size_bytes, now)
+
+    def _put_from_locked(self, view, key, payload, size_bytes, now):
+        puts0 = self.stats.puts
+        dups0 = self.stats.dup_puts
+        drops0 = self.stats.dropped_puts
+        ok = self._put_locked(key, payload, size_bytes, now)
+        if self.stats.puts > puts0:               # fresh write
+            self._origin[key] = view.engine_id
+            view.stats.puts += 1
+        elif self.stats.dup_puts > dups0:         # already resident
+            view.stats.dup_puts += 1
+            if self._origin.get(key, view.engine_id) != view.engine_id:
+                self.dedup_puts += 1
+                self.dedup_bytes += size_bytes
+        elif self.stats.dropped_puts > drops0:    # dirty buffer full
+            view.stats.dropped_puts += 1
+        return ok
+
+    def get_from(self, view: "SharedSSDView", key: str,
+                 now: float = 0.0) -> Optional[Any]:
+        if self._lock is not None:
+            with self._lock:
+                return self._get_from_locked(view, key, now)
+        return self._get_from_locked(view, key, now)
+
+    def _get_from_locked(self, view, key, now):
+        payload = self._get_locked(key, now)
+        if payload is None:
+            view.stats.misses += 1
+            view.last_get_cross = False
+            return None
+        view.stats.hits += 1
+        cross = self._origin.get(key, view.engine_id) != view.engine_id
+        view.last_get_cross = cross
+        if cross:
+            view.cross_hits += 1
+        return payload
+
+
+class SharedSSDView:
+    """One engine's facade over a :class:`SharedSSDPool` — the same
+    interface the scheduler already speaks to a private
+    :class:`SSDPagePool` (put/get/contains/discard/keys/drain/stats/
+    ssd_bw/capacity_bytes/can_hold), plus cross-engine hit
+    classification:
+
+    * ``stats`` counts THIS engine's traffic (its puts may dedupe
+      against a sibling's copy; its hits may land on pages a sibling
+      wrote).  ``bytes_stored``/``bytes_written`` stay pool-global —
+      read them off ``pool.stats``.
+    * ``cross_hits`` counts hits on pages another engine wrote, and
+      ``last_get_cross`` flags whether the most recent successful get
+      was one — the scheduler turns that into ``ssd_cross_hit_tokens``.
+    """
+
+    def __init__(self, pool: SharedSSDPool, engine_id: str):
+        self.pool = pool
+        self.engine_id = engine_id
+        self.stats = SSDTierStats()
+        self.cross_hits = 0
+        self.last_get_cross = False
+
+    # ----------------------------------------------- pool-global queries
+    @property
+    def ssd_bw(self) -> float:
+        return self.pool.ssd_bw
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.pool.capacity_bytes
+
+    @property
+    def utilization(self) -> float:
+        return self.pool.utilization
+
+    def can_hold(self, nbytes: int) -> bool:
+        return self.pool.can_hold(nbytes)
+
+    def contains(self, key: str) -> bool:
+        return self.pool.contains(key)
+
+    def keys(self):
+        return self.pool.keys()
+
+    def __len__(self) -> int:
+        return len(self.pool)
+
+    # -------------------------------------------------- per-engine traffic
+    def put(self, key: str, payload: Any, size_bytes: int,
+            now: float = 0.0) -> bool:
+        return self.pool.put_from(self, key, payload, size_bytes, now)
+
+    def get(self, key: str, now: float = 0.0) -> Optional[Any]:
+        return self.pool.get_from(self, key, now)
+
+    def discard(self, key: str) -> None:
+        self.pool.discard(key)
+
+    def drain(self, timeout: float = 10.0) -> None:
+        self.pool.drain(timeout)

@@ -118,6 +118,16 @@ class AIRuntime:
             "swap_out": float(m.swap_out),
             "swap_in": float(m.swap_in),
             "host_hit_tokens": float(m.host_hit_tokens),
+            # SSD tier: tokens resumed from SSD (total and the subset
+            # written by ANOTHER engine on the shared host pool), puts
+            # dropped by write-behind backpressure, and predictive-
+            # promotion effectiveness (prefetched pages hit vs evicted
+            # unused)
+            "ssd_hit_tokens": float(m.ssd_hit_tokens),
+            "ssd_cross_hit_tokens": float(m.ssd_cross_hit_tokens),
+            "ssd_dropped_puts": float(m.ssd_dropped_puts),
+            "promote_hits": float(m.promote_hits),
+            "promote_wasted": float(m.promote_wasted),
             # failure handling: pool fetch/publish attempts lost to a
             # partition, recompute waste from drop-and-recompute
             # resets, recovery-log pages published

@@ -48,6 +48,11 @@ from repro.models.config import ModelConfig
 class ClusterConfig:
     routing_policy: str = "least-request"
     routing_kw: dict = field(default_factory=dict)
+    # -- sharded gateway core --
+    # split the gateway's hot state (session pins, rate-limit buckets,
+    # per-shard stats + routable cache) into N independent shards keyed
+    # by hash(session_id | user); 1 = the monolithic gateway
+    gateway_shards: int = 1
     device_type: str = "a10"
     num_engines: int = 4
     engine: SimEngineConfig = None
@@ -105,6 +110,22 @@ class ClusterConfig:
     # per-priority-class TTFT targets fed to the StreamingSummary so
     # summary() can report ttft_attainment without retaining requests
     ttft_slo_s: Optional[Dict[str, float]] = None
+    # -- host-shared SSD pool --
+    # True lifts the SSD tier from per-engine to per-host: every
+    # ``engines_per_host`` consecutive engines attach to ONE content-
+    # addressed SharedSSDPool (capacity = per-engine ssd_cache_gb x
+    # group size, one write-behind drain), so a prefix evicted by
+    # engine A is an SSD hit for engine B instead of a duplicate copy
+    ssd_shared: bool = False
+    engines_per_host: int = 2
+    # -- predictive KV promotion --
+    # promote_lead_s > 0 (with the session routing policy) arms the
+    # per-session think-time EWMA predictor: the cluster polls due
+    # promotions every promote_poll_period_s and asks the pinned
+    # engine to prefetch that session's SSD pages into host DRAM
+    # before the predicted turn lands (off the critical path)
+    promote_lead_s: float = 0.0
+    promote_poll_period_s: float = 0.5
 
 
 class ServingCluster:
@@ -132,9 +153,13 @@ class ServingCluster:
                 capacity_bytes=int(ccfg.kv_pool_gb * (1 << 30)),
                 policy=ccfg.kv_pool_policy, clock=self.clock,
                 network_bw=ccfg.kv_pool_bw)
+        routing_kw = dict(ccfg.routing_kw)
+        if ccfg.promote_lead_s > 0 and ccfg.routing_policy == "session":
+            routing_kw.setdefault("promote_lead_s", ccfg.promote_lead_s)
         self.gateway = Gateway(policy=ccfg.routing_policy,
                                default_limit=ccfg.rate_limit,
-                               clock=self.clock, **ccfg.routing_kw)
+                               clock=self.clock,
+                               shards=ccfg.gateway_shards, **routing_kw)
         self.pool_mgr = RolePoolManager(clock=self.clock,
                                         gateway=self.gateway)
         self.rebalancer = (AttainmentRebalancer(ccfg.rebalance)
@@ -176,6 +201,10 @@ class ServingCluster:
             ModelArtifact(cfg.name, ccfg.model_bytes,
                           tier_by_node={"node-0": "dram"}))
         self.cluster = ClusterManager(self.cold, clock=self.clock)
+        # host-shared SSD pools: host group id -> SharedSSDPool (built
+        # lazily as engines spawn; replacements land in their group)
+        self._host_ssd: Dict[str, object] = {}
+        self.promotions = 0        # promoter prefetch calls issued
         for i in range(max(ccfg.num_engines,
                            (ccfg.autoscaler.max_replicas
                             if ccfg.autoscaler else ccfg.num_engines))):
@@ -230,7 +259,8 @@ class ServingCluster:
         if ecfg.role != role:
             ecfg = dataclasses.replace(ecfg, role=role)
         eng = SimEngine(self.cfg, self.loop, ecfg, kv_pool=self.kv_pool,
-                        engine_id=eid, node=node)
+                        engine_id=eid, node=node,
+                        ssd_pool=self._host_ssd_pool(ecfg))
         eng.slowdown_fn = (lambda e=eid: self.injector.slowdown_factor(e))
         eng.on_busy_changed = self._note_busy
         if self.stream_summary is not None:
@@ -251,6 +281,33 @@ class ServingCluster:
                             lambda: self.pool_mgr.add_engine(eid, eng,
                                                              role))
         return eid
+
+    def _host_ssd_pool(self, ecfg: SimEngineConfig):
+        """The spawning engine's host-group SharedSSDPool (created on
+        first use), or None when sharing is off / the engine has no SSD
+        tier configured.  Groups are ``engines_per_host`` consecutive
+        spawn slots — the sim's stand-in for physical co-location."""
+        if (not self.ccfg.ssd_shared or ecfg.ssd_cache_gb <= 0
+                or ecfg.host_cache_gb <= 0):
+            return None
+        from repro.core.kvcache.tiers import SharedSSDPool
+        per_host = max(self.ccfg.engines_per_host, 1)
+        host = f"host-{len(self.runtimes) // per_host}"
+        pool = self._host_ssd.get(host)
+        if pool is None:
+            pool = self._host_ssd[host] = SharedSSDPool(
+                capacity_bytes=int(ecfg.ssd_cache_gb * (1 << 30)
+                                   * per_host),
+                ssd_bw=ecfg.ssd_bw)
+        return pool
+
+    def ssd_pools(self) -> List:
+        """The underlying SSD pool objects: one per host group when
+        shared, one per engine otherwise (summary + bench accounting)."""
+        if self._host_ssd:
+            return list(self._host_ssd.values())
+        return [e.ssd_pool for e in self.engines.values()
+                if getattr(e, "ssd_pool", None) is not None]
 
     def _note_busy(self, flag: bool) -> None:
         self._busy_engines += 1 if flag else -1
@@ -410,8 +467,7 @@ class ServingCluster:
         def back_up():
             gw = self.gateway
             gw.set_policy(self.ccfg.routing_policy, **self.ccfg.routing_kw)
-            gw._rpm.clear()
-            gw._tpm.clear()
+            gw.clear_user_buckets()
             gw.cordoned.clear()
         self.loop.after(duration, back_up)
 
@@ -442,6 +498,17 @@ class ServingCluster:
             self.hedged += len(reqs)
             self.gateway.note_failure(eid, "hedged")
             self._redeliver_lost(reqs, src_pool, exclude={eid})
+
+    def _promote_poll(self) -> None:
+        """Drain due predictive promotions from the gateway's session
+        shards and ask each session's pinned engine to prefetch its SSD
+        pages into host DRAM (the promoter runs between turns — off
+        every request's critical path)."""
+        for sid, eid in self.gateway.due_promotions(self.clock.now):
+            eng = self.engines.get(eid)
+            if eng is not None and eng.healthy():
+                if eng.promote_session(sid):
+                    self.promotions += 1
 
     def _lora_replan(self) -> None:
         """Demand-driven replanning: fold gateway-observed per-adapter
@@ -517,6 +584,10 @@ class ServingCluster:
                                            self._chaos_exec(e)))
         if self.ccfg.hedge_ratio > 0:
             self.loop.every(self.ccfg.hedge_period_s, self._hedge)
+        if (self.ccfg.promote_lead_s > 0
+                and self.ccfg.routing_policy == "session"):
+            self.loop.every(self.ccfg.promote_poll_period_s,
+                            self._promote_poll)
         if self.ccfg.autoscaler is not None:
             self.loop.every(self.ccfg.autoscale_period_s, self._autoscale)
         if self.lora_ctrl is not None:
@@ -605,11 +676,15 @@ class ServingCluster:
         # every cluster summary so benches can't under-report load
         s["shed_requests"] = self.gateway.stats.shed
         s["routing_policy"] = self.ccfg.routing_policy
-        pol = self.gateway.policy
-        if getattr(pol, "name", "") == "session":
-            s["session_hits"] = pol.hits
-            s["session_misses"] = pol.misses
-            s["session_rehomed"] = pol.rehomed
+        if self.gateway.num_shards > 1:
+            s["gateway_shards"] = self.gateway.num_shards
+        ss = self.gateway.session_stats()
+        if ss is not None:
+            s["session_hits"] = ss["session_hits"]
+            s["session_misses"] = ss["session_misses"]
+            s["session_rehomed"] = ss["session_rehomed"]
+            if ss["promote_skipped"]:
+                s["promote_skipped"] = ss["promote_skipped"]
         if self.kv_pool is not None:
             st = self.kv_pool.stats
             s["pool_hits"] = st.hits_local + st.hits_remote
@@ -624,6 +699,29 @@ class ServingCluster:
         # tiered-KV pressure: host/SSD-tier hits, swap traffic, wire bytes
         s["host_hit_tokens"] = sum(m.host_hit_tokens for m in agg)
         s["ssd_hit_tokens"] = sum(m.ssd_hit_tokens for m in agg)
+        s["ssd_cross_hit_tokens"] = sum(m.ssd_cross_hit_tokens
+                                        for m in agg)
+        s["promote_hits"] = sum(m.promote_hits for m in agg)
+        s["promote_wasted"] = sum(m.promote_wasted for m in agg)
+        if self.promotions:
+            s["promotions"] = self.promotions
+        # SSD tier accounting (pool-level so shared pools count once):
+        # write-behind drops are a first-class signal, and the shared
+        # pool's dedupe ratio is the cross-engine sharing payoff
+        pools = self.ssd_pools()
+        if pools:
+            s["ssd_puts"] = sum(p.stats.puts for p in pools)
+            s["ssd_bytes_written"] = sum(p.stats.bytes_written
+                                         for p in pools)
+            s["ssd_dropped_puts"] = sum(p.stats.dropped_puts
+                                        for p in pools)
+        if self._host_ssd:
+            dp = sum(p.dedup_puts for p in self._host_ssd.values())
+            tp = sum(p.stats.puts for p in self._host_ssd.values())
+            s["ssd_dedup_puts"] = dp
+            s["ssd_dedup_bytes"] = sum(p.dedup_bytes
+                                       for p in self._host_ssd.values())
+            s["ssd_dedupe_ratio"] = dp / max(tp + dp, 1)
         s["swap_out"] = sum(m.swap_out for m in agg)
         s["swap_in"] = sum(m.swap_in for m in agg)
         s["kv_bytes_offloaded"] = sum(m.kv_bytes_offloaded for m in agg)

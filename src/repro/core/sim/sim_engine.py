@@ -159,7 +159,8 @@ class SimEngine:
     def __init__(self, cfg: ModelConfig, loop: EventLoop,
                  sim_cfg: SimEngineConfig = None,
                  kv_pool: Optional[DistributedKVPool] = None,
-                 engine_id: str = "sim-0", node: str = "node-0"):
+                 engine_id: str = "sim-0", node: str = "node-0",
+                 ssd_pool=None):
         self.cfg = cfg
         self.loop = loop
         self.sc = sim_cfg or SimEngineConfig()
@@ -189,7 +190,14 @@ class SimEngine:
             self.host_pool = HostPagePool(
                 capacity_bytes=int(self.sc.host_cache_gb * (1 << 30)))
         self.ssd_pool = None
-        if self.sc.ssd_cache_gb > 0 and self.host_pool is not None:
+        if self.host_pool is not None and ssd_pool is not None:
+            # host-shared SSD tier: the cluster passes one
+            # SharedSSDPool per host group; this engine attaches a
+            # per-engine accounting view (same interface as a private
+            # pool, plus cross-engine hit classification)
+            self.ssd_pool = ssd_pool.view(engine_id) \
+                if hasattr(ssd_pool, "view") else ssd_pool
+        elif self.sc.ssd_cache_gb > 0 and self.host_pool is not None:
             self.ssd_pool = SSDPagePool(
                 capacity_bytes=int(self.sc.ssd_cache_gb * (1 << 30)),
                 ssd_bw=self.sc.ssd_bw)
@@ -400,6 +408,32 @@ class SimEngine:
         (wire bytes — the int8 format halves them)."""
         self.kv_pool.publish(block_hash, True, self.engine_id, now,
                              size_bytes=self._wire_bytes)
+
+    # ------------------------------------------------ predictive promotion
+    def promote_session(self, session_id: str) -> int:
+        """Prefetch the session's SSD-resident pages back into host
+        DRAM ahead of the predicted turn.  The sim prices the SSD read
+        like the real engine pays it: the pages land after a scheduled
+        delay of bytes/ssd_bw, OFF the critical path (no engine stall —
+        that is the whole point; only the promoter's landing time is
+        modelled).  Returns the number of pages scheduled."""
+        if self.ssd_pool is None:
+            return 0
+        keys = self.sched.session_promotable(session_id)
+        if not keys:
+            return 0
+        delay = len(keys) * self._page_bytes / self.ssd_pool.ssd_bw
+
+        def land() -> None:
+            now = self.loop.clock.now
+            for key in keys:
+                payload = self.ssd_pool.get(key, now)
+                if payload is not None:
+                    self.sched.complete_promotion(
+                        key, payload, self._page_bytes, now, session_id)
+
+        self.loop.after(delay, land)
+        return len(keys)
 
     def _iterate(self) -> None:
         now = self.loop.clock.now

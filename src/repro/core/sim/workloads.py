@@ -246,6 +246,8 @@ def multi_round_qa(n_sessions: int, session_rate_rps: float,
                    zipf_s: float = 1.3, think_time_s: float = 20.0,
                    sys_prompt: int = 64, turn_tokens: int = 48,
                    output_tokens: int = 32,
+                   shared_sys: bool = False,
+                   think_sigma: float = 0.8,
                    stats: Optional[dict] = None
                    ) -> Iterator[TimedRequest]:
     """Million-session multi-round QA: a lazy, time-ordered generator.
@@ -269,13 +271,24 @@ def multi_round_qa(n_sessions: int, session_rate_rps: float,
     sessions), not O(total tokens).  Every request carries
     ``session_id``/``user``.
 
+    ``shared_sys=True`` makes the first ``sys_prompt`` tokens identical
+    across ALL sessions (the common deployment shape: one system prompt,
+    many users) while every later token keeps the per-session salt —
+    with it, sessions landing on different engines write the SAME
+    system-prompt pages, which is what the host-shared SSD pool
+    deduplicates and serves as cross-engine hits.
+
     ``stats`` (optional dict) is updated in place with
     ``open_sessions`` (sessions currently between rounds — the live
     heap size) and ``peak_open_sessions``, so million-session benches
     can report concurrency without a second pass over the trace.
     """
     rng = np.random.default_rng(seed)
-    mu = math.log(max(think_time_s, 1e-3)) - 0.32    # lognormal mean fix
+    # lognormal mean fix: E[lognormal(mu, s)] = e^(mu + s^2/2), so the
+    # observed mean think-time stays ``think_time_s`` for any
+    # ``think_sigma`` (0.8 = human chat; ~0.2-0.3 = the regular cadence
+    # of agent/tool loops that predictive promotion targets)
+    mu = math.log(max(think_time_s, 1e-3)) - think_sigma ** 2 / 2
     per_round = turn_tokens + output_tokens
 
     def _emit(sid: int, rnd: int, t: float) -> TimedRequest:
@@ -287,6 +300,11 @@ def multi_round_qa(n_sessions: int, session_rate_rps: float,
         salt = ((seed * 0x5851F42D + sid) * 0x9E3779B97F4A7C15) \
             & (2**64 - 1)
         x = idx + np.uint64(salt)
+        if shared_sys and sys_prompt > 0:
+            # session-independent salt for the system-prompt span so
+            # its pages content-address identically fleet-wide
+            sys_salt = (seed * 0x9E3779B97F4A7C15) & (2**64 - 1)
+            x[:sys_prompt] = idx[:sys_prompt] + np.uint64(sys_salt)
         x ^= x >> np.uint64(30)
         x *= np.uint64(0xBF58476D1CE4E5B9)
         x ^= x >> np.uint64(27)
@@ -314,7 +332,7 @@ def multi_round_qa(n_sessions: int, session_rate_rps: float,
         yield _emit(sid, rnd, t)
         if rnd + 1 < nrounds:
             heapq.heappush(
-                heap, (t + rng.lognormal(mu, 0.8), sid, rnd + 1,
+                heap, (t + rng.lognormal(mu, think_sigma), sid, rnd + 1,
                        nrounds))
         if stats is not None:
             stats["open_sessions"] = len(heap)

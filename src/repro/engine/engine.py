@@ -37,14 +37,16 @@ consult the pool by block hash; newly filled pages are published back.
 """
 from __future__ import annotations
 
+import queue
 import tempfile
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 from repro.core.kvcache.tiers import (CompressedPage, HostPagePool,
                                       SSDPagePool, compress_page,
-                                      decompress_page,
+                                      decompress_page, payload_nbytes,
                                       validate_wire_dtype)
 from repro.engine import paged_model as PM
 from repro.engine.page_table import PageAllocator, chunk_hashes
@@ -169,7 +171,7 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig = None,
                  params=None, clock: Callable[[], float] = time.monotonic,
                  kv_pool_client=None, engine_id: str = "engine-0",
-                 seed: int = 0):
+                 seed: int = 0, ssd_pool=None):
         ecfg = ecfg or EngineConfig()
         if not PM.pageable(cfg):
             raise ValueError(
@@ -191,7 +193,14 @@ class InferenceEngine:
         # cascade here so idle-session prefixes and parked swap entries
         # survive host pressure and resume byte-identically
         self.ssd_pool = None
-        if ecfg.ssd_cache_gb > 0 and self.host_pool is not None:
+        if ssd_pool is not None and self.host_pool is not None:
+            # host-shared SSD tier: the launcher passes one
+            # SharedSSDPool per host; this engine attaches a per-engine
+            # accounting view (same interface as a private pool, plus
+            # cross-engine hit classification)
+            self.ssd_pool = ssd_pool.view(engine_id) \
+                if hasattr(ssd_pool, "view") else ssd_pool
+        elif ecfg.ssd_cache_gb > 0 and self.host_pool is not None:
             ssd_dir = ecfg.ssd_dir or tempfile.mkdtemp(
                 prefix=f"kv-ssd-{engine_id}-")
             self.ssd_pool = SSDPagePool(
@@ -219,6 +228,12 @@ class InferenceEngine:
         # wall time spent inside step(): with runner.device_wait_s it
         # yields host_overhead_frac — the gap the async loop hides
         self._step_wall_s = 0.0
+        # predictive promotion: a daemon thread reads SSD pages off the
+        # critical path; landed payloads queue here and are installed
+        # into the host pool at step boundaries by the engine thread
+        self._promote_req_q: Optional[queue.Queue] = None
+        self._promote_q: Optional[queue.Queue] = None
+        self._promoter: Optional[threading.Thread] = None
 
     # ----------------------------------------------------------- views
     @property
@@ -334,6 +349,64 @@ class InferenceEngine:
         self.kv_pool.publish(block_hash, payload, self.engine_id, now,
                              size_bytes=size)
 
+    # -------------------------------------------------------- promotion
+    def promote_session(self, session_id: str) -> int:
+        """Prefetch a session's SSD-resident pages back into host DRAM
+        ahead of its predicted next turn.  The SSD reads happen on a
+        background daemon thread; payloads land in the host pool at the
+        next step boundary, so promotion never stalls the data plane.
+        Returns the number of pages queued for promotion."""
+        if self.ssd_pool is None or self.host_pool is None:
+            return 0
+        keys = self.sched.session_promotable(session_id)
+        if not keys:
+            return 0
+        self._ensure_promoter()
+        self._promote_req_q.put((session_id, keys))
+        return len(keys)
+
+    def _ensure_promoter(self) -> None:
+        if self._promoter is not None:
+            return
+        self._promote_req_q = queue.Queue()
+        self._promote_q = queue.Queue()
+        self._promoter = threading.Thread(
+            target=self._promote_worker, daemon=True,
+            name=f"kv-promote-{self.engine_id}")
+        self._promoter.start()
+
+    def _promote_worker(self) -> None:
+        while True:
+            sid, keys = self._promote_req_q.get()
+            try:
+                for key in keys:
+                    payload = self.ssd_pool.get(key, self.clock())
+                    if payload is not None:
+                        self._promote_q.put((key, payload, sid))
+            finally:
+                self._promote_req_q.task_done()
+
+    def _land_promotions(self) -> None:
+        """Engine-thread drain: install prefetched pages in host DRAM."""
+        if self._promote_q is None:
+            return
+        while True:
+            try:
+                key, payload, sid = self._promote_q.get_nowait()
+            except queue.Empty:
+                return
+            self.sched.complete_promotion(
+                key, payload,
+                payload_nbytes(payload, self.runner.page_bytes),
+                self.clock(), sid)
+
+    def drain_promotions(self) -> None:
+        """Block until all queued promotions have been read off SSD,
+        then land them (deterministic tests / shutdown)."""
+        if self._promote_req_q is not None:
+            self._promote_req_q.join()
+        self._land_promotions()
+
     # ------------------------------------------------------------- step
     def step(self) -> int:
         """One scheduler iteration.  Returns #tokens produced (sampled
@@ -345,6 +418,7 @@ class InferenceEngine:
         t0 = time.perf_counter()
         try:
             self._flush_deferred_unloads()
+            self._land_promotions()
             if self.ecfg.async_loop:
                 return self._step_async()
             return self._exec(self.sched.schedule(self.clock()))

@@ -78,6 +78,7 @@ under wall clock (real engines) and forward-dated discrete-event time
 """
 from __future__ import annotations
 
+import collections
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -184,6 +185,17 @@ class EngineMetrics:
     # pressure signals for the rebalancer and dashboards
     host_hit_tokens: int = 0        # admission tokens served from host tier
     ssd_hit_tokens: int = 0         # tokens served from the SSD tier
+    # host-shared SSD pool: tokens served from SSD pages some OTHER
+    # engine on the host wrote (the cross-engine dedupe payoff), and
+    # write-behind puts dropped on a full dirty buffer (satellite:
+    # silent drops must be first-class)
+    ssd_cross_hit_tokens: int = 0
+    ssd_dropped_puts: int = 0
+    # predictive promotion: host hits on pages the promoter prefetched
+    # from SSD ahead of the predicted turn, vs promoted pages evicted
+    # unused (wasted prefetch bandwidth)
+    promote_hits: int = 0
+    promote_wasted: int = 0
     kv_bytes_offloaded: int = 0     # device -> host (cascade + swap-out)
     kv_bytes_fetched: int = 0       # host/pool -> device (walk + swap-in)
     swap_out: int = 0               # preemptions that swapped (not dropped)
@@ -539,12 +551,21 @@ class Scheduler(SchedulerCore):
         self.page_payload = page_payload
         self.page_bytes = int(page_bytes)
         self._m.update(host_hit_tokens=0, ssd_hit_tokens=0,
+                       ssd_cross_hit_tokens=0,
+                       promote_hits=0, promote_wasted=0,
                        kv_bytes_offloaded=0,
                        kv_bytes_fetched=0, swap_out=0, swap_in=0,
                        kv_fetch_failures=0, wasted_tokens=0, ckpt_pages=0,
                        crash_resumes=0, spec_drafted_tokens=0,
                        spec_accepted_tokens=0, spec_steps=0,
                        lora_miss=0, lora_shed=0)
+        # predictive promotion state: the block hashes of each finished
+        # session's full-page prefix (what the next turn's walk will
+        # ask for), and the host-tier keys the promoter parked there
+        # but no request has touched yet (key -> session_id)
+        self._session_pages: "collections.OrderedDict[str, list]" = \
+            collections.OrderedDict()
+        self._promoted: Dict[str, str] = {}
         # multi-LoRA admission gate: ``adapter_ready(name) -> bool``
         # reports adapter residency on this engine's data plane.  When
         # set, a request naming a non-resident adapter queues (counted
@@ -819,7 +840,11 @@ class Scheduler(SchedulerCore):
         if payload is None and self.ssd_pool is not None:
             payload = self.ssd_pool.get(block_hash, now)
             if payload is not None:
-                source = "ssd"
+                # a SharedSSDView flags hits on pages another engine on
+                # this host wrote; "ssd-cross" is normalized back to
+                # "ssd" before it reaches install_page
+                source = "ssd-cross" if getattr(
+                    self.ssd_pool, "last_get_cross", False) else "ssd"
         if payload is None and self.kv_pool is not None:
             payload = self._pool_fetch(block_hash, now)
             # stored wire size, NOT the raw page: int8-compressed
@@ -941,18 +966,26 @@ class Scheduler(SchedulerCore):
         cp = self.scfg.handoff_chunk_pages
         ps = self.scfg.page_size
         for n, (pid, h, payload, source, nbytes) in enumerate(fetched):
+            cross = source == "ssd-cross"
+            src = "ssd" if cross else source
             if self.install_page is not None:
-                self.install_page(pid, payload, req, now, source=source,
+                self.install_page(pid, payload, req, now, source=src,
                                   stream=bool(cp) and n >= cp,
                                   nbytes=nbytes)
             if self.scfg.prefix_caching:
                 self.alloc.register_hash(pid, h)
-            if source == "pool":
+            if src == "pool":
                 self._m["remote_hit_tokens"] += ps
-            elif source == "ssd":
+            elif src == "ssd":
                 self._m["ssd_hit_tokens"] += ps
+                if cross:
+                    self._m["ssd_cross_hit_tokens"] += ps
             else:
                 self._m["host_hit_tokens"] += ps
+                if self._promoted.pop(h, None) is not None:
+                    # the promoter's prefetch paid off: this page was
+                    # already in host DRAM when the turn landed
+                    self._m["promote_hits"] += 1
             self._m["kv_bytes_fetched"] += nbytes
 
     def _cascade_evict(self, pid: int, block_hash: str,
@@ -972,8 +1005,13 @@ class Scheduler(SchedulerCore):
         OR parked swap entry) falls into the SSD write-behind tier
         instead of dropping — idle-session prefixes survive host
         pressure and resume from SSD."""
-        if self.ssd_pool.contains(key):
-            return
+        if self._promoted.pop(key, None) is not None:
+            # a promoted page evicted before any request touched it:
+            # the prefetch spent SSD+DRAM bandwidth for nothing
+            self._m["promote_wasted"] += 1
+        # put unconditionally: a resident key is a cheap dup (refreshes
+        # LRU, no rewrite) and on a host-shared pool it is exactly the
+        # write another engine's copy absorbed — the dedupe metric
         self.ssd_pool.put(key, payload, nbytes, now)
 
     # ------------------------------------------------------- schedule
@@ -1296,10 +1334,86 @@ class Scheduler(SchedulerCore):
             return False
         if req in self.running:
             self.running.remove(req)
+        self._record_session_pages(req)
         self.alloc.release(req.page_ids, now)
         req.page_ids = []
         self.note_finished(req, now)
         return True
+
+    # ------------------------------------------------ predictive promotion
+    MAX_SESSION_PAGES = 4096    # sessions remembered for the promoter
+    PROMOTE_MAX_PAGES = 64      # per-promotion page budget
+
+    def _record_session_pages(self, req: Request) -> None:
+        """Remember a finishing session turn's full-page block hashes —
+        exactly what the NEXT turn's admission walk will ask for (the
+        next prompt extends this turn's prompt + output), so the
+        promoter knows which SSD pages to pull back ahead of it.  Only
+        tracked when both lower tiers exist (no tiers => nothing to
+        promote), LRU-bounded so a million-session trace cannot grow
+        it without limit."""
+        sid = getattr(req, "session_id", None)
+        if sid is None or self.host_pool is None \
+                or self.ssd_pool is None:
+            return
+        ps = self.scfg.page_size
+        seq = list(req.prompt_tokens) + [int(t) for t in
+                                         req.output_tokens]
+        if len(seq) < ps:
+            return
+        self._session_pages[sid] = chunk_hashes(
+            seq, ps, req.lora_adapter or "")
+        self._session_pages.move_to_end(sid)
+        while len(self._session_pages) > self.MAX_SESSION_PAGES:
+            self._session_pages.popitem(last=False)
+
+    def session_promotable(self, session_id: str) -> List[str]:
+        """The session's recorded pages currently SSD-resident but NOT
+        host-resident — the promoter's shopping list, bounded by
+        ``PROMOTE_MAX_PAGES``."""
+        if self.host_pool is None or self.ssd_pool is None:
+            return []
+        out = []
+        for h in self._session_pages.get(session_id, ()):
+            if not self.host_pool.contains(h) \
+                    and self.ssd_pool.contains(h):
+                out.append(h)
+                if len(out) >= self.PROMOTE_MAX_PAGES:
+                    break
+        return out
+
+    def complete_promotion(self, key: str, payload, nbytes: int,
+                           now: float, session_id: str = "") -> bool:
+        """Land one prefetched page in host DRAM (called by the host's
+        promotion machinery once the SSD read has been paid for — at
+        modelled cost by the simulator, on a background thread by the
+        real engine).  The key is marked so a later host hit counts as
+        ``promote_hits`` and an untouched eviction as
+        ``promote_wasted``."""
+        if self.host_pool is None or self.host_pool.contains(key):
+            return False
+        if self.host_pool.put(key, payload,
+                              int(nbytes) or self.page_bytes, now):
+            self._promoted[key] = session_id
+            return True
+        return False
+
+    def promote_session(self, session_id: str, now: float) -> int:
+        """Synchronous promotion: read each promotable page from SSD
+        and park it in host DRAM.  Hosts with their own latency story
+        (sim cost events, the real engine's promoter thread) drive
+        ``session_promotable`` + ``complete_promotion`` directly."""
+        n = 0
+        for key in self.session_promotable(session_id):
+            payload = self.ssd_pool.get(key, now)
+            if payload is None:
+                continue
+            if self.complete_promotion(
+                    key, payload,
+                    payload_nbytes(payload, self.page_bytes), now,
+                    session_id):
+                n += 1
+        return n
 
     def preempt(self, req: Request, now: float) -> None:
         """Evict a RUNNING request.  With a host tier attached the
@@ -1573,6 +1687,11 @@ class Scheduler(SchedulerCore):
             slo_itl_attainment=self.slo_itl_attainment(now),
             host_hit_tokens=self._m["host_hit_tokens"],
             ssd_hit_tokens=self._m["ssd_hit_tokens"],
+            ssd_cross_hit_tokens=self._m["ssd_cross_hit_tokens"],
+            ssd_dropped_puts=(self.ssd_pool.stats.dropped_puts
+                              if self.ssd_pool is not None else 0),
+            promote_hits=self._m["promote_hits"],
+            promote_wasted=self._m["promote_wasted"],
             kv_bytes_offloaded=self._m["kv_bytes_offloaded"],
             kv_bytes_fetched=self._m["kv_bytes_fetched"],
             swap_out=self._m["swap_out"],

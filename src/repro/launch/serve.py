@@ -96,7 +96,7 @@ def auto_roles(cfg, n_engines: int, prompt_len: int, max_new: int,
 
 
 def build_engines(cfg, roles, clock, ecfg_kw=None, gateway=None,
-                  force_pool=False):
+                  force_pool=False, ssd_pool=None):
     """A pod group under a RolePoolManager.
 
     Returns ``(engines dict, manager, pool)``.  The manager owns the
@@ -105,6 +105,9 @@ def build_engines(cfg, roles, clock, ecfg_kw=None, gateway=None,
     sees frontends.  Disaggregated groups get a DistributedKVPool;
     ``force_pool`` builds one for all-mixed groups too (the chaos
     drill's crash recovery and partition scenarios need it).
+    ``ssd_pool`` is a host-level :class:`SharedSSDPool` every engine
+    attaches to (per-engine accounting views) instead of creating a
+    private SSD tier.
     """
     kw = dict(page_size=8, num_pages=256, max_batch=4,
               max_pages_per_seq=32, chunk_size=32)
@@ -120,7 +123,8 @@ def build_engines(cfg, roles, clock, ecfg_kw=None, gateway=None,
         eid = f"engine-{i}"
         engines[eid] = InferenceEngine(
             cfg, EngineConfig(role=role, **kw), clock=clock,
-            kv_pool_client=pool, engine_id=eid, seed=0 if disagg else i)
+            kv_pool_client=pool, engine_id=eid, seed=0 if disagg else i,
+            ssd_pool=ssd_pool)
         manager.add_engine(eid, engines[eid], role)
     return engines, manager, pool
 
@@ -159,6 +163,23 @@ def main() -> None:
                          "the host tier: host evictions write behind to "
                          "SSD and prefix walks fall device -> host -> "
                          "SSD before recompute; 0 disables")
+    ap.add_argument("--ssd-shared", action="store_true",
+                    help="share ONE host-level SSD pool across all "
+                         "engines (content-addressed dedupe, one "
+                         "write-behind drain): a prefix evicted by "
+                         "engine A is an SSD hit for engine B; total "
+                         "capacity = --ssd-cache-gb x engines")
+    ap.add_argument("--gateway-shards", type=int, default=1,
+                    help="shard the gateway's hot mutable state "
+                         "(session pins, rate buckets, failure "
+                         "accounting) N ways so route() cost stays "
+                         "flat as the pin table grows")
+    ap.add_argument("--promote-lead-s", type=float, default=0.0,
+                    help="predictive KV promotion: with --policy "
+                         "session, prefetch a session's SSD pages back "
+                         "into host DRAM this many seconds before its "
+                         "think-time EWMA predicts the next turn "
+                         "(0 disables)")
     ap.add_argument("--wire-dtype", default="int8",
                     choices=("fp", "int8"),
                     help="pool-handoff wire format: 'int8' quantizes "
@@ -235,7 +256,23 @@ def main() -> None:
               + (" (quantized; --wire-dtype fp for byte-exact)"
                  if args.wire_dtype == "int8" else ""))
     policy = args.lora_policy if args.adapters else args.policy
-    gw = Gateway(policy=policy, clock=clock)
+    policy_kw = {}
+    if args.promote_lead_s > 0 and policy == "session":
+        policy_kw["promote_lead_s"] = args.promote_lead_s
+    gw = Gateway(policy=policy, clock=clock,
+                 shards=args.gateway_shards, **policy_kw)
+    shared_ssd = None
+    if args.ssd_shared and args.ssd_cache_gb > 0 \
+            and args.host_cache_gb > 0:
+        from repro.core.kvcache.tiers import SharedSSDPool
+        import tempfile
+        shared_ssd = SharedSSDPool(
+            capacity_bytes=int(args.ssd_cache_gb * (1 << 30)
+                               * len(roles)),
+            directory=tempfile.mkdtemp(prefix="kv-ssd-host-"))
+        print(f"kv tiers: ONE host-shared SSD pool "
+              f"({args.ssd_cache_gb * len(roles):.1f}GB) across "
+              f"{len(roles)} engine(s)")
     engines, manager, pool = build_engines(
         cfg, roles, clock,
         ecfg_kw=dict(slo_aware=args.slo,
@@ -245,7 +282,8 @@ def main() -> None:
                      ckpt_interval_tokens=args.ckpt_interval,
                      spec_tokens=args.spec_tokens,
                      async_loop=args.async_loop),
-        gateway=gw, force_pool=args.chaos != "none")
+        gateway=gw, force_pool=args.chaos != "none",
+        ssd_pool=shared_ssd)
     lora_ctrl = None
     lora_heat = None
     if args.adapters:
@@ -280,6 +318,10 @@ def main() -> None:
         manager.poll(clock())
         if rebalancer is not None:
             rebalancer.step(clock(), manager)
+        if args.promote_lead_s > 0:
+            for sid, eid in gw.due_promotions(clock()):
+                if eid in engines:
+                    engines[eid].promote_session(sid)
 
     def chaos_drill():
         """Mid-run failure injection against the live engine group."""
@@ -381,6 +423,15 @@ def main() -> None:
         print(f"  pool: puts={st.puts} hits={st.hits_local + st.hits_remote}"
               f" dup_drops={st.dup_puts_dropped}"
               f" bytes_stored={st.bytes_stored}")
+    if shared_ssd is not None:
+        cross = sum(e.metrics().ssd_cross_hit_tokens
+                    for e in engines.values())
+        print(f"  ssd(shared): puts={shared_ssd.stats.puts} "
+              f"dedup_puts={shared_ssd.dedup_puts} "
+              f"dedupe_ratio={shared_ssd.dedupe_ratio:.2f} "
+              f"bytes_written={shared_ssd.stats.bytes_written} "
+              f"dropped_puts={shared_ssd.stats.dropped_puts} "
+              f"cross_hit_tokens={cross}")
     if args.adapters:
         cold = sum(e.runner.adapter_loads for e in engines.values())
         stall = sum(e.runner.adapter_load_s for e in engines.values())

@@ -59,6 +59,11 @@ def lists(elements: _Strategy, min_size: int = 0,
     return _Strategy(draw)
 
 
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng)
+                                       for s in elements))
+
+
 def composite(fn):
     """``@st.composite`` — fn(draw, *args) becomes a strategy factory."""
     @functools.wraps(fn)
@@ -110,6 +115,7 @@ class _StrategiesModule:
     booleans = staticmethod(booleans)
     sampled_from = staticmethod(sampled_from)
     lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
     composite = staticmethod(composite)
 
 

@@ -1,0 +1,267 @@
+"""Sharded gateway core: shard-map determinism, lazy stats merge,
+per-shard LRU bounds, retag pin purging across shards, and the
+think-time promotion predictor.
+
+The load-bearing property is OBSERVATION EQUIVALENCE: a 16-shard
+gateway must route every request of any interleaving of a session's
+turns to the same engine a monolithic gateway would pick — sharding is
+a capacity/locality optimisation, never a behavior change.
+"""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.gateway.gateway import Gateway, GatewayStats, RateLimit
+from repro.core.gateway.router import SessionAffinityPolicy
+
+
+class _FakeEngine:
+    def __init__(self, depth=0, cov=0):
+        self.queue_depth = depth
+        self._cov = cov
+
+    def match_prefix_len(self, tokens):
+        return min(self._cov, len(tokens))
+
+
+def _gateway(shards, policy="session", **kw):
+    gw = Gateway(policy=policy, shards=shards,
+                 default_limit=RateLimit(rpm=1e12, tpm=1e15), **kw)
+    for i in range(4):
+        gw.register_engine(f"e{i}", _FakeEngine())
+    return gw
+
+
+# ----------------------------------------------------------- shard map
+def test_shard_map_deterministic_and_spread():
+    gw_a, gw_b = _gateway(8), _gateway(8)
+    hit = set()
+    for i in range(200):
+        sid = f"conv{i}"
+        ia = gw_a._shards.index(gw_a._shard_for(sid))
+        ib = gw_b._shards.index(gw_b._shard_for(sid))
+        assert ia == ib                  # crc32: process-independent
+        hit.add(ia)
+    assert len(hit) == 8                 # no dead shards at 200 keys
+    # single-shard fast path short-circuits the hash entirely
+    gw1 = _gateway(1)
+    assert gw1._shard_for("anything") is gw1._shards[0]
+
+
+# ---------------------------------------------------------- stats merge
+def test_gateway_stats_merge_unit():
+    a = GatewayStats(routed=3, rejected_rpm=1, lora_routed=2,
+                     lora_hits=1, per_engine={"e0": 2, "e1": 1},
+                     engine_failures={"e0": {"crash": 1}})
+    b = GatewayStats(routed=5, rejected_tpm=2, lora_routed=1,
+                     lora_hits=1, per_engine={"e1": 4},
+                     engine_failures={"e0": {"crash": 2,
+                                             "quarantine": 1}})
+    m = GatewayStats.merge([a, b])
+    assert m.routed == 8
+    assert m.shed == 3                   # rpm + tpm read off the sums
+    assert m.per_engine == {"e0": 2, "e1": 5}
+    assert m.engine_failures == {"e0": {"crash": 3, "quarantine": 1}}
+    assert m.lora_affinity_hit_rate == pytest.approx(2 / 3)
+
+
+def test_stats_property_merges_live_shards():
+    gw = _gateway(8)
+    sids = [f"conv{i}" for i in range(64)]
+    for sid in sids:
+        gw.route([1, 2, 3], user=sid, session_id=sid)
+    # the merged snapshot equals the per-shard sums, and per-engine
+    # counts re-unify engines routed from different shards
+    assert gw.stats.routed == 64
+    assert sum(sh.stats.routed for sh in gw._shards) == 64
+    assert max(sh.stats.routed for sh in gw._shards) < 64  # really split
+    assert sum(gw.stats.per_engine.values()) == 64
+    # failure accounting lands on the engine's home shard, merges back
+    gw.note_failure("e0", "crash")
+    gw.note_failure("e0", "crash")
+    gw.note_failure("e1", "hedged")
+    assert gw.stats.engine_failures["e0"] == {"crash": 2}
+    assert gw.stats.engine_failures["e1"] == {"hedged": 1}
+    # session counters merge across every shard's policy
+    ss = gw.session_stats()
+    assert ss["session_misses"] == 64
+    assert ss["session_pins"] == 64
+
+
+def test_shed_accounting_merges_and_windows_per_shard():
+    now = [0.0]
+    gw = Gateway(policy="least-request", shards=4,
+                 default_limit=RateLimit(rpm=60.0, tpm=1e15),
+                 clock=lambda: now[0])
+    gw.register_engine("e0", _FakeEngine())
+    before = Gateway.total_shed
+    # burst capacity is rpm/6 = 10: user u0's shard sheds the rest
+    for _ in range(25):
+        gw.route([1], user="u0")
+    assert gw.stats.shed == 15
+    assert Gateway.total_shed - before == 15
+    sh = gw._shard_for("u0")
+    assert sh.stats.rejected_rpm == 15   # all on the home shard
+    assert sh._shed_log_at > float("-inf")   # windowed log armed
+
+
+# ------------------------------------------------------ per-shard bounds
+def test_per_shard_user_bucket_lru_bound():
+    gw = _gateway(4, policy="least-request")
+    gw.max_user_buckets = 32             # per-shard cap = 8
+    for i in range(400):
+        gw.route([1], user=f"u{i}")
+    for sh in gw._shards:
+        assert len(sh._rpm) <= 8
+        assert len(sh._tpm) <= 8
+        assert set(sh._rpm) == set(sh._tpm)   # paired eviction
+
+
+def test_per_shard_session_pin_lru_bound():
+    gw = _gateway(4, policy="session", max_sessions=8)
+    for i in range(400):
+        sid = f"conv{i}"
+        gw.route([1], user=sid, session_id=sid)
+    for sh in gw._shards:
+        assert len(sh.policy._sessions) <= 8
+    assert gw.session_stats()["session_pins"] <= 32
+
+
+# -------------------------------------------------- retag pin purging
+@pytest.mark.parametrize("path", ["set_engine_pool", "reregister"])
+def test_retag_to_non_frontend_purges_pins_every_shard(path):
+    """Satellite regression: an engine retagged into a non-frontend
+    pool (decode/draining) must lose its session pins in EVERY shard —
+    a surviving pin would route the session into a pool that no longer
+    accepts new work until TTL expiry."""
+    gw = _gateway(8)
+    for eid in list(gw.engines):
+        gw.engine_pool[eid] = "mixed"
+    sids = [f"conv{i}" for i in range(64)]
+    for sid in sids:
+        gw.route([1, 2], user=sid, session_id=sid)
+    victims = [sid for sid in sids
+               if gw._shard_for(sid).policy._sessions[sid][0] == "e0"]
+    assert victims                       # some sessions pinned to e0
+    if path == "set_engine_pool":
+        gw.set_engine_pool("e0", "decode")
+    else:
+        gw.register_engine("e0", gw.engines["e0"], pool="decode")
+    for sh in gw._shards:
+        assert not any(ent[0] == "e0"
+                       for ent in sh.policy._sessions.values())
+    # the re-homed turn routes through the fallback to a frontend
+    # engine — never to the decode member
+    for sid in victims:
+        assert gw.route([1, 2], user=sid, session_id=sid) != "e0"
+    assert gw.session_stats()["session_rehomed"] == 0  # purged, not stale
+
+
+# ----------------------------------------------- promotion predictor
+def test_think_ewma_tracks_turn_gaps():
+    now = [0.0]
+    pol = SessionAffinityPolicy()
+    pol.attach_clock(lambda: now[0])
+    engines = {"a": _FakeEngine()}
+    pol.select(engines, [1], session_id="s")
+    assert pol.think_ewma("s") is None   # one turn: no gap yet
+    now[0] = 10.0
+    pol.select(engines, [1], session_id="s")
+    assert pol.think_ewma("s") == pytest.approx(10.0)
+    now[0] = 30.0                        # gap 20: ewma moves 0.4 toward
+    pol.select(engines, [1], session_id="s")
+    assert pol.think_ewma("s") == pytest.approx(
+        0.6 * 10.0 + 0.4 * 20.0)
+
+
+def test_due_promotions_fire_lead_early_and_invalidate_on_touch():
+    now = [0.0]
+    pol = SessionAffinityPolicy(promote_lead_s=4.0)
+    pol.attach_clock(lambda: now[0])
+    engines = {"a": _FakeEngine()}
+    pol.select(engines, [1], session_id="s")
+    now[0] = 10.0
+    pol.select(engines, [1], session_id="s")   # ewma=10 -> fire at 16
+    assert pol.due_promotions(15.9) == []
+    assert pol.due_promotions(16.1) == [("s", "a")]
+    assert pol.due_promotions(16.1) == []      # popped, not repeated
+    # a touch between schedule and fire invalidates the stale entry
+    now[0] = 20.0
+    pol.select(engines, [1], session_id="s")   # re-arms with new stamp
+    now[0] = 21.0
+    pol.select(engines, [1], session_id="s")   # touch again: old stale
+    fired = pol.due_promotions(1e9)
+    assert ("s", "a") in fired and len(fired) == 1
+
+
+def test_promote_heap_bounded_skips_not_grows():
+    now = [0.0]
+    pol = SessionAffinityPolicy(promote_lead_s=1.0)
+    pol.MAX_PROMOTE_HEAP = 4             # instance override for test
+    pol.attach_clock(lambda: now[0])
+    engines = {"a": _FakeEngine()}
+    for i in range(8):
+        sid = f"s{i}"
+        pol.select(engines, [1], session_id=sid)
+        now[0] += 1.0
+        pol.select(engines, [1], session_id=sid)
+        now[0] += 1.0
+    assert len(pol._promote_heap) <= 4
+    assert pol.promote_skipped == 4
+
+
+def test_gateway_due_promotions_merges_shards():
+    now = [0.0]
+    gw = Gateway(policy="session", shards=8, promote_lead_s=100.0,
+                 default_limit=RateLimit(rpm=1e12, tpm=1e15),
+                 clock=lambda: now[0])
+    for i in range(4):
+        gw.register_engine(f"e{i}", _FakeEngine())
+    sids = [f"conv{i}" for i in range(32)]
+    for sid in sids:
+        gw.route([1], user=sid, session_id=sid)
+    now[0] = 5.0
+    for sid in sids:
+        gw.route([1], user=sid, session_id=sid)
+    due = gw.due_promotions(now[0])      # lead 100 >> ewma: all due
+    assert sorted(sid for sid, _ in due) == sorted(sids)
+    assert all(eid in gw.engines for _, eid in due)
+
+
+# ------------------------------------------- observation equivalence
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 15),     # which session
+                          st.integers(0, 3),      # engine whose load drifts
+                          st.integers(0, 5)),     # drift amount
+                min_size=1, max_size=120))
+def test_sharded_routing_observation_equivalent_to_monolithic(ops):
+    """Any interleaving of 16 sessions' turns, with fleet load drifting
+    between requests, routes IDENTICALLY through 1 shard and 16 shards:
+    pins are per-session (never split across shards) and the fallback
+    reads only global fleet state plus the session's own prefix
+    affinity entry.  (Sessions carry their own prompts, as real
+    conversations do — the fallback's epsilon tie-break for a prefix
+    SHARED by sessions on different shards is shard-local state and is
+    the one deliberate non-equivalence, worth <1e-6 of score.)"""
+    engines = [_FakeEngine() for _ in range(4)]
+    gw1 = Gateway(policy="session", shards=1,
+                  default_limit=RateLimit(rpm=1e12, tpm=1e15))
+    gwN = Gateway(policy="session", shards=16,
+                  default_limit=RateLimit(rpm=1e12, tpm=1e15))
+    for gw in (gw1, gwN):
+        for i, e in enumerate(engines):
+            gw.register_engine(f"e{i}", e)
+    for s_idx, drift_e, drift in ops:
+        sid = f"conv{s_idx}"
+        prompt = [1000 + s_idx] * 20
+        d1 = gw1.route(prompt, user=sid, session_id=sid)
+        dn = gwN.route(prompt, user=sid, session_id=sid)
+        assert d1 == dn
+        engines[drift_e].queue_depth += drift
+    assert gw1.stats.routed == gwN.stats.routed == len(ops)
+    s1, sN = gw1.session_stats(), gwN.session_stats()
+    assert s1 == sN                      # hits/misses/pins all agree

@@ -11,7 +11,7 @@ import numpy as np
 from repro.configs import get_config, get_reduced_config
 from repro.core.gateway.gateway import Gateway, RateLimit
 from repro.core.gateway.router import SessionAffinityPolicy
-from repro.core.kvcache.tiers import SSDPagePool
+from repro.core.kvcache.tiers import SSDPagePool, SharedSSDPool
 from repro.core.sim import ClusterConfig, ServingCluster, SimEngineConfig
 from repro.core.sim.workloads import (StreamingDist, StreamingSummary,
                                       multi_round_qa, percentile,
@@ -252,6 +252,71 @@ def test_multi_round_qa_trace_properties():
     assert stats["peak_open_sessions"] > 0
 
 
+# ------------------------------------------------ shared SSD pool unit
+def test_shared_ssd_pool_dedup_origin_and_cross_hits():
+    """Two engines over ONE host pool: the second engine's put of a
+    page the first already wrote is absorbed (dedup), and its get of
+    the first engine's page classifies as a cross-engine hit."""
+    pool = SharedSSDPool(capacity_bytes=1024, ssd_bw=1e9,
+                         write_buffer_bytes=1024)
+    a, b = pool.view("engine-a"), pool.view("engine-b")
+    assert pool.view("engine-a") is a            # views are cached
+    assert a.put("page0", "p0", 64, now=0.0)
+    assert pool._origin["page0"] == "engine-a"
+    # duplicate write from the sibling: no second copy, counted dedup
+    assert b.put("page0", "p0", 64, now=0.0)
+    assert pool.stats.puts == 1
+    assert pool.dedup_puts == 1 and pool.dedup_bytes == 64
+    assert b.stats.dup_puts == 1
+    assert pool.dedupe_ratio == 0.5
+    # same-engine re-put is a plain dup, NOT cross-engine dedupe
+    assert a.put("page0", "p0", 64, now=0.0)
+    assert pool.dedup_puts == 1
+    # cross classification: b reads a's page, a reads its own
+    assert b.get("page0", now=0.1) == "p0"
+    assert b.cross_hits == 1 and b.last_get_cross
+    assert a.get("page0", now=0.1) == "p0"
+    assert a.cross_hits == 0 and not a.last_get_cross
+    # per-view traffic stats stay separate, pool-global bytes shared
+    assert a.stats.hits == 1 and b.stats.hits == 1
+    assert pool.stats.hits == 2
+    # eviction cleans the origin map (no leak across a long run)
+    pool.drain()
+    for i in range(1, 20):
+        a.put(f"fill{i}", f"f{i}", 64, now=1.0 + i)
+    pool.drain()
+    assert len(pool._origin) == len(pool)
+
+
+# ----------------------------------------------- sim promotion smoke
+def test_sim_cluster_predictive_promotion_hits():
+    """Cluster-sim promotion path end to end: the session policy's
+    EWMA schedules prefetches, the promoter poll drives them at
+    modelled SSD cost, and resumed turns hit the promoted host pages."""
+    cl = ServingCluster(
+        get_config("deepseek-coder-7b"),
+        ClusterConfig(routing_policy="session", num_engines=2,
+                      engine=SimEngineConfig(device_type="a10",
+                                             max_batch=48,
+                                             chunk_size=512,
+                                             mixed_batching=True,
+                                             num_pages=128,
+                                             host_cache_gb=1.0,
+                                             ssd_cache_gb=16.0),
+                      retain_requests=False,
+                      promote_lead_s=4.0,
+                      promote_poll_period_s=0.5))
+    wl = multi_round_qa(40, 1.5, seed=11, rounds_max=5,
+                        think_time_s=15.0, sys_prompt=600,
+                        turn_tokens=100, output_tokens=48,
+                        think_sigma=0.25)
+    s = cl.run(wl, drain_s=240.0)
+    assert s["promotions"] > 0
+    assert s["promote_hits"] > 0
+    # promoted pages count as HOST hits (that is the whole point)
+    assert s["host_hit_tokens"] > 0
+
+
 # --------------------------------------------- real-JAX SSD tier pins
 def _ssd_engine(host_pages, **kw):
     cfg = get_reduced_config("qwen3-0.6b")
@@ -343,3 +408,143 @@ def test_ssd_tier_serves_evicted_prefix_real_engine():
     assert again.output_tokens == first.output_tokens
     assert again.output_tokens == _greedy_reference(cfg, shared, 4,
                                                     num_pages=24)
+
+
+# ------------------------------------- real-JAX host-shared SSD pool
+def test_shared_ssd_pool_cross_engine_prefix_real_engine(tmp_path):
+    """Two real engines attached to ONE host-level SSD pool: a prefix
+    engine A computed and cascade-evicted is served to engine B — which
+    never saw it — from the shared pool, byte-identically to A's run.
+    Page keys are content-addressed (engine-independent), so the only
+    new trust boundary is the pool itself."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    probe = InferenceEngine(cfg, EngineConfig(**ENGINE_KW), seed=0)
+    page_bytes = probe.runner.page_bytes
+    pool = SharedSSDPool(capacity_bytes=1 << 27,
+                         directory=str(tmp_path))
+    ekw = dict(ENGINE_KW, num_pages=24,
+               host_cache_gb=2 * page_bytes / (1 << 30),
+               ssd_cache_gb=0.1)
+    eng_a = InferenceEngine(cfg, EngineConfig(**ekw), seed=0,
+                            engine_id="engine-a", ssd_pool=pool)
+    eng_b = InferenceEngine(cfg, EngineConfig(**ekw), seed=0,
+                            engine_id="engine-b", ssd_pool=pool)
+    assert eng_a.ssd_pool.pool is eng_b.ssd_pool.pool
+    rng = np.random.default_rng(53)
+    shared = rng.integers(0, cfg.vocab_size, 24).tolist()
+    first = Request(prompt_tokens=list(shared),
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng_a.submit(first)
+    eng_a.run_until_idle()
+    # cascade A's copy of the prefix out of device + host into the pool
+    for i in range(4):
+        filler = Request(
+            prompt_tokens=rng.integers(0, cfg.vocab_size, 120).tolist(),
+            sampling=SamplingParams(max_new_tokens=2))
+        eng_a.submit(filler)
+        eng_a.run_until_idle()
+    pool.drain()
+    assert pool.stats.puts > 0
+    # engine B re-offers the prefix COLD: its only source is the pool
+    again = Request(prompt_tokens=list(shared),
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng_b.submit(again)
+    eng_b.run_until_idle()
+    m = eng_b.metrics()
+    assert m.ssd_hit_tokens >= eng_b.ecfg.page_size
+    assert m.ssd_cross_hit_tokens >= eng_b.ecfg.page_size
+    assert eng_b.ssd_pool.cross_hits > 0
+    assert again.output_tokens == first.output_tokens
+    assert again.output_tokens == _greedy_reference(cfg, shared, 4,
+                                                    num_pages=24)
+
+
+def test_swap_resume_through_shared_pool_byte_identical(tmp_path):
+    """Swap-resume with the host-level SHARED pool as the third tier:
+    a preempted request whose swap pages cascaded into the shared pool
+    resumes byte-identically — swap keys are engine-private
+    (``swap/<rid>/<i>``), so sharing the pool must not change the
+    path's outputs."""
+    cfg = get_reduced_config("qwen3-0.6b")
+    probe = InferenceEngine(cfg, EngineConfig(**ENGINE_KW), seed=0)
+    page_bytes = probe.runner.page_bytes
+    pool = SharedSSDPool(capacity_bytes=1 << 27,
+                         directory=str(tmp_path))
+    ekw = dict(ENGINE_KW, host_cache_gb=6 * page_bytes / (1 << 30),
+               ssd_cache_gb=0.1)
+    eng = InferenceEngine(cfg, EngineConfig(**ekw), seed=0,
+                          engine_id="engine-a", ssd_pool=pool)
+    rng = np.random.default_rng(55)
+    prompt = rng.integers(0, cfg.vocab_size, 20).tolist()
+    req = Request(prompt_tokens=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=8))
+    eng.submit(req)
+    for _ in range(200):
+        if len(req.output_tokens) >= 3:
+            break
+        eng.step()
+    generated = list(req.output_tokens)
+    eng.sched.preempt(req, eng.clock())
+    assert req.state is RequestState.SWAPPED
+    swap_keys = [k for k in eng.host_pool.keys()
+                 if str(k).startswith("swap/")]
+    assert swap_keys
+    for i in range(12):
+        eng.host_pool.put(f"fill{i}", ("fill", i), page_bytes,
+                          eng.clock())
+    assert all(k not in eng.host_pool.keys() for k in swap_keys)
+    pool.drain()
+    assert any(pool.contains(k) for k in swap_keys)
+    eng.run_until_idle()
+    assert req.state is RequestState.FINISHED
+    assert req.output_tokens[:len(generated)] == generated
+    assert req.output_tokens == _greedy_reference(cfg, prompt, 8)
+    m = eng.metrics()
+    assert m.ssd_hit_tokens > 0
+    assert m.ssd_cross_hit_tokens == 0   # own swap pages: never cross
+
+
+# --------------------------------------- real-JAX promoted-page resume
+def test_promoted_page_resume_byte_identical_real_engine():
+    """Predictive promotion on the real engine: a finished session's
+    pages cascade to SSD; ``promote_session`` prefetches them back into
+    host DRAM on the background promoter thread; the session's next
+    turn hits HOST (counted ``promote_hits``) and decodes
+    byte-identically to a cold recompute."""
+    cfg, eng, page_bytes = _ssd_engine(host_pages=8, num_pages=24)
+    rng = np.random.default_rng(54)
+    shared = rng.integers(0, cfg.vocab_size, 24).tolist()
+    first = Request(prompt_tokens=list(shared), session_id="conv0",
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(first)
+    eng.run_until_idle()
+    # pressure both upper tiers until the session's pages are SSD-only
+    for i in range(6):
+        filler = Request(
+            prompt_tokens=rng.integers(0, cfg.vocab_size, 120).tolist(),
+            sampling=SamplingParams(max_new_tokens=2))
+        eng.submit(filler)
+        eng.run_until_idle()
+    eng.ssd_pool.drain()
+    promotable = eng.sched.session_promotable("conv0")
+    assert len(promotable) == 3          # 24-token prompt = 3 full pages
+    # background prefetch, landed at the next step boundary
+    assert eng.promote_session("conv0") == 3
+    eng.drain_promotions()
+    assert all(eng.host_pool.contains(k) for k in promotable)
+    again = Request(prompt_tokens=list(shared), session_id="conv0",
+                    sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(again)
+    eng.run_until_idle()
+    m = eng.metrics()
+    # the admission walk reuses at most len(prompt)-1 tokens (the last
+    # position must be computed for logits), so 2 of the 3 promoted
+    # pages hit; the third stays host-resident, NOT wasted
+    assert m.promote_hits >= 2
+    assert m.host_hit_tokens >= 2 * eng.ecfg.page_size
+    assert m.ssd_hit_tokens == 0         # nothing read on-demand
+    assert again.output_tokens == first.output_tokens
+    assert again.output_tokens == _greedy_reference(cfg, shared, 4,
+                                                    num_pages=24)
+    # nothing promoted went unused on this path
+    assert m.promote_wasted == 0
